@@ -1,0 +1,34 @@
+"""Paper Figs. 5/6: TPOT + TPS across ablations on three workload shapes.
+
+Configs: zipage (all features), -async, -hybrid (constrained), -prefix,
+nano-vllm (no compression). CPU-neutral headline: device steps and
+tokens/step (see EXPERIMENTS.md §CPU-metrics note); wall TPS/TPOT included.
+"""
+import numpy as np
+
+from benchmarks.common import run_engine, workload
+
+CONFIGS = {
+    "zipage": {},
+    "no_async": {"async_compression": False},
+    "constrained": {"scheduling": "constrained"},
+    "no_prefix": {"prefix_caching": False},
+    "nano_vllm": {"n_max": None},
+}
+
+
+def run():
+    rows = []
+    rng = np.random.default_rng(0)
+    for wl in ("amc", "gsm", "mix"):
+        reqs = workload(wl, 24, rng)
+        for name, ov in CONFIGS.items():
+            r = run_engine(reqs, **ov)
+            us = 1e6 * r["wall_s"] / max(r["steps"], 1)
+            rows.append((f"ablation/{wl}/{name}", us,
+                         f"steps={r['steps']};tok_per_step="
+                         f"{r['tokens_per_step']:.2f};tps={r['tps']:.1f};"
+                         f"tpot_ms={r['tpot_ms']:.1f};"
+                         f"conc={r['mean_concurrency']:.1f};"
+                         f"block_util={r['block_util']:.2f}"))
+    return rows

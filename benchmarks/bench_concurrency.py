@@ -1,0 +1,23 @@
+"""Paper Fig. 7 / App. E: real-time throughput, per-step time and the
+concurrency distribution, Zipage vs nano-vLLM, on the AMC-like workload."""
+import numpy as np
+
+from benchmarks.common import run_engine, workload
+
+
+def run():
+    rows = []
+    rng = np.random.default_rng(1)
+    reqs = workload("amc", 24, rng)
+    for name, ov in (("zipage", {}), ("nano_vllm", {"n_max": None})):
+        r = run_engine(reqs, **ov)
+        conc = np.array([m["n_running"] for m in r["engine"].metrics])
+        steps_hi = float((conc >= 12).mean())      # fraction in high band
+        t_steps = np.array([m["t_total"] for m in r["engine"].metrics])
+        rows.append((f"concurrency/{name}",
+                     1e6 * float(t_steps.mean()),
+                     f"steps={r['steps']};frac_steps_conc_ge12="
+                     f"{steps_hi:.2f};p50_conc={np.median(conc):.0f};"
+                     f"max_conc={conc.max()};"
+                     f"tok_per_step={r['tokens_per_step']:.2f}"))
+    return rows

@@ -1,0 +1,53 @@
+"""Per-kernel micro-bench: Pallas (interpret=True on CPU — correctness-path
+cost, NOT TPU perf) vs the jnp reference, plus shapes that matter for the
+paper (b=64-style pages scaled down for CPU)."""
+import time
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.kernels import ops
+
+RNG = np.random.default_rng(8)
+
+
+def timed(fn, *args, iters=3, **kw):
+    out = fn(*args, **kw)
+    jax.block_until_ready(out)
+    t0 = time.perf_counter()
+    for _ in range(iters):
+        jax.block_until_ready(fn(*args, **kw))
+    return (time.perf_counter() - t0) / iters * 1e6
+
+
+def run():
+    rows = []
+    B, hq, hkv, d, N, b, mb = 4, 8, 2, 32, 32, 8, 8
+    q = jnp.asarray(RNG.normal(size=(B, hq, d)), jnp.float32)
+    kp = jnp.asarray(RNG.normal(size=(N, b, hkv, d)), jnp.float32)
+    vp = jnp.asarray(RNG.normal(size=(N, b, hkv, d)), jnp.float32)
+    bt = jnp.asarray(np.stack([RNG.choice(N, mb, replace=False)
+                               for _ in range(B)]).astype(np.int32))
+    sl = jnp.full((B,), mb * b, jnp.int32)
+    for backend in ("jnp", "pallas"):
+        us = timed(ops.paged_decode_attention, q, kp, vp, bt, sl,
+                   backend=backend)
+        rows.append((f"kernels/paged_attention/{backend}", us, ""))
+    qw = jnp.asarray(RNG.normal(size=(B, 4, hq, d)), jnp.float32)
+    for backend in ("jnp", "pallas"):
+        us = timed(ops.score_logits, qw, kp, bt, sl, backend=backend)
+        rows.append((f"kernels/paged_score/{backend}", us, ""))
+    for backend in ("jnp", "pallas"):
+        us = timed(ops.lightning_redundancy, kp, bt, sl, backend=backend)
+        rows.append((f"kernels/lightning_redundancy/{backend}", us, ""))
+    for backend in ("jnp", "pallas"):
+        us = timed(ops.flash_redundancy, kp, bt, sl, backend=backend)
+        rows.append((f"kernels/flash_redundancy/{backend}", us, ""))
+    pool = jnp.asarray(RNG.normal(size=(N * b, hkv, d)), jnp.float32)
+    src = jnp.asarray(np.stack([np.sort(RNG.choice(N * b, 48, replace=False))
+                                for _ in range(hkv)]).astype(np.int32))
+    for backend in ("jnp", "pallas"):
+        us = timed(ops.compact_gather, pool, src, backend=backend)
+        rows.append((f"kernels/compact_gather/{backend}", us, ""))
+    return rows

@@ -1,0 +1,55 @@
+"""Paper Fig. 10 / App. C.1: cross-layer parallel compression.
+
+Layer stride l = how many layers one compression call covers. Larger l
+amortizes dispatch and exposes cross-layer parallelism; peak activation
+scales O(n·l·h·N·b·w). We time compressing L=8 layers with l ∈ {1,2,4,8}.
+"""
+import time
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from benchmarks.common import CFG
+from repro.core.compression import CompressOptions, build_compress_fn
+
+RNG = np.random.default_rng(6)
+
+
+def run():
+    rows = []
+    L, b, mb, n, w, N_total = 8, 8, 8, 4, 4, 64
+    h, d, hq = CFG.num_kv_heads, CFG.head_dim, CFG.num_heads
+    pools = {
+        "k": jnp.asarray(RNG.normal(size=(L, N_total, b, h, d)), jnp.float32),
+        "v": jnp.asarray(RNG.normal(size=(L, N_total, b, h, d)), jnp.float32),
+        "f": jnp.zeros((L, N_total, b, h), jnp.float32),
+    }
+    qwin = jnp.asarray(RNG.normal(size=(L, n, w, hq, d)), jnp.float32)
+    src = np.stack([RNG.choice(N_total, mb, replace=False)
+                    for _ in range(n)]).astype(np.int32)
+    req = (jnp.asarray(src), jnp.asarray(src[:, :mb - 1]),
+           jnp.arange(n, dtype=jnp.int32),
+           jnp.full((n,), mb * b, jnp.int32), jnp.zeros((n,), jnp.int32))
+    opts = CompressOptions(window=w, redundancy="lightning", pooling="none")
+
+    for stride in (1, 2, 4, 8):
+        fn = jax.jit(build_compress_fn(CFG, block_size=b, max_blocks=mb,
+                                       budget_blocks=mb - 1, opts=opts))
+
+        def compress_strided():
+            outs = []
+            for g in range(0, L, stride):
+                sub_pools = {k: v[g:g + stride] for k, v in pools.items()}
+                outs.append(fn(sub_pools, qwin[g:g + stride], req))
+            return outs
+
+        out = compress_strided()
+        jax.block_until_ready(out)
+        t0 = time.perf_counter()
+        for _ in range(3):
+            jax.block_until_ready(compress_strided())
+        us = (time.perf_counter() - t0) / 3 * 1e6
+        rows.append((f"layer_stride/{stride}", us,
+                     f"calls={L // stride}"))
+    return rows

@@ -1,0 +1,46 @@
+"""Paper Tab. 2 / App. C.8: scoring-function ablations via the quality proxy
+(top-1 agreement with full-KV greedy decode on the same trained tiny model;
+DESIGN.md §7 explains why pass@1 is not reproducible offline)."""
+import numpy as np
+
+from benchmarks.common import params_trained, run_engine, workload
+from repro.core.compression import CompressOptions
+
+VARIANTS = {
+    "attn_only": CompressOptions(window=4, use_global=False,
+                                 redundancy="none", pooling="none"),
+    "global_a0.8": CompressOptions(window=4, alpha=0.8, redundancy="none",
+                                   pooling="none"),
+    "global+lightning": CompressOptions(window=4, alpha=0.8,
+                                        redundancy="lightning", lam=0.2,
+                                        tau=0.4, pooling="none"),
+    "paper_c8": CompressOptions(window=4, alpha=0.8, redundancy="lightning",
+                                lam=0.2, tau=0.4, pooling="first"),
+    "pool_always": CompressOptions(window=4, alpha=0.8,
+                                   redundancy="lightning", lam=0.2, tau=0.4,
+                                   pooling="always"),
+}
+
+
+def agreement(a, b):
+    n = min(len(a), len(b))
+    return float(np.mean([a[i] == b[i] for i in range(n)])) if n else 0.0
+
+
+def run():
+    rows = []
+    rng = np.random.default_rng(4)
+    params = params_trained()
+    reqs = workload("amc", 10, rng)
+    full = run_engine(reqs, params=params, n_max=None)
+    ref = {r: full["done"][r].output for r in full["rids"]}
+    for name, opts in VARIANTS.items():
+        r = run_engine(reqs, params=params, n_max=3, window=4,
+                       compress=opts)
+        agr = float(np.mean([agreement(r["done"][a].output, ref[b])
+                             for a, b in zip(r["rids"], full["rids"])]))
+        rows.append((f"quality/{name}",
+                     1e6 * r["wall_s"] / max(r["steps"], 1),
+                     f"top1_agreement={agr:.3f};"
+                     f"compressions={r['compressions']}"))
+    return rows

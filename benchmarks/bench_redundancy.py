@@ -1,0 +1,79 @@
+"""Paper Figs. 13/14/16 + App. C.7: redundancy-score cost.
+
+(a) per-call cost of the compression pipeline with flash vs lightning vs no
+    redundancy (jnp backend — the deployable CPU path);
+(b) scaling in N (blocks): flash is O(N²·b²), lightning O(N·b²) — the
+    measured growth ratios expose the complexity class.
+"""
+import time
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from benchmarks.common import CFG
+from repro.core.compression import CompressOptions, build_compress_fn
+
+RNG = np.random.default_rng(5)
+
+
+def _setup(L, N_total, b, mb, n, w=4):
+    h, d, hq = CFG.num_kv_heads, CFG.head_dim, CFG.num_heads
+    pools = {
+        "k": jnp.asarray(RNG.normal(size=(L, N_total, b, h, d)), jnp.float32),
+        "v": jnp.asarray(RNG.normal(size=(L, N_total, b, h, d)), jnp.float32),
+        "f": jnp.zeros((L, N_total, b, h), jnp.float32),
+    }
+    qwin = jnp.asarray(RNG.normal(size=(L, n, w, hq, d)), jnp.float32)
+    src = np.stack([RNG.choice(N_total, mb, replace=False)
+                    for _ in range(n)]).astype(np.int32)
+    req = (jnp.asarray(src), jnp.asarray(src[:, :mb - 1]),
+           jnp.arange(n, dtype=jnp.int32),
+           jnp.full((n,), mb * b, jnp.int32),
+           jnp.zeros((n,), jnp.int32))
+    return pools, qwin, req
+
+
+def timed(fn, *args, iters=5):
+    out = fn(*args)
+    jax.block_until_ready(out)
+    t0 = time.perf_counter()
+    for _ in range(iters):
+        out = fn(*args)
+        jax.block_until_ready(out)
+    return (time.perf_counter() - t0) / iters * 1e6
+
+
+def run():
+    rows = []
+    L, b, n, w = 2, 8, 4, 4
+    # (a) per-variant cost at fixed size
+    mb, N_total = 8, 64
+    pools, qwin, req = _setup(L, N_total, b, mb, n, w)
+    base_us = {}
+    for red in ("none", "lightning", "flash"):
+        opts = CompressOptions(window=w, redundancy=red, pooling="none")
+        fn = jax.jit(build_compress_fn(CFG, block_size=b, max_blocks=mb,
+                                       budget_blocks=mb - 1, opts=opts))
+        us = timed(fn, pools, qwin, req)
+        base_us[red] = us
+        rows.append((f"redundancy/variant/{red}", us,
+                     f"overhead_vs_none="
+                     f"{us / max(base_us.get('none', us), 1e-9):.2f}x"))
+    # (b) scaling in N
+    for red in ("lightning", "flash"):
+        times = []
+        for mb_s in (4, 8, 16):
+            pools_s, qwin_s, req_s = _setup(L, 96, b, mb_s, n, w)
+            opts = CompressOptions(window=w, redundancy=red, pooling="none")
+            fn = jax.jit(build_compress_fn(
+                CFG, block_size=b, max_blocks=mb_s,
+                budget_blocks=mb_s - 1, opts=opts))
+            times.append(timed(fn, pools_s, qwin_s, req_s, iters=3))
+        g1 = times[1] / times[0]
+        g2 = times[2] / times[1]
+        rows.append((f"redundancy/scaling/{red}", times[-1],
+                     f"us_N4={times[0]:.0f};us_N8={times[1]:.0f};"
+                     f"us_N16={times[2]:.0f};growth_4to8={g1:.2f};"
+                     f"growth_8to16={g2:.2f}"))
+    return rows

@@ -1,0 +1,98 @@
+"""Shared benchmark fixtures: tiny model (random + briefly trained),
+workload generators, engine runner."""
+import dataclasses
+import os
+import time
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.configs import get_config
+from repro.core.compression import CompressOptions
+from repro.core.engine import EngineOptions, ZipageEngine
+from repro.models import lm
+from repro.training import optimizer as opt
+from repro.training.data import DataConfig, batch_at
+from repro.training.train_loop import build_train_step
+
+CFG = dataclasses.replace(get_config("tiny-lm"), dtype="float32")
+_params_cache = {}
+
+
+def params_random():
+    if "rand" not in _params_cache:
+        _params_cache["rand"] = lm.init(CFG, jax.random.key(0))
+    return _params_cache["rand"]
+
+
+def params_trained(steps=150):
+    """Tiny model trained briefly on the synthetic copy task so attention
+    is non-degenerate (needed for eviction-quality proxies)."""
+    key = f"trained{steps}"
+    if key not in _params_cache:
+        dc = DataConfig(seq_len=48, global_batch=16,
+                        vocab_size=CFG.vocab_size, kind="copy")
+        adamw = opt.AdamWConfig(lr=3e-3, warmup_steps=10, total_steps=steps)
+        step = jax.jit(build_train_step(CFG, adamw, vocab_chunk=64))
+        params = lm.init(CFG, jax.random.key(0))
+        state = opt.init_opt_state(params)
+        for i in range(steps):
+            batch = jax.tree.map(jnp.asarray, batch_at(dc, i))
+            params, state, _, m = step(params, state, None, batch)
+        _params_cache[key] = params
+    return _params_cache[key]
+
+
+def workload(kind, n, rng):
+    reqs = []
+    for i in range(n):
+        if kind == "amc":           # short in, long out
+            p, o = int(rng.integers(8, 24)), int(rng.integers(60, 100))
+        elif kind == "gsm":         # short in, short out
+            p, o = int(rng.integers(8, 24)), int(rng.integers(8, 20))
+        elif kind == "long":        # long in, short out
+            p, o = int(rng.integers(80, 140)), int(rng.integers(8, 20))
+        else:                       # mix
+            if i % 2:
+                p, o = int(rng.integers(8, 24)), int(rng.integers(60, 100))
+            else:
+                p, o = int(rng.integers(8, 24)), int(rng.integers(8, 20))
+        reqs.append((rng.integers(0, CFG.vocab_size, size=p).tolist(), o))
+    return reqs
+
+
+DEFAULT_ENGINE = dict(
+    block_size=8, n_total_blocks=72, max_batch=32, m_qslots=16, n_max=4,
+    window=4, compress=CompressOptions(window=4), scheduling="hybrid",
+    prefix_caching=True, async_compression=True, max_model_len=512,
+    prefill_rows=4, prefill_len=64, temperature=0.0)
+
+
+def run_engine(reqs, params=None, **overrides):
+    kw = dict(DEFAULT_ENGINE)
+    kw.update(overrides)
+    eng = ZipageEngine(CFG, params or params_random(), EngineOptions(**kw))
+    rids = [eng.submit(p, o) for p, o in reqs]
+    t0 = time.monotonic()
+    done = eng.run(max_steps=20_000)
+    dt = time.monotonic() - t0
+    toks = sum(len(done[r].output) for r in rids)
+    tpots = []
+    for r in rids:
+        rq = done[r]
+        if rq.t_finish and rq.t_first_token and len(rq.output) > 1:
+            tpots.append((rq.t_finish - rq.t_first_token)
+                         / (len(rq.output) - 1))
+    return {
+        "engine": eng, "done": done, "rids": rids,
+        "wall_s": dt, "tokens": toks, "steps": eng.step_count,
+        "tps": toks / dt,
+        "tokens_per_step": toks / max(eng.step_count, 1),
+        "tpot_ms": 1e3 * float(np.mean(tpots)) if tpots else float("nan"),
+        "mean_concurrency": float(np.mean([m["n_running"]
+                                           for m in eng.metrics])),
+        "compressions": sum(m["n_compressing"] for m in eng.metrics),
+        "block_util": float(np.mean([m["block_util"]
+                                     for m in eng.metrics])),
+    }

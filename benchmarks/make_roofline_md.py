@@ -1,0 +1,89 @@
+"""Render results/dryrun/*.json into the EXPERIMENTS.md roofline tables.
+
+  PYTHONPATH=src python -m benchmarks.make_roofline_md > results/roofline.md
+"""
+import glob
+import json
+import os
+
+RESULTS = os.path.join(os.path.dirname(__file__), "..", "results", "dryrun")
+
+
+def fmt(x, pct=False):
+    if x is None:
+        return "-"
+    return f"{x:.4g}"
+
+
+def main():
+    recs = {}
+    skips = []
+    for f in sorted(glob.glob(os.path.join(RESULTS, "*.json"))):
+        j = json.load(open(f))
+        key = (j["arch"], j["shape"], j["mesh"], j.get("variant", "baseline"))
+        recs[key] = j
+        if j["status"] == "skipped" and j["variant"] == "baseline":
+            skips.append((j["arch"], j["shape"], j["mesh"], j["reason"]))
+
+    print("### Roofline table — baseline, single-pod 16x16 (256 chips)\n")
+    print("| arch | shape | t_compute (s) | t_memory (s) | t_collective (s)"
+          " | bottleneck | roofline frac | MODEL/HLO flops |")
+    print("|---|---|---|---|---|---|---|---|")
+    for (arch, shape, mesh, var), j in sorted(recs.items()):
+        if mesh != "pod1" or var != "baseline" or j["status"] != "ok":
+            continue
+        r = j["roofline"]
+        dom = r["bottleneck"]
+        tdom = r[f"t_{dom}_s"]
+        frac = r["t_compute_s"] / tdom if tdom else 0
+        uf = j.get("useful_flops_ratio")
+        print(f"| {arch} | {shape} | {fmt(r['t_compute_s'])} | "
+              f"{fmt(r['t_memory_s'])} | {fmt(r['t_collective_s'])} | "
+              f"{dom} | {frac:.3f} | "
+              f"{'%.3f' % uf if uf else '-'} |")
+
+    print("\n### Zipage vs full-KV decode (single-pod; paper's technique)\n")
+    print("| arch | full-KV t_mem (s) | zipage t_mem (s) | mem-term speedup"
+          " | compress step t_mem (s) |")
+    print("|---|---|---|---|---|")
+    for (arch, shape, mesh, var), j in sorted(recs.items()):
+        if shape != "decode_32k" or mesh != "pod1" or var != "baseline":
+            continue
+        if j["status"] != "ok":
+            continue
+        z = recs.get((arch, shape, mesh, "zipage"))
+        c = recs.get((arch, shape, mesh, "compress"))
+        if not z or z["status"] != "ok":
+            continue
+        t0 = j["roofline"]["t_memory_s"]
+        t1 = z["roofline"]["t_memory_s"]
+        tc = c["roofline"]["t_memory_s"] if c and c["status"] == "ok" else None
+        print(f"| {arch} | {fmt(t0)} | {fmt(t1)} | {t0 / t1:.2f}x | "
+              f"{fmt(tc)} |")
+
+    print("\n### Multi-pod (2x16x16 = 512 chips) — baseline deltas\n")
+    print("| arch | shape | pod1 dominant (s) | pod2 dominant (s) |"
+          " pod2/pod1 |")
+    print("|---|---|---|---|---|")
+    for (arch, shape, mesh, var), j in sorted(recs.items()):
+        if mesh != "pod1" or var != "baseline" or j["status"] != "ok":
+            continue
+        j2 = recs.get((arch, shape, "pod2", "baseline"))
+        if not j2 or j2["status"] != "ok":
+            continue
+        d1 = j["roofline"][f"t_{j['roofline']['bottleneck']}_s"]
+        d2 = j2["roofline"][f"t_{j2['roofline']['bottleneck']}_s"]
+        print(f"| {arch} | {shape} | {fmt(d1)} | {fmt(d2)} | "
+              f"{d2 / d1:.2f} |")
+
+    print("\n### Skipped cells (per assignment rules)\n")
+    seen = set()
+    for arch, shape, mesh, reason in skips:
+        if (arch, shape) in seen:
+            continue
+        seen.add((arch, shape))
+        print(f"* `{arch}` × `{shape}`: {reason}")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,48 @@
+"""§Roofline report generator: reads results/dryrun/*.json into the
+per-(arch × shape × mesh × variant) table with the three roofline terms,
+bottleneck, and MODEL_FLOPS/HLO ratio."""
+import glob
+import json
+import os
+
+RESULTS = os.environ.get("DRYRUN_DIR",
+                         os.path.join(os.path.dirname(__file__), "..",
+                                      "results", "dryrun"))
+
+
+def load_records():
+    recs = []
+    for f in sorted(glob.glob(os.path.join(RESULTS, "*.json"))):
+        try:
+            recs.append(json.load(open(f)))
+        except Exception:
+            pass
+    return recs
+
+
+def run():
+    rows = []
+    n_ok = n_skip = n_err = 0
+    for r in load_records():
+        name = (f"roofline/{r['arch']}/{r['shape']}/{r['mesh']}/"
+                f"{r.get('variant', 'baseline')}")
+        if r["status"] == "skipped":
+            n_skip += 1
+            continue
+        if r["status"] != "ok":
+            n_err += 1
+            rows.append((name, 0.0, "status=ERROR"))
+            continue
+        n_ok += 1
+        rf = r["roofline"]
+        dom = rf["bottleneck"]
+        t_dom = rf[f"t_{dom}_s"]
+        derived = (f"bottleneck={dom};t_compute_s={rf['t_compute_s']:.4g};"
+                   f"t_memory_s={rf['t_memory_s']:.4g};"
+                   f"t_collective_s={rf['t_collective_s']:.4g}")
+        if "useful_flops_ratio" in r:
+            derived += f";useful_flops={r['useful_flops_ratio']:.3f}"
+        rows.append((name, 1e6 * t_dom, derived))
+    rows.append(("roofline/summary", 0.0,
+                 f"ok={n_ok};skipped={n_skip};errors={n_err}"))
+    return rows

@@ -1,0 +1,44 @@
+# One function per paper table. Print ``name,us_per_call,derived`` CSV.
+"""Benchmark harness — one module per paper table/figure:
+
+  bench_ablation      Fig. 5/6   TPOT/TPS ablations x 3 workloads
+  bench_concurrency   Fig. 7     throughput / step time / concurrency bands
+  bench_frameworks    Fig. 8     static-batch vs nano-vllm vs zipage
+  bench_budgets       Fig. 9     KV-budget sweep + quality proxy
+  bench_layer_stride  Fig. 10    cross-layer compression stride
+  bench_redundancy    Fig. 13/16 lightning vs flash redundancy + scaling
+  bench_quality_proxy Tab. 2/C.8 scoring-function ablations
+  bench_kernels       (impl)     per-kernel us, pallas-interpret vs jnp
+  roofline            Roofline   dry-run roofline table
+
+  PYTHONPATH=src python -m benchmarks.run [module ...]
+"""
+import sys
+import time
+import traceback
+
+MODULES = [
+    "bench_ablation", "bench_concurrency", "bench_frameworks",
+    "bench_budgets", "bench_layer_stride", "bench_redundancy",
+    "bench_quality_proxy", "bench_kernels", "roofline",
+]
+
+
+def main() -> None:
+    want = sys.argv[1:] or MODULES
+    print("name,us_per_call,derived")
+    for mod in want:
+        t0 = time.time()
+        try:
+            m = __import__(f"benchmarks.{mod}", fromlist=["run"])
+            for name, us, derived in m.run():
+                print(f"{name},{us:.1f},{derived}", flush=True)
+        except Exception:
+            print(f"{mod}/ERROR,0,{traceback.format_exc().splitlines()[-1]}",
+                  flush=True)
+        print(f"# {mod} took {time.time() - t0:.1f}s", file=sys.stderr,
+              flush=True)
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,43 @@
+"""Shared-prefix serving (paper §4.4): many requests share a long system
+prompt; prefix caching skips re-prefilling it, and compression redirects into
+target blocks so sharing survives.
+
+  PYTHONPATH=src python examples/prefix_sharing.py
+"""
+import dataclasses
+
+import jax
+import numpy as np
+
+from repro.configs import get_config
+from repro.core.compression import CompressOptions
+from repro.core.engine import EngineOptions, ZipageEngine
+from repro.models import lm
+
+cfg = dataclasses.replace(get_config("tiny-lm"), dtype="float32")
+params = lm.init(cfg, jax.random.key(0))
+
+SYSTEM_PROMPT = list(range(1, 33))          # 8 full blocks of 4
+
+
+def run(prefix_caching):
+    eng = ZipageEngine(cfg, params, EngineOptions(
+        block_size=4, n_total_blocks=128, max_batch=8, m_qslots=8,
+        n_max=4, window=2, compress=CompressOptions(window=2),
+        prefix_caching=prefix_caching, max_model_len=256,
+        prefill_rows=4, prefill_len=64, temperature=0.0))
+    rids = [eng.submit(SYSTEM_PROMPT + [100 + i], 30) for i in range(8)]
+    done = eng.run(max_steps=2000)
+    cached = [done[r].n_cached for r in rids]
+    eng.bm.check_invariants()
+    assert eng.bm.num_free == 128
+    return eng.step_count, cached
+
+
+steps_pc, cached_pc = run(True)
+steps_no, cached_no = run(False)
+print(f"with prefix cache:    steps={steps_pc}, cached tokens/request="
+      f"{cached_pc}")
+print(f"without prefix cache: steps={steps_no}, cached tokens/request="
+      f"{cached_no}")
+print("prefix cache preserved through compression; block accounting clean.")

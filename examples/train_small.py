@@ -1,0 +1,19 @@
+"""Train a small LM for a few hundred steps with the full substrate
+(AdamW + ZeRO-1 shardings + chunked-vocab loss + checkpoint/restart).
+
+  PYTHONPATH=src python examples/train_small.py [--steps 200]
+
+Use --arch llama3-8b --reduced (or any assigned arch) to train that family's
+reduced config; on a TPU pod the same launcher takes --mesh pod1/pod2.
+"""
+import sys
+
+from repro.launch.train import main
+
+if __name__ == "__main__":
+    argv = sys.argv[1:] or [
+        "--arch", "tiny-lm", "--steps", "200", "--seq-len", "64",
+        "--global-batch", "8", "--ckpt-dir", "/tmp/repro_train_small",
+        "--ckpt-every", "100", "--log-every", "20",
+    ]
+    main(argv)

@@ -1,0 +1,33 @@
+"""Arch configs — one module per assigned architecture (+ paper's model)."""
+import importlib
+
+from repro.configs.base import (  # noqa: F401
+    ArchConfig, ShapeCell, SHAPES, get_config, register, all_arch_names,
+    cell_applicable,
+)
+
+_MODULES = [
+    "recurrentgemma_2b",
+    "deepseek_v2_lite_16b",
+    "dbrx_132b",
+    "llama3_8b",
+    "nemotron_4_15b",
+    "olmo_1b",
+    "qwen2_5_3b",
+    "rwkv6_3b",
+    "whisper_tiny",
+    "internvl2_26b",
+    "qwen3_8b",
+    "tiny",
+]
+
+_loaded = False
+
+
+def load_all():
+    global _loaded
+    if _loaded:
+        return
+    for m in _MODULES:
+        importlib.import_module(f"repro.configs.{m}")
+    _loaded = True

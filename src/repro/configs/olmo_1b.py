@@ -1,0 +1,18 @@
+"""OLMo-1B [arXiv:2402.00838]: dense MHA, non-parametric LayerNorm."""
+from repro.configs.base import ArchConfig, register
+
+OLMO_1B = register(ArchConfig(
+    name="olmo-1b",
+    family="dense",
+    num_layers=16,
+    d_model=2048,
+    num_heads=16,
+    num_kv_heads=16,
+    head_dim=128,
+    d_ff=8192,
+    vocab_size=50304,
+    attn_type="gqa",
+    ffn_act="silu_glu",
+    norm_type="nonparam_ln",
+    tie_embeddings=True,
+))

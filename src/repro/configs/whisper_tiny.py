@@ -1,0 +1,28 @@
+"""Whisper-tiny [arXiv:2212.04356]: enc-dec backbone; conv/mel frontend is a STUB.
+
+Per the assignment, only the transformer backbone is modeled; input_specs()
+provides precomputed frame embeddings for the encoder. Decoder self-attention
+KV is paged/evictable; cross-attention KV is static. prefill/decode cells
+exercise the decoder backbone at the assigned (non-Whisper-native) lengths
+with RoPE positions — noted in DESIGN.md §4.
+"""
+from repro.configs.base import ArchConfig, register
+
+WHISPER_TINY = register(ArchConfig(
+    name="whisper-tiny",
+    family="audio",
+    num_layers=4,             # decoder layers
+    encoder_layers=4,
+    cross_seq_len=1500,
+    d_model=384,
+    num_heads=6,
+    num_kv_heads=6,
+    head_dim=64,
+    d_ff=1536,
+    vocab_size=51865,
+    attn_type="gqa",
+    ffn_act="gelu",
+    norm_type="layernorm",
+    frontend="audio_stub",
+    tie_embeddings=True,
+))

@@ -1,0 +1,10 @@
+"""The paper's primary contribution: Compressed PagedAttention + the Zipage
+serving engine (scheduler, paged pools, compression, prefix cache).
+
+Public API:
+    from repro.core import ZipageEngine, EngineOptions, CompressOptions
+"""
+from repro.core.compression import CompressOptions, build_compress_fn  # noqa
+from repro.core.engine import EngineOptions, ZipageEngine  # noqa
+from repro.core.memory_planner import MemoryPlan, plan_memory  # noqa
+from repro.core.request import Request, State  # noqa

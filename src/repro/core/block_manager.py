@@ -1,0 +1,128 @@
+"""Host-side paged block manager: free list, ref counts, block-level prefix
+cache (vLLM-style hash chaining). Pure Python/numpy — drives the jitted
+device steps but never runs on device."""
+from __future__ import annotations
+
+from collections import OrderedDict
+from typing import Dict, List, Optional, Sequence, Tuple
+
+
+class OutOfBlocks(Exception):
+    pass
+
+
+class BlockManager:
+    def __init__(self, num_blocks: int, block_size: int,
+                 enable_prefix_cache: bool = True):
+        self.num_blocks = num_blocks
+        self.block_size = block_size
+        self.enable_prefix_cache = enable_prefix_cache
+        self.free: List[int] = list(range(num_blocks - 1, -1, -1))
+        self.ref: List[int] = [0] * num_blocks
+        # prefix cache: content-hash -> block id; blocks with ref==0 but a
+        # live hash are reusable-before-eviction (LRU order)
+        self.hash_to_block: Dict[int, int] = {}
+        self.block_hash: Dict[int, int] = {}
+        self.cached_free: "OrderedDict[int, None]" = OrderedDict()
+
+    # ------------------------------------------------------------------
+    @property
+    def num_free(self) -> int:
+        return len(self.free) + len(self.cached_free)
+
+    def _pop_block(self) -> int:
+        if self.free:
+            return self.free.pop()
+        if self.cached_free:
+            blk, _ = self.cached_free.popitem(last=False)   # evict oldest
+            h = self.block_hash.pop(blk, None)
+            if h is not None:
+                self.hash_to_block.pop(h, None)
+            return blk
+        raise OutOfBlocks()
+
+    def can_allocate(self, n: int) -> bool:
+        return self.num_free >= n
+
+    def allocate(self, n: int) -> List[int]:
+        if not self.can_allocate(n):
+            raise OutOfBlocks()
+        blocks = [self._pop_block() for _ in range(n)]
+        for b in blocks:
+            self.ref[b] = 1
+        return blocks
+
+    def fork(self, block: int) -> int:
+        """Add a reference to a shared block."""
+        assert self.ref[block] >= 1
+        self.ref[block] += 1
+        return block
+
+    def release(self, blocks: Sequence[int]) -> None:
+        for b in blocks:
+            assert self.ref[b] > 0, f"double free of block {b}"
+            self.ref[b] -= 1
+            if self.ref[b] == 0:
+                if b in self.block_hash and self.enable_prefix_cache:
+                    self.cached_free[b] = None      # keep contents reusable
+                else:
+                    self.free.append(b)
+
+    # ------------------------------------------------------------------
+    # prefix cache
+
+    @staticmethod
+    def chain_hash(prev_hash: int, tokens: Tuple[int, ...]) -> int:
+        return hash((prev_hash, tokens))
+
+    def lookup_prefix(self, token_ids: Sequence[int]):
+        """Longest cached prefix of FULL blocks.
+
+        Returns (blocks, n_tokens_matched, chain) where chain is the list of
+        hashes for all full blocks of the prompt (for later registration).
+        """
+        bs = self.block_size
+        chain, blocks = [], []
+        h = 0
+        n_full = len(token_ids) // bs
+        matched = True
+        n_matched = 0
+        for i in range(n_full):
+            h = self.chain_hash(h, tuple(token_ids[i * bs:(i + 1) * bs]))
+            chain.append(h)
+            if matched and self.enable_prefix_cache and h in self.hash_to_block:
+                blk = self.hash_to_block[h]
+                if blk in self.cached_free:          # resurrect
+                    del self.cached_free[blk]
+                self.ref[blk] += 1
+                blocks.append(blk)
+                n_matched += bs
+            else:
+                matched = False
+        return blocks, n_matched, chain
+
+    def register_prefix(self, blocks: Sequence[int], chain: Sequence[int],
+                        start_block: int) -> None:
+        """Register newly-filled full blocks under their chain hashes."""
+        if not self.enable_prefix_cache:
+            return
+        for i, h in enumerate(chain[start_block:], start=start_block):
+            if i >= len(blocks):
+                break
+            blk = blocks[i]
+            if h not in self.hash_to_block:
+                self.hash_to_block[h] = blk
+                self.block_hash[blk] = h
+
+    def is_shared(self, block: int) -> bool:
+        return self.ref[block] > 1
+
+    # invariant checks (used by property tests)
+    def check_invariants(self) -> None:
+        live = [b for b in range(self.num_blocks) if self.ref[b] > 0]
+        free_set = set(self.free) | set(self.cached_free)
+        assert len(free_set) == len(self.free) + len(self.cached_free)
+        assert free_set.isdisjoint(live)
+        assert len(live) + len(free_set) == self.num_blocks
+        for h, b in self.hash_to_block.items():
+            assert self.block_hash.get(b) == h

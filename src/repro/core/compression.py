@@ -1,0 +1,212 @@
+"""The compression operation of Compressed PagedAttention (paper §4.2).
+
+``build_compress_fn`` returns a jit-able function that compresses a fixed-size
+batch of requests across all attention layers: score -> top-k tag -> compact
+into destination blocks (paper Alg. 4, re-derived as a stable keep-first
+gather — DESIGN.md §3). Padding rows (qslot < 0) are dropped via OOB scatter.
+"""
+from __future__ import annotations
+
+import dataclasses
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core import scoring
+from repro.core.paged import gather_entries
+
+
+@dataclasses.dataclass(frozen=True)
+class CompressOptions:
+    """Paper-recommended defaults (App. C.8)."""
+    window: int = 16                 # observation window w
+    alpha: float = 0.8               # global-score decay
+    use_global: bool = True
+    redundancy: str = "lightning"    # lightning | flash | none
+    lam: float = 0.2                 # λ in Eq. 4
+    tau: float = 0.4                 # redundancy softmax temperature
+    p_thresh: float = 0.8            # similarity zero-out threshold
+    pooling: str = "first"           # none | first | always
+    pool_kernel: int = 7
+    backend: str = "jnp"             # jnp | pallas (repro.kernels.ops)
+
+
+def _score_one(cfg, opts, q_win, entries, fscore, valid, seq_len, hist_len,
+               block_size, precomputed=None):
+    """Scores for one request, one layer. Returns (final_scores, new_F);
+    both (T, h_s) with h_s = h_kv (GQA) or 1 (MLA). ``precomputed`` carries
+    (s_attn, red_raw) from the batched Pallas kernels when backend=pallas."""
+    is_mla = cfg.attn_type == "mla"
+    if precomputed is not None:
+        s, red_raw = precomputed
+    elif is_mla:
+        r = cfg.kv_lora_rank
+        scale = 1.0 / np.sqrt(cfg.head_dim + cfg.qk_rope_head_dim)
+        s = scoring.mla_attention_scores(q_win, entries, valid, seq_len,
+                                         r=r, scale=scale)
+        red_entries = entries[:, None, :r]              # latent only, h=1
+    else:
+        s = scoring.attention_scores(q_win, entries, valid, seq_len)
+        red_entries = entries
+    if opts.use_global and opts.alpha > 0:
+        s = scoring.global_score_update(s, fscore, hist_len, opts.alpha)
+    new_f = s
+    if opts.pooling == "always":
+        s = scoring.max_pool_scores(s, valid, kernel=opts.pool_kernel)
+    elif opts.pooling == "first":
+        pooled = scoring.max_pool_scores(s, valid, kernel=opts.pool_kernel)
+        s = jnp.where(hist_len == 0, pooled, s)
+    if opts.redundancy != "none":
+        if precomputed is not None:
+            raw = red_raw
+        elif opts.redundancy == "lightning":
+            raw = scoring.redundancy_lightning(
+                red_entries, valid, block_size=block_size,
+                p_thresh=opts.p_thresh)
+        else:
+            raw = scoring.redundancy_full(red_entries, valid,
+                                          p_thresh=opts.p_thresh)
+        red = scoring.redundancy_softmax(raw, valid, tau=opts.tau)
+    else:
+        red = jnp.zeros_like(s)
+    final = scoring.combine_scores(s, red, valid, opts.window, seq_len,
+                                   lam=opts.lam)
+    return final, new_f
+
+
+def _compact_pool(pool, src_bt, src_cache, dest_slots):
+    """Move surviving entries (per-head streams). pool: (N, b, h, ...);
+    src_cache: (h, k) survivor cache positions; dest_slots: (k,) flat slots
+    (OOB => dropped)."""
+    N, b, h = pool.shape[0], pool.shape[1], pool.shape[2]
+    flat = pool.reshape((N * b, h) + pool.shape[3:])
+    src_slot = jnp.take(src_bt, src_cache // b) * b + src_cache % b  # (h, k)
+    heads = jnp.arange(h)[:, None]
+    vals = flat[src_slot, heads]                                     # (h, k, ...)
+    flat = flat.at[dest_slots[None, :], heads].set(vals, mode="drop")
+    return flat.reshape(pool.shape)
+
+
+def build_compress_fn(cfg, *, block_size, max_blocks, budget_blocks,
+                      opts: CompressOptions):
+    """Returns compress(pools, qwin, req) -> (new_pools, new_seq_lens).
+
+    pools: {"k","v","f"} with (L, N, b, h, d) ×2 + (L, N, b, h)  (GQA), or
+           {"kv","f"} with (L, N, b, r+dr) + (L, N, b, 1)        (MLA).
+    qwin: (L, M, w, h_q, dq) observation-window query pool (ring order).
+    req tuple (all leading dim n, the padded compression bucket):
+      src_bt:    (n, max_blocks)    source block tables (-1 padded)
+      dest_bt:   (n, budget_blocks) destination blocks (in-place: first
+                 budget_blocks of src; prefix-sharing: fresh target blocks)
+      qslots:    (n,) query-slot ids (-1 => padding row, no-op)
+      seq_lens:  (n,) valid entries (= n_blocks·b, last block full)
+      hist_lens: (n,) entries carrying global-score history (0 first time)
+    """
+    b = block_size
+    T = max_blocks * b
+    k_keep = budget_blocks * b
+    is_mla = cfg.attn_type == "mla"
+
+    use_pallas = opts.backend == "pallas" and not is_mla
+
+    def one_layer(pool_slices, qwin_l, req):
+        src_bt, dest_bt, qslots, seq_lens, hist_lens = req
+
+        pre_s = pre_r = None
+        if use_pallas:
+            from repro.kernels import ops as kops
+            w = qwin_l.shape[1]
+            rings = qwin_l[jnp.maximum(qslots, 0)]        # (n, w, hq, dq)
+            order = (seq_lens[:, None] - w + jnp.arange(w)[None]) % w
+            q_wins = jnp.take_along_axis(
+                rings, order[:, :, None, None], 1)
+            btc = jnp.maximum(src_bt, 0).astype(jnp.int32)
+            logits = kops.score_logits(q_wins, pool_slices["k"], btc,
+                                       seq_lens, backend="pallas")
+            pre_s = kops.attention_scores_from_logits(logits, seq_lens)
+            if opts.redundancy == "lightning":
+                pre_r = kops.lightning_redundancy(
+                    pool_slices["k"], btc, seq_lens,
+                    p_thresh=opts.p_thresh, backend="pallas")
+            elif opts.redundancy == "flash":
+                pre_r = kops.flash_redundancy(
+                    pool_slices["k"], btc, seq_lens,
+                    p_thresh=opts.p_thresh, backend="pallas")
+            else:
+                pre_r = jnp.zeros_like(pre_s)
+
+        def per_req(src_bt_i, dest_bt_i, qslot, seq_len, hist_len,
+                    pre=None):
+            ring = qwin_l[jnp.maximum(qslot, 0)]          # (w, h_q, dq)
+            w = ring.shape[0]
+            order = (seq_len - w + jnp.arange(w)) % w
+            q_win = ring[order]
+            bt = jnp.where(src_bt_i >= 0, src_bt_i, 0)
+            key_pool = pool_slices["kv"] if is_mla else pool_slices["k"]
+            entries = gather_entries(key_pool, bt[None])[0]
+            fscore = gather_entries(pool_slices["f"], bt[None])[0]
+            valid = jnp.arange(T) < seq_len
+            final, new_f = _score_one(cfg, opts, q_win, entries, fscore,
+                                      valid, seq_len, hist_len, b,
+                                      precomputed=pre)
+            tag = scoring.topk_tag(final, k_keep)         # (T, h_s)
+            # stable keep-first sort == survivors in original cache order
+            order_keep = jnp.argsort(~tag.T, axis=-1, stable=True)
+            src_cache = order_keep[:, :k_keep]            # (h_s, k)
+            dslots = jnp.where(dest_bt_i >= 0, dest_bt_i, 2**30 // b)
+            dest_flat = (jnp.repeat(dslots, b) * b
+                         + jnp.tile(jnp.arange(b), budget_blocks))
+            dest_flat = jnp.where(qslot >= 0, dest_flat, 2**30)
+            return src_cache, dest_flat, new_f
+
+        if use_pallas:
+            src_cache, dest_flat, new_f = jax.vmap(per_req)(
+                src_bt, dest_bt, qslots, seq_lens, hist_lens,
+                (pre_s, pre_r))
+        else:
+            src_cache, dest_flat, new_f = jax.vmap(per_req)(
+                src_bt, dest_bt, qslots, seq_lens, hist_lens)
+
+        # Apply moves sequentially (scan) — vmapping full-pool functional
+        # updates would copy the pool once per request.
+        def apply_one(pools_acc, moves):
+            src_bt_i, src_cache_i, dest_flat_i, new_f_i = moves
+            bt = jnp.where(src_bt_i >= 0, src_bt_i, 0)
+            out = dict(pools_acc)
+            if is_mla:
+                out["kv"] = _compact_pool(pools_acc["kv"][:, :, None], bt,
+                                          src_cache_i,
+                                          dest_flat_i)[:, :, 0]
+            else:
+                out["k"] = _compact_pool(pools_acc["k"], bt, src_cache_i,
+                                         dest_flat_i)
+                out["v"] = _compact_pool(pools_acc["v"], bt, src_cache_i,
+                                         dest_flat_i)
+            # F is refreshed (post-global scores) and moved with its entries
+            h_s = new_f_i.shape[1]
+            heads = jnp.arange(h_s)[:, None]
+            fvals = new_f_i.T[heads, src_cache_i]          # (h_s, k)
+            fflat = pools_acc["f"].reshape(-1, h_s)
+            fflat = fflat.at[dest_flat_i[None, :], heads].set(fvals,
+                                                              mode="drop")
+            out["f"] = fflat.reshape(pools_acc["f"].shape)
+            return out, None
+
+        pools_out, _ = jax.lax.scan(
+            apply_one, pool_slices, (src_bt, src_cache, dest_flat, new_f))
+        return pools_out
+
+    def compress(pools, qwin, req):
+        qslots, seq_lens = req[2], req[3]
+
+        def scan_body(_, xs):
+            pool_slices, qwin_l = xs
+            return None, one_layer(pool_slices, qwin_l, req)
+
+        _, new_pools = jax.lax.scan(scan_body, None, (pools, qwin))
+        new_seq = jnp.where(qslots >= 0, jnp.int32(k_keep),
+                            seq_lens.astype(jnp.int32))
+        return new_pools, new_seq
+
+    return compress

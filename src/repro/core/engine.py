@@ -1,0 +1,585 @@
+"""Zipage: the Compressed-PagedAttention serving engine (paper §4).
+
+Host-side scheduler (Python, like vLLM's) driving fixed-shape jitted device
+steps: prefill, decode, compress. Features:
+  * continuous batching over fixed decode slots,
+  * Compressed PagedAttention with per-request block cap N_max (§4.1/4.2),
+  * constrained + hybrid scheduling with query-slot accounting (§4.3),
+  * block-level prefix caching with compression into target blocks (§4.4),
+  * asynchronous compression: compressing requests sit out one decode step
+    and rejoin; decode of the rest is dispatched without waiting (§4.5),
+  * preemption (recompute mode) + FCFS, straggler-aware admission policy,
+  * snapshot/restore fault tolerance.
+
+Setting ``n_max=None`` disables compression entirely, which *is* the
+nano-vLLM baseline of the paper's comparisons (plain PagedAttention).
+"""
+from __future__ import annotations
+
+import dataclasses
+import time
+from collections import deque
+from typing import Dict, List, Optional
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.configs.base import ArchConfig
+from repro.core import serve_model
+from repro.core.block_manager import BlockManager
+from repro.core.compression import CompressOptions, build_compress_fn
+from repro.core.request import Request, State
+from repro.core.sampling import sample
+
+
+@dataclasses.dataclass(frozen=True)
+class EngineOptions:
+    block_size: int = 16
+    n_total_blocks: int = 256
+    max_batch: int = 16              # decode slots
+    m_qslots: int = 8                # paper's M (query-slot pool)
+    n_max: Optional[int] = 4         # block cap; None => full-KV baseline
+    window: int = 4                  # observation window w
+    scheduling: str = "hybrid"       # hybrid | constrained
+    prefix_caching: bool = True
+    async_compression: bool = True
+    compress: CompressOptions = dataclasses.field(
+        default_factory=lambda: CompressOptions(window=4))
+    max_model_len: int = 512
+    prefill_rows: int = 4
+    prefill_len: int = 128
+    temperature: float = 0.0         # 0 => greedy
+    seed: int = 0
+    dtype: str = "float32"
+    layer_stride: int = 0            # 0 => all layers in one compress call
+    measure_phases: bool = False     # block per phase for timing benches
+
+
+class ZipageEngine:
+    def __init__(self, cfg: ArchConfig, params, opts: EngineOptions):
+        self.cfg = cfg
+        self.opts = opts
+        self.params = params
+        b = opts.block_size
+        assert opts.window == opts.compress.window
+        self.compression_enabled = (
+            opts.n_max is not None and not cfg.attention_free
+            and not cfg.local_window)
+        self.budget_blocks = (opts.n_max - 1) if self.compression_enabled else 0
+        self.max_blocks = -(-opts.max_model_len // b)
+        self.spec = serve_model.ServeSpec(
+            n_slots=opts.max_batch, block_size=b, max_blocks=self.max_blocks,
+            n_total_blocks=opts.n_total_blocks, m_qslots=opts.m_qslots,
+            window=opts.window, prefill_rows=opts.prefill_rows,
+            prefill_len=opts.prefill_len, dtype=opts.dtype)
+        prefix_ok = (opts.prefix_caching and not cfg.attention_free
+                     and not cfg.local_window and not cfg.is_enc_dec)
+        self.bm = BlockManager(opts.n_total_blocks, b,
+                               enable_prefix_cache=prefix_ok)
+        self.prefix_ok = prefix_ok
+        self.state = serve_model.make_state(cfg, self.spec)
+        self._decode = jax.jit(serve_model.build_decode_step(cfg, self.spec),
+                               donate_argnums=(1,))
+        self._prefill = jax.jit(serve_model.build_prefill_step(cfg, self.spec),
+                                donate_argnums=(1,))
+        self._compress_fns: Dict[int, callable] = {}
+        # host mirrors (authoritative for scheduling)
+        self.host_bt = np.full((opts.max_batch, self.max_blocks), -1, np.int32)
+        self.host_seq = np.zeros((opts.max_batch,), np.int32)
+        self.host_pos = np.zeros((opts.max_batch,), np.int32)
+        self.host_qslot = np.full((opts.max_batch,), -1, np.int32)
+        self.tokens_next = np.zeros((opts.max_batch,), np.int32)
+
+        self.waiting: deque = deque()
+        self.running: List[Request] = []     # FCFS order
+        self.finished: Dict[int, Request] = {}
+        self.free_slots = list(range(opts.max_batch - 1, -1, -1))
+        self.free_qslots = list(range(opts.m_qslots - 1, -1, -1))
+        self._rid = 0
+        self._rng = np.random.default_rng(opts.seed)
+        self._samp_key = jax.random.key(opts.seed)
+        self.metrics: List[dict] = []
+        self.step_count = 0
+        self._ring = (self.spec.ring_blocks(cfg) if cfg.local_window else 0)
+        # straggler-aware admission: EWMA of step latency vs baseline
+        self._ewma = None
+        self.admission_scale = 1.0
+
+    # ------------------------------------------------------------------
+    def submit(self, prompt, max_new_tokens, eos_id=-1) -> int:
+        assert len(prompt) + max_new_tokens <= self.opts.max_model_len, \
+            "request exceeds max_model_len"
+        rid = self._rid
+        self._rid += 1
+        self.waiting.append(Request(rid=rid, prompt=list(map(int, prompt)),
+                                    max_new_tokens=max_new_tokens,
+                                    eos_id=eos_id, arrival=time.monotonic()))
+        return rid
+
+    # ------------------------------------------------------------------
+    # scheduling helpers
+
+    def _needed_blocks(self, n_tokens):
+        if self.cfg.attention_free:
+            return 0
+        if self._ring:
+            return self._ring
+        return -(-n_tokens // self.opts.block_size)
+
+    def _assign_qslots(self):
+        """Paper §4.3 rule 3: free query slots go to the foremost running
+        requests lacking one (only first M are eligible)."""
+        if not self.compression_enabled:
+            return
+        for i, r in enumerate(self.running):
+            if not self.free_qslots:
+                break
+            if i >= self.opts.m_qslots:
+                break
+            if r.qslot < 0 and r.state != State.FINISHED:
+                r.qslot = self.free_qslots.pop()
+                self.host_qslot[r.slot] = r.qslot
+                if r.state == State.BLOCKED:
+                    r.state = State.RUNNING
+
+    def _can_decode_slotless(self, r: Request) -> bool:
+        """Hybrid rule: decode without a qslot while < N_max blocks or
+        < b - w tokens in the last block."""
+        b, w = self.opts.block_size, self.opts.window
+        return (r.n_blocks < self.opts.n_max
+                or r.tokens_in_last_block(b) < b - w)
+
+    def _preempt(self, r: Request):
+        self.bm.release(r.blocks)
+        r.blocks = []
+        if r.slot >= 0:
+            self.host_bt[r.slot] = -1
+            self.host_qslot[r.slot] = -1
+            self.free_slots.append(r.slot)
+        if r.qslot >= 0:
+            self.free_qslots.append(r.qslot)
+        r.slot = r.qslot = -1
+        r.compressed = False
+        r.seq_len = r.position = 0
+        r.n_cached = 0
+        r.win_count = 0
+        r.preempt_count += 1
+        r.state = State.WAITING
+        self.running.remove(r)
+        self.waiting.appendleft(r)       # front of waiting queue (§3)
+
+    def _preempt_for_blocks(self, n_needed, requester: Request) -> bool:
+        """Free blocks via preemption per §4.3/§4.4 rules. Returns success."""
+        while not self.bm.can_allocate(n_needed):
+            victim = None
+            if self.opts.scheduling == "hybrid":
+                for r in reversed(self.running):
+                    if r is requester or r.state == State.FINISHED:
+                        continue
+                    if r.qslot < 0:
+                        victim = r
+                        break
+            if victim is None and self.prefix_ok:
+                # §4.4: preempt the last *uncompressed* request
+                for r in reversed(self.running):
+                    if r is requester or r.state == State.FINISHED:
+                        continue
+                    if not r.compressed:
+                        victim = r
+                        break
+            if victim is None:
+                return False
+            self._preempt(victim)
+        return True
+
+    # ------------------------------------------------------------------
+    def _admit(self):
+        admitted = []
+        limit = max(1, int(self.opts.prefill_rows * self.admission_scale))
+        while (self.waiting and len(admitted) < limit and self.free_slots):
+            r = self.waiting[0]
+            if self.opts.scheduling == "constrained" \
+                    and self.compression_enabled and not self.free_qslots:
+                break
+            prompt = r.full_prompt
+            if self.prefix_ok:
+                shared, n_cached, chain = self.bm.lookup_prefix(prompt)
+            else:
+                shared, n_cached, chain = [], 0, []
+            n_new = self._needed_blocks(len(prompt)) - len(shared)
+            if not self.bm.can_allocate(n_new):
+                # roll back the prefix refs and stop admitting (FCFS)
+                if shared:
+                    self.bm.release(shared)
+                break
+            new_blocks = self.bm.allocate(n_new) if n_new else []
+            r.blocks = shared + new_blocks
+            r.n_cached, r.chain, r.n_shared = n_cached, chain, len(shared)
+            if self.prefix_ok and chain:
+                self.bm.register_prefix(r.blocks, chain, len(shared))
+            r.slot = self.free_slots.pop()
+            if self.compression_enabled and self.free_qslots \
+                    and len(self.running) < self.opts.m_qslots:
+                r.qslot = self.free_qslots.pop()
+            r.seq_len = (min(len(prompt), self._ring) if self._ring
+                         else (0 if self.cfg.attention_free else len(prompt)))
+            r.position = len(prompt)
+            r.state = State.RUNNING
+            self.host_bt[r.slot] = -1
+            self.host_bt[r.slot, :len(r.blocks)] = r.blocks
+            self.host_seq[r.slot] = r.seq_len
+            self.host_pos[r.slot] = r.position
+            self.host_qslot[r.slot] = r.qslot
+            self.waiting.popleft()
+            self.running.append(r)
+            admitted.append(r)
+        return admitted
+
+    def _run_prefill(self, admitted):
+        """Chunked prefill: suffixes longer than the prefill bucket are fed
+        in multiple rounds (the paged prefill step is chunk-capable via
+        start_pos — the same mechanism prefix-cache hits use)."""
+        P, S = self.opts.prefill_rows, self.opts.prefill_len
+        remaining = {r.rid: list(r.full_prompt[r.n_cached:])
+                     for r in admitted}
+        offset = {r.rid: r.n_cached for r in admitted}
+        pending = list(admitted)
+        while pending:
+            batch = pending[:P]
+            toks = np.zeros((P, S), np.int32)
+            slot_ids = np.full((P,), -1, np.int32)
+            lengths = np.zeros((P,), np.int32)
+            start = np.zeros((P,), np.int32)
+            kw = {}
+            if self.cfg.is_enc_dec:
+                kw["frame_embeds"] = jnp.zeros(
+                    (P, self.cfg.cross_seq_len, self.cfg.d_model),
+                    jnp.float32)
+            final = []
+            for i, r in enumerate(batch):
+                chunk = remaining[r.rid][:S]
+                toks[i, :len(chunk)] = chunk
+                slot_ids[i] = r.slot
+                lengths[i] = len(chunk)
+                start[i] = offset[r.rid]
+                remaining[r.rid] = remaining[r.rid][len(chunk):]
+                offset[r.rid] += len(chunk)
+                if not remaining[r.rid]:
+                    final.append((i, r, len(chunk)))
+            self._push_host_state()
+            logits, self.state = self._prefill(
+                self.params, self.state, jnp.asarray(toks),
+                jnp.asarray(slot_ids), jnp.asarray(lengths),
+                jnp.asarray(start), **kw)
+            tok = self._sample(logits)
+            for i, r, chunk_len in final:
+                self.tokens_next[r.slot] = tok[i]
+                r.output.append(int(tok[i]))
+                if r.qslot >= 0:
+                    r.win_count = min(self.opts.window, chunk_len)
+                if r.t_first_token is None:
+                    r.t_first_token = time.monotonic()
+            still = [r for r in batch if remaining[r.rid]]
+            pending = still + pending[P:]
+
+    # ------------------------------------------------------------------
+    def _compress_fn(self, n):
+        if n not in self._compress_fns:
+            fn = build_compress_fn(
+                self.cfg, block_size=self.opts.block_size,
+                max_blocks=self.max_blocks,
+                budget_blocks=self.budget_blocks, opts=self.opts.compress)
+            self._compress_fns[n] = jax.jit(fn)
+        return self._compress_fns[n]
+
+    def _detect_compression(self):
+        if not self.compression_enabled:
+            return []
+        b = self.opts.block_size
+        out = []
+        for r in self.running:
+            if (r.state in (State.RUNNING, State.BLOCKED) and r.qslot >= 0
+                    and r.n_blocks >= self.opts.n_max
+                    and r.seq_len == r.n_blocks * b
+                    and r.win_count >= self.opts.window):
+                out.append(r)
+        return out
+
+    def _plan_compression(self, comp):
+        """Choose destination blocks (§4.4) and handle allocation pressure.
+        Returns list of (request, dest_blocks, reserved_block, to_release)."""
+        planned = []
+        nb = self.budget_blocks
+        for r in comp:
+            shared_idx = [i for i, blk in enumerate(r.blocks)
+                          if self.bm.is_shared(blk)]
+            n_prefix = len(shared_idx)
+            need = 0
+            if n_prefix:
+                need = min(n_prefix, nb)
+                if self.bm.is_shared(r.blocks[min(nb, r.n_blocks - 1)]):
+                    need += 1                      # reserved must be fresh too
+            if need and not self.bm.can_allocate(need):
+                if not self._preempt_for_blocks(need, r):
+                    r.state = State.BLOCKED        # retry next step
+                    continue
+            if n_prefix == 0:
+                dest = r.blocks[:nb]
+                reserved = r.blocks[nb]
+                release = r.blocks[nb + 1:]
+            else:
+                fresh = self.bm.allocate(min(n_prefix, nb))
+                dest = fresh + r.blocks[n_prefix:][:nb - len(fresh)]
+                if self.bm.is_shared(r.blocks[min(nb, r.n_blocks - 1)]):
+                    reserved = self.bm.allocate(1)[0]
+                    keep = set(dest) | {reserved}
+                    release = [blk for blk in r.blocks if blk not in keep]
+                else:
+                    reserved = r.blocks[nb] if len(r.blocks) > nb else \
+                        self.bm.allocate(1)[0]
+                    keep = set(dest) | {reserved}
+                    release = [blk for blk in r.blocks if blk not in keep]
+            planned.append((r, dest, reserved, release))
+        return planned
+
+    def _launch_compression(self, planned):
+        if not planned:
+            return None
+        n = 1
+        while n < len(planned):
+            n *= 2
+        src_bt = np.full((n, self.max_blocks), -1, np.int32)
+        dest_bt = np.full((n, self.budget_blocks), -1, np.int32)
+        qslots = np.full((n,), -1, np.int32)
+        seq_lens = np.zeros((n,), np.int32)
+        hist = np.zeros((n,), np.int32)
+        for i, (r, dest, _res, _rel) in enumerate(planned):
+            src_bt[i, :r.n_blocks] = r.blocks
+            dest_bt[i] = dest
+            qslots[i] = r.qslot
+            seq_lens[i] = r.seq_len
+            hist[i] = self.budget_blocks * self.opts.block_size \
+                if r.compressed else 0
+        pools = self.state["pools"]
+        req = (jnp.asarray(src_bt), jnp.asarray(dest_bt), jnp.asarray(qslots),
+               jnp.asarray(seq_lens), jnp.asarray(hist))
+        new_pools, _ = self._compress_fn(n)(pools, self.state["qwin"], req)
+        self.state["pools"] = new_pools
+        # host bookkeeping is deterministic — apply immediately
+        k = self.budget_blocks * self.opts.block_size
+        for r, dest, reserved, release in planned:
+            shared_released = [blk for blk in release if self.bm.ref[blk] > 1]
+            self.bm.release(release)
+            r.blocks = list(dest) + [reserved]
+            r.seq_len = k
+            r.compressed = True
+            r.n_shared = 0
+            self.host_bt[r.slot] = -1
+            self.host_bt[r.slot, :len(r.blocks)] = r.blocks
+            self.host_seq[r.slot] = r.seq_len
+            if self.opts.async_compression:
+                r.state = State.COMPRESSING     # sits out this decode step
+        return new_pools
+
+    # ------------------------------------------------------------------
+    def _prepare_decode(self):
+        """Ensure every decodable request has room for one token; apply
+        blocking/preemption rules. Returns the active list."""
+        b = self.opts.block_size
+        active = []
+        for r in list(self.running):
+            if r.state == State.COMPRESSING:
+                continue
+            if r.state == State.BLOCKED:
+                r.state = State.RUNNING          # retry below
+            if r not in self.running:            # got preempted this step
+                continue
+            if self.cfg.attention_free:
+                active.append(r)
+                continue
+            if self._ring:
+                active.append(r)
+                continue
+            # hybrid slotless boundary rule
+            if (self.compression_enabled and r.qslot < 0
+                    and not self._can_decode_slotless(r)):
+                r.state = State.BLOCKED
+                continue
+            if r.seq_len == r.n_blocks * b:      # last block full
+                if (self.compression_enabled and r.qslot >= 0
+                        and r.n_blocks >= self.opts.n_max
+                        and r.win_count >= self.opts.window):
+                    # compression will handle it (was detected this step or
+                    # will be next step); skip decode if it somehow races
+                    r.state = State.BLOCKED
+                    continue
+                ok = self.bm.can_allocate(1) or \
+                    self._preempt_for_blocks(1, r)
+                if not ok or r not in self.running:
+                    if r in self.running:
+                        r.state = State.BLOCKED
+                    continue
+                blk = self.bm.allocate(1)[0]
+                r.blocks.append(blk)
+                self.host_bt[r.slot, r.n_blocks - 1] = blk
+            active.append(r)
+        return [r for r in active if r in self.running]
+
+    def _push_host_state(self):
+        self.state["block_tables"] = jnp.asarray(self.host_bt)
+        self.state["seq_lens"] = jnp.asarray(self.host_seq)
+        self.state["positions"] = jnp.asarray(self.host_pos)
+        self.state["qslot"] = jnp.asarray(self.host_qslot)
+
+    def _sample(self, logits):
+        if self.opts.temperature <= 0:
+            return np.asarray(jnp.argmax(logits, -1))
+        self._samp_key, k = jax.random.split(self._samp_key)
+        return np.asarray(sample(logits, k,
+                                 temperature=self.opts.temperature))
+
+    def _run_decode(self, active):
+        if not active:
+            return
+        mask = np.zeros((self.opts.max_batch,), bool)
+        for r in active:
+            mask[r.slot] = True
+        self._push_host_state()
+        logits, self.state = self._decode(
+            self.params, self.state, jnp.asarray(self.tokens_next),
+            jnp.asarray(mask))
+        tok = self._sample(logits)
+        for r in active:
+            t = int(tok[r.slot])
+            self.tokens_next[r.slot] = t
+            r.output.append(t)
+            if r.qslot >= 0:
+                r.win_count = min(self.opts.window, r.win_count + 1)
+            if r.t_first_token is None:
+                r.t_first_token = time.monotonic()
+            r.seq_len = min(r.seq_len + 1, self._ring) if self._ring \
+                else (r.seq_len if self.cfg.attention_free else r.seq_len + 1)
+            r.position += 1
+            self.host_seq[r.slot] = r.seq_len
+            self.host_pos[r.slot] = r.position
+
+    def _finish(self):
+        for r in list(self.running):
+            if r.state != State.COMPRESSING and r.done():
+                self.bm.release(r.blocks)
+                r.blocks = []
+                self.host_bt[r.slot] = -1
+                self.host_qslot[r.slot] = -1
+                self.free_slots.append(r.slot)
+                if r.qslot >= 0:
+                    self.free_qslots.append(r.qslot)
+                r.slot = r.qslot = -1
+                r.state = State.FINISHED
+                r.t_finish = time.monotonic()
+                self.running.remove(r)
+                self.finished[r.rid] = r
+
+    # ------------------------------------------------------------------
+    def step(self):
+        t0 = time.monotonic()
+        self.step_count += 1
+        self._assign_qslots()
+        admitted = self._admit()
+        t_admit = time.monotonic()
+        if admitted:
+            self._run_prefill(admitted)
+            if self.opts.measure_phases:
+                jax.block_until_ready(self.state["pools"]
+                                      if "pools" in self.state
+                                      else self.state["rec"])
+        t_prefill = time.monotonic()
+        comp = self._detect_compression()
+        planned = self._plan_compression(comp) if comp else []
+        self._launch_compression(planned)
+        if planned and (self.opts.measure_phases
+                        or not self.opts.async_compression):
+            jax.block_until_ready(self.state["pools"])
+            if not self.opts.async_compression:
+                for r, *_ in planned:
+                    r.state = State.RUNNING      # decode this very step
+        t_comp = time.monotonic()
+        active = self._prepare_decode()
+        self._run_decode(active)
+        if self.opts.measure_phases:
+            jax.block_until_ready(self.state["pools"]
+                                  if "pools" in self.state
+                                  else self.state["rec"])
+        t_dec = time.monotonic()
+        # async-compressed requests rejoin next step
+        for r in self.running:
+            if r.state == State.COMPRESSING:
+                r.state = State.RUNNING
+        self._finish()
+        used = self.opts.n_total_blocks - self.bm.num_free
+        self.metrics.append({
+            "step": self.step_count,
+            "t_total": t_dec - t0,
+            "t_prefill": t_prefill - t_admit,
+            "t_compress": t_comp - t_prefill,
+            "t_decode": t_dec - t_comp,
+            "n_running": len(self.running),
+            "n_waiting": len(self.waiting),
+            "n_active": len(active),
+            "n_compressing": len(planned),
+            "n_prefilled": len(admitted),
+            "block_util": used / self.opts.n_total_blocks,
+            "tokens": len(active) + len(admitted),
+        })
+        # straggler-aware admission: back off when step latency inflates
+        dt = t_dec - t0
+        self._ewma = dt if self._ewma is None else 0.9 * self._ewma + 0.1 * dt
+        if self._ewma > 0 and dt > 3.0 * self._ewma:
+            self.admission_scale = max(0.25, self.admission_scale * 0.5)
+        else:
+            self.admission_scale = min(1.0, self.admission_scale * 1.1)
+
+    def run(self, max_steps=10_000):
+        while (self.waiting or self.running) and self.step_count < max_steps:
+            self.step()
+        return {r.rid: r for r in self.finished.values()}
+
+    # ------------------------------------------------------------------
+    # fault tolerance: full engine snapshot/restore
+
+    def snapshot(self):
+        import copy
+        dev = {k: jax.tree.map(np.asarray, v) for k, v in self.state.items()}
+        return {
+            "device": dev,
+            "host": copy.deepcopy({
+                "bt": self.host_bt, "seq": self.host_seq,
+                "pos": self.host_pos, "qslot": self.host_qslot,
+                "tokens_next": self.tokens_next,
+                "free_slots": self.free_slots,
+                "free_qslots": self.free_qslots,
+                "rid": self._rid, "step": self.step_count,
+            }),
+            "requests": copy.deepcopy({
+                "waiting": list(self.waiting),
+                "running": self.running,
+                "finished": self.finished,
+            }),
+            "bm": copy.deepcopy(self.bm),
+        }
+
+    def restore(self, snap):
+        import copy
+        self.state = {k: jax.tree.map(jnp.asarray, v)
+                      for k, v in snap["device"].items()}
+        h = copy.deepcopy(snap["host"])
+        self.host_bt, self.host_seq = h["bt"], h["seq"]
+        self.host_pos, self.host_qslot = h["pos"], h["qslot"]
+        self.tokens_next = h["tokens_next"]
+        self.free_slots, self.free_qslots = h["free_slots"], h["free_qslots"]
+        self._rid, self.step_count = h["rid"], h["step"]
+        r = copy.deepcopy(snap["requests"])
+        self.waiting = deque(r["waiting"])
+        self.running = r["running"]
+        self.finished = r["finished"]
+        self.bm = copy.deepcopy(snap["bm"])

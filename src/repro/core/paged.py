@@ -1,0 +1,200 @@
+"""Low-level paged KV-pool operations (pure jnp reference backend).
+
+Pool layout (per attention layer): ``(N_total, b, h_kv, d)`` for K and V —
+a page is a ``(b, h_kv·d)`` contiguous stripe, chosen so the TPU kernel's
+page DMA is dense (DESIGN.md §3). MLA pools store the latent entry
+``(N_total, b, r + d_rope)``. The Pallas kernels in ``repro.kernels``
+implement the same contracts; ``repro.core.backend`` selects at runtime.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+NEG_INF = -1e30
+
+
+# ----------------------------------------------------------------------
+# writes
+
+def scatter_token(pool, block_tables, positions, values):
+    """Write one token per request into its page slot.
+
+    pool: (N_total, b, ...); block_tables: (B, max_blocks) int32;
+    positions: (B,) slot position in cache order; values: (B, ...).
+    Rows with position < 0 are skipped (inactive slots).
+    """
+    b = pool.shape[1]
+    blk = jnp.take_along_axis(block_tables, (positions[:, None] // b), 1)[:, 0]
+    slot = positions % b
+    flat = pool.reshape((-1,) + pool.shape[2:])
+    idx = blk * b + slot
+    idx = jnp.where(positions >= 0, idx, pool.shape[0] * b)  # OOB -> dropped
+    flat = flat.at[idx].set(values.astype(pool.dtype), mode="drop")
+    return flat.reshape(pool.shape)
+
+
+def scatter_prefill(pool, block_tables, values, lengths, start=None):
+    """Write a whole prefill segment. values: (B, S, ...); lengths: (B,)."""
+    B, S = values.shape[:2]
+    b = pool.shape[1]
+    pos = jnp.arange(S)[None, :] + (0 if start is None else start[:, None])
+    blk = jnp.take_along_axis(block_tables, pos // b, 1)       # (B, S)
+    idx = blk * b + pos % b
+    valid = (jnp.arange(S)[None, :] <
+             (lengths[:, None] - (0 if start is None else start[:, None])))
+    idx = jnp.where(valid, idx, pool.shape[0] * b)
+    flat = pool.reshape((-1,) + pool.shape[2:])
+    flat = flat.at[idx.reshape(-1)].set(
+        values.reshape((-1,) + values.shape[2:]).astype(pool.dtype),
+        mode="drop")
+    return flat.reshape(pool.shape)
+
+
+# ----------------------------------------------------------------------
+# reads
+
+def gather_entries(pool, block_tables):
+    """Gather each request's pages into cache order.
+
+    pool: (N_total, b, ...); block_tables: (B, max_blocks).
+    Returns (B, max_blocks*b, ...). Negative table entries yield garbage —
+    callers must mask by seq_len.
+    """
+    safe = jnp.maximum(block_tables, 0)
+    out = pool[safe]                                   # (B, mb, b, ...)
+    return out.reshape((out.shape[0], -1) + out.shape[3:])
+
+
+# ----------------------------------------------------------------------
+# decode attention (reference backend)
+
+def paged_decode_attention(q, k_pool, v_pool, block_tables, seq_lens,
+                           *, scale=None):
+    """One-token GQA attention against the paged pool.
+
+    q: (B, h_q, d); pools: (N_total, b, h_kv, d); block_tables: (B, mb);
+    seq_lens: (B,) valid entries per request. Returns (B, h_q, d).
+    """
+    B, hq, d = q.shape
+    hkv = k_pool.shape[2]
+    g = hq // hkv
+    if scale is None:
+        scale = 1.0 / np.sqrt(d)
+    ks = gather_entries(k_pool, block_tables)          # (B, T, hkv, d)
+    vs = gather_entries(v_pool, block_tables)
+    T = ks.shape[1]
+    qg = q.reshape(B, hkv, g, d).astype(jnp.float32)
+    s = jnp.einsum("bhgd,bthd->bhgt", qg, ks.astype(jnp.float32)) * scale
+    mask = jnp.arange(T)[None, :] < seq_lens[:, None]  # (B, T)
+    s = jnp.where(mask[:, None, None], s, NEG_INF)
+    p = jax.nn.softmax(s, -1)
+    o = jnp.einsum("bhgt,bthd->bhgd", p, vs.astype(jnp.float32))
+    return o.reshape(B, hq, d).astype(q.dtype)
+
+
+def paged_decode_attention_chunked(q, k_pool, v_pool, block_tables, seq_lens,
+                                   *, scale=None):
+    """Flash-decoding over pages in pure HLO: scan over block-table columns,
+    one (B, b, h_kv, d) page gather + online-softmax update per step.
+
+    Reads each page exactly once instead of materializing the full
+    (B, T, h, d) gathered copies — the HLO analogue of the Pallas kernel's
+    VMEM loop (EXPERIMENTS.md §Perf iteration C).
+    """
+    B, hq, d = q.shape
+    N, b, hkv, _ = k_pool.shape
+    g = hq // hkv
+    mb = block_tables.shape[1]
+    if scale is None:
+        scale = 1.0 / np.sqrt(d)
+    qg = q.reshape(B, hkv, g, d).astype(jnp.float32)
+    bt = jnp.maximum(block_tables, 0)
+
+    def body(carry, i):
+        m, l, acc = carry
+        blk = bt[:, i]                                  # (B,)
+        ks = k_pool[blk]                                # (B, b, hkv, d)
+        vs = v_pool[blk]
+        s = jnp.einsum("bhgd,bchd->bhgc", qg,
+                       ks.astype(jnp.float32)) * scale
+        kpos = i * b + jnp.arange(b)
+        mask = kpos[None] < seq_lens[:, None]           # (B, b)
+        s = jnp.where(mask[:, None, None], s, NEG_INF)
+        m_new = jnp.maximum(m, s.max(-1))
+        p = jnp.exp(s - m_new[..., None])
+        p = jnp.where(mask[:, None, None], p, 0.0)
+        corr = jnp.exp(m - m_new)
+        l_new = l * corr + p.sum(-1)
+        acc_new = acc * corr[..., None] + jnp.einsum(
+            "bhgc,bchd->bhgd", p, vs.astype(jnp.float32))
+        return (m_new, l_new, acc_new), None
+
+    m0 = jnp.full((B, hkv, g), NEG_INF, jnp.float32)
+    l0 = jnp.zeros((B, hkv, g), jnp.float32)
+    a0 = jnp.zeros((B, hkv, g, d), jnp.float32)
+    (m, l, acc), _ = jax.lax.scan(body, (m0, l0, a0), jnp.arange(mb))
+    out = acc / jnp.maximum(l, 1e-30)[..., None]
+    return out.reshape(B, hq, d).astype(q.dtype)
+
+
+def paged_decode_attention_mla(q_nope_abs, q_rope, kv_pool, block_tables,
+                               seq_lens, *, r, scale):
+    """MLA absorbed decode: score = q_abs·c + q_rope·k_rope; out in latent.
+
+    q_nope_abs: (B, h_q, r) — queries already absorbed through W_uk;
+    q_rope: (B, h_q, d_rope); kv_pool: (N_total, b, r + d_rope).
+    Returns latent output (B, h_q, r) (caller applies W_uv).
+    """
+    B, hq, _ = q_nope_abs.shape
+    entries = gather_entries(kv_pool, block_tables)    # (B, T, r+dr)
+    T = entries.shape[1]
+    # Contract against the FULL entry: slicing entries[..., :r] on the
+    # model-sharded latent dim is shard-misaligned (576 = 16x36 vs r=512)
+    # and forces GSPMD to all-gather the whole gathered cache (~30 GB/chip
+    # measured). The concat-q form keeps the contraction sharded (scores
+    # psum only); the r-slice moves to the tiny (B, hq, ·) output.
+    # EXPERIMENTS.md §Perf iteration D.
+    q_cat = jnp.concatenate([q_nope_abs, q_rope], -1)  # (B, hq, r+dr)
+    from repro.models import moe_ctx
+    qspec = moe_ctx.mla_q_spec.get()
+    if qspec is not None:
+        # align q's sharding with the latent-width-sharded cache so the
+        # score contraction psums instead of all-gathering the cache
+        q_cat = jax.lax.with_sharding_constraint(q_cat, qspec)
+    s = jnp.einsum("bhe,bte->bht", q_cat.astype(jnp.float32),
+                   entries.astype(jnp.float32)) * scale
+    mask = jnp.arange(T)[None, :] < seq_lens[:, None]
+    s = jnp.where(mask[:, None], s, NEG_INF)
+    p = jax.nn.softmax(s, -1)
+    o = jnp.einsum("bht,bte->bhe", p, entries.astype(jnp.float32))
+    return o[..., :r].astype(q_nope_abs.dtype)
+
+
+def paged_prefill_attention(q, k_pool, v_pool, block_tables, q_start,
+                            kv_lens, *, local_window=0):
+    """Prefill chunk attention against pages (for chunked prefill / shared
+    prefixes already resident in the pool).
+
+    q: (B, S, h_q, d) at absolute cache positions q_start + arange(S);
+    kv_lens: (B,) total valid cache entries (including this chunk, already
+    written). Causal within the chunk.
+    """
+    B, S, hq, d = q.shape
+    hkv = k_pool.shape[2]
+    g = hq // hkv
+    ks = gather_entries(k_pool, block_tables)
+    vs = gather_entries(v_pool, block_tables)
+    T = ks.shape[1]
+    qg = q.reshape(B, S, hkv, g, d).astype(jnp.float32)
+    s = jnp.einsum("bshgd,bthd->bhgst", qg, ks.astype(jnp.float32)) / np.sqrt(d)
+    qpos = q_start[:, None] + jnp.arange(S)[None]                  # (B, S)
+    kpos = jnp.arange(T)[None]                                     # (1, T)
+    mask = (kpos[:, None] <= qpos[..., None]) & (kpos[:, None] < kv_lens[:, None, None])
+    if local_window:
+        mask &= kpos[:, None] > qpos[..., None] - local_window
+    s = jnp.where(mask[:, None, None], s, NEG_INF)
+    p = jax.nn.softmax(s, -1)
+    o = jnp.einsum("bhgst,bthd->bshgd", p, vs.astype(jnp.float32))
+    return o.reshape(B, S, hq, d).astype(q.dtype)

@@ -1,0 +1,60 @@
+"""Request object and lifecycle states (paper Fig. 2)."""
+from __future__ import annotations
+
+import dataclasses
+import enum
+from typing import List, Optional
+
+
+class State(enum.Enum):
+    WAITING = "waiting"
+    RUNNING = "running"          # decoding (slot assigned)
+    BLOCKED = "blocked"          # in running queue, cannot decode (no block /
+    #                              slotless past the b-w boundary)
+    COMPRESSING = "compressing"  # async compression in flight, skips decode
+    FINISHED = "finished"
+
+
+@dataclasses.dataclass
+class Request:
+    rid: int
+    prompt: List[int]
+    max_new_tokens: int
+    eos_id: int = -1
+    arrival: float = 0.0
+
+    state: State = State.WAITING
+    output: List[int] = dataclasses.field(default_factory=list)
+    blocks: List[int] = dataclasses.field(default_factory=list)
+    slot: int = -1
+    qslot: int = -1
+    compressed: bool = False           # has undergone >=1 compression
+    seq_len: int = 0                   # cache entries (cache order)
+    position: int = 0                  # absolute next position
+    n_cached: int = 0                  # prefix-cache hit tokens
+    chain: List[int] = dataclasses.field(default_factory=list)
+    n_shared: int = 0                  # shared blocks at admission
+    preempt_count: int = 0
+    win_count: int = 0                 # observation-window entries captured
+
+    # metrics
+    t_first_token: Optional[float] = None
+    t_finish: Optional[float] = None
+
+    @property
+    def full_prompt(self) -> List[int]:
+        """Effective prompt on (re-)admission: original + generated so far."""
+        return self.prompt + self.output
+
+    @property
+    def n_blocks(self) -> int:
+        return len(self.blocks)
+
+    def tokens_in_last_block(self, block_size: int) -> int:
+        r = self.seq_len % block_size
+        return block_size if (r == 0 and self.seq_len > 0) else r
+
+    def done(self) -> bool:
+        if self.output and self.eos_id >= 0 and self.output[-1] == self.eos_id:
+            return True
+        return len(self.output) >= self.max_new_tokens

@@ -1,0 +1,10 @@
+"""Token sampling."""
+import jax
+import jax.numpy as jnp
+
+
+def sample(logits, key, *, temperature=0.6, greedy=False):
+    """logits: (B, V) fp32 -> (B,) int32."""
+    if greedy or temperature <= 0:
+        return jnp.argmax(logits, -1).astype(jnp.int32)
+    return jax.random.categorical(key, logits / temperature, -1).astype(jnp.int32)

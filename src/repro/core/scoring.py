@@ -1,0 +1,168 @@
+"""Compression scoring functions φ(Q, K, I) — pure-jnp reference backend.
+
+All functions operate on ONE request and ONE layer in *cache order*:
+  q_win   : (w, h_q, d)   observation-window queries (chronological, roped)
+  entries : (T, h, d)     gathered key entries, T = n_blocks·b
+  valid   : (T,)          bool, entry < seq_len
+Per-head scores (T, h): for GQA h = h_kv (paper App. C.2 max-reduce); for MLA
+h = 1 (latent shared across heads). Batch/layer vmap happens at call sites;
+Pallas kernels (repro.kernels) implement the same contracts on paged layout.
+
+Note on Alg. 1's mask: the paper writes ``-inf if u + b - w > v`` which masks
+*past* keys; a causal observation window must mask *future* keys
+(v > u + b - w), as in SnapKV/MorphKV. We implement the causal direction and
+record the sign discrepancy in DESIGN.md.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+NEG_INF = -1e30
+
+
+# ----------------------------------------------------------------------
+def attention_scores(q_win, entries, valid, seq_len, *, scale=None):
+    """Paper Alg. 1 + App. C.2 reductions -> (T, h) scores.
+
+    q_win query u sits at cache position seq_len - w + u; keys at cache
+    position t. Future keys (t > query pos) are masked causally.
+    """
+    w, hq, d = q_win.shape
+    T, h = entries.shape[0], entries.shape[1]
+    g = hq // h
+    if scale is None:
+        scale = 1.0 / np.sqrt(d)
+    qg = q_win.reshape(w, h, g, d).astype(jnp.float32)
+    s = jnp.einsum("whgd,thd->hgwt", qg, entries.astype(jnp.float32)) * scale
+    qpos = seq_len - w + jnp.arange(w)                     # (w,)
+    causal = jnp.arange(T)[None, :] <= qpos[:, None]       # (w, T)
+    mask = causal & valid[None, :]
+    s = jnp.where(mask[None, None], s, NEG_INF)
+    p = jax.nn.softmax(s, axis=-1)                         # over T
+    p = jnp.where(mask[None, None], p, 0.0)
+    p = p.max(axis=1)                                      # GQA max-reduce over g
+    return p.mean(axis=1).T                                # mean over w -> (T, h)
+
+
+def mla_attention_scores(q_win_abs, entries, valid, seq_len, *, r, scale):
+    """MLA variant: q_win_abs: (w, h_q, r+dr) absorbed queries; entries
+    (T, r+dr) latent cache. Returns (T, 1)."""
+    w, hq, _ = q_win_abs.shape
+    T = entries.shape[0]
+    s = jnp.einsum("whe,te->wht", q_win_abs.astype(jnp.float32),
+                   entries.astype(jnp.float32)) * scale
+    qpos = seq_len - w + jnp.arange(w)
+    mask = (jnp.arange(T)[None, :] <= qpos[:, None]) & valid[None, :]
+    s = jnp.where(mask[:, None], s, NEG_INF)
+    p = jax.nn.softmax(s, -1)
+    p = jnp.where(mask[:, None], p, 0.0)
+    p = p.max(axis=1)                                      # over q heads
+    return p.mean(axis=0)[:, None]                         # (T, 1)
+
+
+# ----------------------------------------------------------------------
+def global_score_update(scores, f_prev, hist_len, alpha):
+    """Paper Alg. 2 (G-KV): decayed max with history. scores/f_prev: (T, h);
+    entries with cache position < hist_len carry history. Returns the
+    overwritten scores (also the new F)."""
+    T = scores.shape[0]
+    has_hist = (jnp.arange(T) < hist_len)[:, None]
+    return jnp.where(has_hist, jnp.maximum(alpha * f_prev, scores), scores)
+
+
+# ----------------------------------------------------------------------
+def _cosine_matrix(entries, valid):
+    """(h, T, T) cosine similarity; invalid rows/cols zeroed."""
+    e = entries.astype(jnp.float32)
+    norm = jnp.linalg.norm(e, axis=-1, keepdims=True)
+    ehat = e / jnp.maximum(norm, 1e-12)
+    c = jnp.einsum("thd,shd->hts", ehat, ehat)
+    vm = valid[:, None] & valid[None, :]
+    return jnp.where(vm[None], c, 0.0)
+
+
+def _zero_last_above(c, p_thresh):
+    """Per column, zero the LAST (newest-row) entry exceeding p (paper C.5:
+    prefer retaining newer tokens). c: (h, T, T)."""
+    T = c.shape[-1]
+    above = c > p_thresh                                    # (h, t, s)
+    rev = above[:, ::-1, :]
+    has = above.any(axis=1)                                 # (h, s)
+    last = T - 1 - jnp.argmax(rev, axis=1)                  # (h, s)
+    hit = jax.nn.one_hot(last, T, axis=1, dtype=bool) & has[:, None, :]
+    return jnp.where(hit, 0.0, c)
+
+
+def redundancy_full(entries, valid, *, p_thresh=0.8):
+    """R-KV redundancy, full-matrix oracle (O(T²·d) compute, O(T²) memory).
+    Returns raw row-sums normalized by valid length: (T, h)."""
+    c = _cosine_matrix(entries, valid)
+    T = c.shape[-1]
+    c = c * (1.0 - jnp.eye(T))                              # zero diagonal
+    c = _zero_last_above(c, p_thresh)
+    n = jnp.maximum(valid.sum(), 1)
+    return (c.sum(axis=-1) / n).T                           # (T, h)
+
+
+def redundancy_lightning(entries, valid, *, block_size, p_thresh=0.8):
+    """Lightning redundancy (paper C.7): similarities only within each page.
+    O(T·b) compute/memory. Returns row-sums normalized by b: (T, h)."""
+    T, h, d = entries.shape
+    b = block_size
+    nb = T // b
+    e = entries.astype(jnp.float32)
+    ehat = e / jnp.maximum(jnp.linalg.norm(e, axis=-1, keepdims=True), 1e-12)
+    eb = ehat.reshape(nb, b, h, d)
+    vb = valid.reshape(nb, b)
+    c = jnp.einsum("nthd,nshd->nhts", eb, eb)               # (nb, h, b, b)
+    vm = vb[:, :, None] & vb[:, None, :]
+    c = jnp.where(vm[:, None], c, 0.0)
+    c = c * (1.0 - jnp.eye(b))
+    # per-column zero of last above-threshold entry, within the block
+    above = c > p_thresh
+    has = above.any(axis=2)                                 # (nb, h, b)
+    last = b - 1 - jnp.argmax(above[:, :, ::-1, :], axis=2)
+    hit = jax.nn.one_hot(last, b, axis=2, dtype=bool) & has[:, :, None, :]
+    c = jnp.where(hit, 0.0, c)
+    r = c.sum(axis=-1) / b                                  # (nb, h, b)
+    return r.transpose(0, 2, 1).reshape(T, h)
+
+
+def redundancy_softmax(r_raw, valid, *, tau=1.0):
+    """Distribution over the sequence dim with temperature (paper C.8)."""
+    x = jnp.where(valid[:, None], r_raw / tau, NEG_INF)
+    return jax.nn.softmax(x, axis=0)
+
+
+# ----------------------------------------------------------------------
+def max_pool_scores(scores, valid, *, kernel=7):
+    """SnapKV sequence-dim max pooling (paper C.4), same-padded, masked."""
+    s = jnp.where(valid[:, None], scores, NEG_INF)
+    pads = [s]
+    for off in range(1, kernel // 2 + 1):
+        pads.append(jnp.roll(s, off, axis=0).at[:off].set(NEG_INF))
+        pads.append(jnp.roll(s, -off, axis=0).at[-off:].set(NEG_INF))
+    out = jnp.stack(pads).max(axis=0)
+    return jnp.where(valid[:, None], out, 0.0)
+
+
+# ----------------------------------------------------------------------
+def combine_scores(attn_s, red_dist, valid, win_len, seq_len, *, lam):
+    """Final score (paper Eq. 4 + window pinning): S - λ·R, observation
+    window (last win_len valid entries) pinned to +inf, invalid to -inf."""
+    T = attn_s.shape[0]
+    s = attn_s - lam * red_dist
+    pos = jnp.arange(T)
+    in_win = (pos >= seq_len - win_len) & (pos < seq_len)
+    s = jnp.where(in_win[:, None], jnp.inf, s)
+    return jnp.where(valid[:, None], s, -jnp.inf)
+
+
+def topk_tag(scores, k):
+    """Boolean keep-tag per head: top-k along the sequence dim. (T, h)->(T, h)."""
+    T, h = scores.shape
+    idx = jax.lax.top_k(scores.T, k)[1]                     # (h, k)
+    tag = jnp.zeros((h, T), bool).at[jnp.arange(h)[:, None], idx].set(True)
+    return tag.T

@@ -1,0 +1,648 @@
+"""Serving-time model execution over the paged KV pool.
+
+Builds jit-able ``prefill_step`` and ``decode_step`` for any ArchConfig:
+  * attention layers read/write the paged pools (GQA or MLA-latent layout),
+  * local-window layers (recurrentgemma) use ring pages bounded by the window,
+  * recurrent layers (RG-LRU / RWKV6) keep O(1) per-slot states,
+  * observation-window queries are written into the Q pool (paper §4.2),
+  * layers are scanned (HLO stays small for 48-layer archs) with the pools
+    carried and updated via dynamic_update_index_in_dim.
+
+State layout (all leading dims static):
+  pools:   {"k","v","f"} (L_attn, N, b, h_kv, d)×2 + (L_attn, N, b, h_kv)
+           or {"kv","f"} (L_attn, N, b, r+dr) + (L_attn, N, b, 1)   [MLA]
+  qwin:    (L_attn, M, w, h_q, dq) ring-ordered observation queries
+  block_tables (B, max_blocks) int32, seq_lens (B,), positions (B,),
+  qslot (B,) int32, rec: per-kind recurrent states (L_rec leading dim),
+  cross_kv: (L_dec, B, S_mem, h_kv, d)×2 for enc-dec archs.
+"""
+from __future__ import annotations
+
+import dataclasses
+import functools
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.configs.base import ArchConfig
+from repro.models import layers as ML
+from repro.models import lm
+from repro.models.common import apply_norm, apply_rope, rms_head_norm, \
+    chunked_causal_attention
+from repro.core import paged
+
+
+@dataclasses.dataclass(frozen=True)
+class ServeSpec:
+    n_slots: int                # decode batch slots
+    block_size: int
+    max_blocks: int             # block-table width per request
+    n_total_blocks: int         # pool size
+    m_qslots: int               # query-slot pool (paper's M)
+    window: int = 16            # observation window w
+    prefill_rows: int = 4       # prefill bucket rows
+    prefill_len: int = 256      # padded prefill length
+    dtype: str = "bfloat16"
+    attn_backend: str = "jnp"   # jnp | chunked | pallas (decode attention)
+    # KV-head replication for TP > h_kv (vLLM-style): pools store
+    # h_kv * kv_replication head slots laid out repeat-consecutive
+    # [kv0, kv0, ..., kv1, kv1, ...] so model-shard s's q-head group maps to
+    # its own stored slot (DESIGN.md §5). GQA math is unchanged: treat
+    # h_store as h_kv with group size h_q / h_store.
+    kv_replication: int = 1
+
+    def ring_blocks(self, cfg):
+        """Ring capacity for local-window attention (== window tokens)."""
+        assert cfg.local_window % self.block_size == 0
+        return cfg.local_window // self.block_size
+
+
+# ----------------------------------------------------------------------
+# layer ordinal bookkeeping
+
+def stage_layout(cfg: ArchConfig):
+    """Returns plan plus, per stage, the attn/rec ordinal offsets."""
+    plan = lm.build_plan(cfg)
+    kinds_unit = [k for k, _ in plan["unit"]]
+    a_unit = sum(1 for k in kinds_unit if k == "attn")
+    r_unit = len(kinds_unit) - a_unit
+    a_head = sum(1 for k, _ in plan["head"] if k == "attn")
+    r_head = len(plan["head"]) - a_head
+    a_tail = sum(1 for k, _ in plan["tail"] if k == "attn")
+    n_attn = a_head + plan["n_units"] * a_unit + a_tail
+    n_rec = cfg.num_layers - n_attn
+    return {
+        "plan": plan, "a_unit": a_unit, "r_unit": r_unit,
+        "a_head": a_head, "r_head": r_head,
+        "n_attn": n_attn, "n_rec": n_rec,
+    }
+
+
+def qwin_dim(cfg: ArchConfig):
+    if cfg.attn_type == "mla":
+        return cfg.kv_lora_rank + cfg.qk_rope_head_dim
+    return cfg.head_dim
+
+
+# ----------------------------------------------------------------------
+# state construction
+
+def make_state(cfg: ArchConfig, spec: ServeSpec):
+    lay = stage_layout(cfg)
+    dt = jnp.dtype(spec.dtype)
+    L, B = lay["n_attn"], spec.n_slots
+    N, b = spec.n_total_blocks, spec.block_size
+    st = {
+        "block_tables": jnp.full((B, spec.max_blocks), -1, jnp.int32),
+        "seq_lens": jnp.zeros((B,), jnp.int32),
+        "positions": jnp.zeros((B,), jnp.int32),
+        "qslot": jnp.full((B,), -1, jnp.int32),
+    }
+    if L:
+        if cfg.attn_type == "mla":
+            e = cfg.kv_lora_rank + cfg.qk_rope_head_dim
+            st["pools"] = {"kv": jnp.zeros((L, N, b, e), dt),
+                           "f": jnp.zeros((L, N, b, 1), jnp.float32)}
+        else:
+            h = cfg.num_kv_heads * spec.kv_replication
+            d = cfg.head_dim
+            st["pools"] = {"k": jnp.zeros((L, N, b, h, d), dt),
+                           "v": jnp.zeros((L, N, b, h, d), dt),
+                           "f": jnp.zeros((L, N, b, h), jnp.float32)}
+        st["qwin"] = jnp.zeros((L, spec.m_qslots, spec.window,
+                                cfg.num_heads, qwin_dim(cfg)), dt)
+    if lay["n_rec"]:
+        kinds = cfg.layer_kinds()
+        if "rglru" in kinds:
+            w = cfg.lru_width or cfg.d_model
+            st["rec"] = {
+                "h": jnp.zeros((lay["n_rec"], B, w), jnp.float32),
+                "conv": jnp.zeros((lay["n_rec"], B, cfg.conv1d_width - 1, w), dt),
+            }
+        else:  # rwkv
+            hh, K = cfg.num_heads, cfg.head_dim
+            st["rec"] = {
+                "S": jnp.zeros((lay["n_rec"], B, hh, K, K), jnp.float32),
+                "shift": jnp.zeros((lay["n_rec"], B, cfg.d_model), dt),
+            }
+    if cfg.is_enc_dec:
+        h, d = cfg.num_kv_heads, cfg.head_dim
+        st["cross_kv"] = {
+            "k": jnp.zeros((cfg.num_layers, B, cfg.cross_seq_len, h, d), dt),
+            "v": jnp.zeros((cfg.num_layers, B, cfg.cross_seq_len, h, d), dt),
+        }
+    return st
+
+
+# ----------------------------------------------------------------------
+# per-layer decode
+
+def _dyn(arr, i):
+    return jax.lax.dynamic_index_in_dim(arr, i, 0, keepdims=False)
+
+
+def _dyn_set(arr, val, i):
+    return jax.lax.dynamic_update_index_in_dim(arr, val.astype(arr.dtype), i, 0)
+
+
+def _decode_attn(cfg, spec, p, x, carry, a_idx, write_pos, attend_len,
+                 positions, qring_pos, qslot):
+    """One attention layer, one token. x: (B, d). Returns (out, carry)."""
+    B = x.shape[0]
+    pools, qwin = carry["pools"], carry["qwin"]
+    bt = carry["block_tables"]
+    if cfg.attn_type == "mla":
+        r, dr = cfg.kv_lora_rank, cfg.qk_rope_head_dim
+        dh, dv = cfg.head_dim, cfg.v_head_dim
+        q_nope, q_rope = ML.mla_queries(cfg, p, x[:, None], positions[:, None])
+        q_nope, q_rope = q_nope[:, 0], q_rope[:, 0]          # (B, hq, ·)
+        c, k_rope = ML.mla_latent(cfg, p, x[:, None], positions[:, None])
+        entry = jnp.concatenate([c[:, 0], k_rope[:, 0]], -1)  # (B, r+dr)
+        kv_l = _dyn(pools["kv"], a_idx)
+        kv_l = paged.scatter_token(kv_l, bt, write_pos, entry)
+        pools = dict(pools, kv=_dyn_set(pools["kv"], kv_l, a_idx))
+        w_uk = p["w_uk"].reshape(r, cfg.num_heads, dh)
+        q_abs = jnp.einsum("bhd,rhd->bhr", q_nope.astype(jnp.float32),
+                           w_uk.astype(jnp.float32)).astype(x.dtype)
+        scale = 1.0 / np.sqrt(dh + dr)
+        o_lat = paged.paged_decode_attention_mla(
+            q_abs, q_rope, kv_l, bt, attend_len, r=r, scale=scale)
+        w_uv = p["w_uv"].reshape(r, cfg.num_heads, dv)
+        o = jnp.einsum("bhr,rhd->bhd", o_lat.astype(jnp.float32),
+                       w_uv.astype(jnp.float32))
+        o = o.reshape(B, cfg.num_heads * dv).astype(x.dtype)
+        q_entry = jnp.concatenate([q_abs, q_rope], -1)        # (B, hq, r+dr)
+    else:
+        q, k, v = ML.attn_qkv(cfg, p, x)                      # (B, h, d)
+        q = apply_rope(q[:, None], positions[:, None], cfg.rope_theta)[:, 0]
+        k = apply_rope(k[:, None], positions[:, None], cfg.rope_theta)[:, 0]
+        if spec.kv_replication > 1:
+            k = jnp.repeat(k, spec.kv_replication, axis=1)
+            v = jnp.repeat(v, spec.kv_replication, axis=1)
+        k_l = paged.scatter_token(_dyn(pools["k"], a_idx), bt, write_pos, k)
+        v_l = paged.scatter_token(_dyn(pools["v"], a_idx), bt, write_pos, v)
+        pools = dict(pools,
+                     k=_dyn_set(pools["k"], k_l, a_idx),
+                     v=_dyn_set(pools["v"], v_l, a_idx))
+        if spec.attn_backend == "pallas":
+            from repro.kernels import ops as kops
+            o = kops.paged_decode_attention(q, k_l, v_l, bt, attend_len,
+                                            backend="pallas")
+        elif spec.attn_backend == "chunked":
+            o = paged.paged_decode_attention_chunked(q, k_l, v_l, bt,
+                                                     attend_len)
+        else:
+            o = paged.paged_decode_attention(q, k_l, v_l, bt, attend_len)
+        o = o.reshape(B, cfg.num_heads * cfg.head_dim)
+        q_entry = q
+    # observation-window query write (ring at qring_pos) for slots w/ qslot
+    qw_l = _dyn(qwin, a_idx)                                  # (M, w, hq, dq)
+    Mq, w = qw_l.shape[0], qw_l.shape[1]
+    qs = jnp.where(qslot >= 0, qslot, Mq)
+    qw_flat = qw_l.reshape(Mq * w, *qw_l.shape[2:])
+    qidx = jnp.where(qslot >= 0, qs * w + qring_pos % w, Mq * w)
+    qw_flat = qw_flat.at[qidx].set(q_entry.astype(qw_flat.dtype), mode="drop")
+    carry = dict(carry, pools=pools,
+                 qwin=_dyn_set(qwin, qw_flat.reshape(qw_l.shape), a_idx))
+    return o @ p["wo"].astype(x.dtype), carry
+
+
+def _decode_rec(cfg, p, x, carry, r_idx, kind, active):
+    rec = carry["rec"]
+    if kind == "rglru":
+        stl = {"h": _dyn(rec["h"], r_idx), "conv": _dyn(rec["conv"], r_idx)}
+        out, new = ML.rglru_step(cfg, p, x, stl)
+    else:
+        stl = {"S": _dyn(rec["S"], r_idx), "shift": _dyn(rec["shift"], r_idx)}
+        out, new = ML.rwkv_step(cfg, p, x, stl)
+    # freeze state for inactive slots
+    new = jax.tree.map(
+        lambda n, o: jnp.where(
+            active.reshape((-1,) + (1,) * (n.ndim - 1)), n, o), new, stl)
+    rec = {k: _dyn_set(rec[k], new[k], r_idx) for k in rec}
+    return out, dict(carry, rec=rec)
+
+
+def _decode_cross(cfg, p, x, carry, l_idx):
+    ck = _dyn(carry["cross_kv"]["k"], l_idx)      # (B, Sm, h, d)
+    cv = _dyn(carry["cross_kv"]["v"], l_idx)
+    B = x.shape[0]
+    hq, hkv, dh = cfg.num_heads, cfg.num_kv_heads, cfg.head_dim
+    q = (x @ p["wq"].astype(x.dtype)).reshape(B, hq, dh)
+    g = hq // hkv
+    qg = q.reshape(B, hkv, g, dh).astype(jnp.float32)
+    s = jnp.einsum("bhgd,bmhd->bhgm", qg, ck.astype(jnp.float32)) / np.sqrt(dh)
+    a = jax.nn.softmax(s, -1)
+    o = jnp.einsum("bhgm,bmhd->bhgd", a, cv.astype(jnp.float32))
+    o = o.reshape(B, hq * dh).astype(x.dtype)
+    return o @ p["wo"].astype(x.dtype)
+
+
+def build_decode_step(cfg: ArchConfig, spec: ServeSpec):
+    """decode_step(params, state, tokens, active) -> (logits, new_state).
+
+    tokens: (B,) int32; active: (B,) bool. Inactive slots produce garbage
+    logits and leave all their state untouched.
+    """
+    lay = stage_layout(cfg)
+    plan = lay["plan"]
+    b = spec.block_size
+    ring = spec.ring_blocks(cfg) * b if cfg.local_window else 0
+
+    def layer_apply(p, x, carry, kind, ffn_kind, a_idx, r_idx, l_idx,
+                    ctx):
+        active, positions = ctx
+        h = apply_norm(cfg, p["ln1"], x)
+        if kind == "attn":
+            if ring:
+                write_pos = jnp.where(active, positions % ring, -1)
+                attend_len = jnp.minimum(positions + 1, ring)
+            else:
+                write_pos = jnp.where(active, carry["seq_lens"], -1)
+                attend_len = carry["seq_lens"] + 1
+            mix, carry = _decode_attn(cfg, spec, p["attn"], h, carry, a_idx,
+                                      write_pos, attend_len, positions,
+                                      carry["seq_lens"], carry["qslot"])
+        else:
+            mix, carry = _decode_rec(cfg, p[kind], h, carry, r_idx, kind,
+                                     active)
+        x = x + mix
+        if "cross" in p:
+            x = x + _decode_cross(cfg, p["cross"],
+                                  apply_norm(cfg, p["ln_x"], x), carry, l_idx)
+        h2 = apply_norm(cfg, p["ln2"], x)
+        if ffn_kind == "moe":
+            x = x + ML.moe_forward(cfg, p["moe"], h2[:, None],
+                                   valid=active[:, None])[:, 0]
+        else:
+            x = x + ML.ffn_forward(cfg, p["ffn"], h2)
+        return x, carry
+
+    def step(params, state, tokens, active):
+        dt = jnp.dtype(spec.dtype)
+        x = params["embed"].astype(dt)[tokens]
+        positions = state["positions"]
+        carry = {k: state[k] for k in
+                 ("pools", "qwin", "rec", "cross_kv", "block_tables",
+                  "seq_lens", "qslot") if k in state}
+        ctx = (active, positions)
+        a_i, r_i, l_i = 0, 0, 0
+        for p_, (kind, ffn) in zip(params.get("head", []), plan["head"]):
+            x, carry = layer_apply(p_, x, carry, kind, ffn, a_i, r_i, l_i, ctx)
+            a_i += int(kind == "attn"); r_i += int(kind != "attn"); l_i += 1
+
+        if plan["n_units"]:
+            a0, r0, l0 = a_i, r_i, l_i
+            au, ru = lay["a_unit"], lay["r_unit"]
+            nu = plan["n_units"]
+
+            def body(c2, xs):
+                x, carry = c2
+                unit_p, uidx = xs
+                aa, rr, ll = a0 + uidx * au, r0 + uidx * ru, l0 + uidx * len(plan["unit"])
+                for j, (kind, ffn) in enumerate(plan["unit"]):
+                    na = sum(1 for kk, _ in plan["unit"][:j] if kk == "attn")
+                    x, carry = layer_apply(unit_p[str(j)], x, carry, kind, ffn,
+                                           aa + na, rr + (j - na), ll + j, ctx)
+                return (x, carry), None
+
+            (x, carry), _ = jax.lax.scan(
+                body, (x, carry), (params["main"], jnp.arange(nu)))
+            a_i += nu * au; r_i += nu * ru; l_i += nu * len(plan["unit"])
+        for p_, (kind, ffn) in zip(params.get("tail", []), plan["tail"]):
+            x, carry = layer_apply(p_, x, carry, kind, ffn, a_i, r_i, l_i, ctx)
+            a_i += int(kind == "attn"); r_i += int(kind != "attn"); l_i += 1
+
+        x = apply_norm(cfg, params["final_norm"], x)
+        logits = (x @ lm.unembed_matrix(cfg, params).astype(x.dtype)
+                  ).astype(jnp.float32)
+        inc = active.astype(jnp.int32)
+        new_state = dict(state)
+        new_state.update({k: carry[k] for k in carry})
+        new_state["seq_lens"] = jnp.where(
+            ring > 0, jnp.minimum(state["seq_lens"] + inc, ring),
+            state["seq_lens"] + inc) if ring else state["seq_lens"] + inc
+        new_state["positions"] = state["positions"] + inc
+        return logits, new_state
+
+    return step
+
+
+# ----------------------------------------------------------------------
+# prefill
+
+def build_prefill_step(cfg: ArchConfig, spec: ServeSpec):
+    """prefill_step(params, state, tokens, slot_ids, lengths, start_pos,
+    [frame_embeds]) -> (last_logits, new_state).
+
+    tokens: (P, S) padded prompts (suffix after any shared prefix);
+    slot_ids: (P,) destination slots (-1 = padding row); lengths: (P,) valid
+    suffix length; start_pos: (P,) tokens already cached (prefix-cache hits).
+    The caller must have installed block tables / seq_lens for these slots
+    BEFORE calling (seq_lens[slot] = start_pos + length).
+    """
+    lay = stage_layout(cfg)
+    plan = lay["plan"]
+    b = spec.block_size
+    ring = spec.ring_blocks(cfg) * b if cfg.local_window else 0
+    w_obs = spec.window
+
+    def gather_slot(arr, slot_ids):
+        return arr[jnp.maximum(slot_ids, 0)]
+
+    def layer_apply(p, x, carry, kind, ffn_kind, a_idx, r_idx, l_idx, ctx):
+        slot_ids, lengths, start_pos, positions, valid, memory = ctx
+        P, S, _ = x.shape
+        h = apply_norm(cfg, p["ln1"], x)
+        if kind == "attn":
+            mix, carry = _prefill_attn(p["attn"], h, carry, a_idx, ctx)
+        else:
+            mix, carry = _prefill_rec(p[kind], h, carry, r_idx, kind, ctx)
+        x = x + mix
+        if "cross" in p:
+            xm = apply_norm(cfg, p["ln_x"], x)
+            mem_o = ML.cross_attn_forward(cfg, p["cross"], xm, memory)
+            x = x + mem_o
+            carry = _store_cross(p["cross"], memory, carry, l_idx, slot_ids)
+        h2 = apply_norm(cfg, p["ln2"], x)
+        if ffn_kind == "moe":
+            x = x + ML.moe_forward(cfg, p["moe"], h2,
+                                   valid=valid & (slot_ids >= 0)[:, None])
+        else:
+            x = x + ML.ffn_forward(cfg, p["ffn"], h2)
+        return x, carry
+
+    def _store_cross(p, memory, carry, l_idx, slot_ids):
+        hkv, dh = cfg.num_kv_heads, cfg.head_dim
+        P, Sm, _ = memory.shape
+        k = (memory @ p["wk"].astype(memory.dtype)).reshape(P, Sm, hkv, dh)
+        v = (memory @ p["wv"].astype(memory.dtype)).reshape(P, Sm, hkv, dh)
+        ck = _dyn(carry["cross_kv"]["k"], l_idx)
+        cv = _dyn(carry["cross_kv"]["v"], l_idx)
+        sid = jnp.where(slot_ids >= 0, slot_ids, ck.shape[0])
+        ck = ck.at[sid].set(k.astype(ck.dtype), mode="drop")
+        cv = cv.at[sid].set(v.astype(cv.dtype), mode="drop")
+        cross = {"k": _dyn_set(carry["cross_kv"]["k"], ck, l_idx),
+                 "v": _dyn_set(carry["cross_kv"]["v"], cv, l_idx)}
+        return dict(carry, cross_kv=cross)
+
+    def _prefill_attn(p, h, carry, a_idx, ctx):
+        slot_ids, lengths, start_pos, positions, valid, _ = ctx
+        P, S, _ = h.shape
+        bt = gather_slot(carry["block_tables"], slot_ids)
+        pools = carry["pools"]
+        if cfg.attn_type == "mla":
+            r, dr = cfg.kv_lora_rank, cfg.qk_rope_head_dim
+            dh, dv = cfg.head_dim, cfg.v_head_dim
+            q_nope, q_rope = ML.mla_queries(cfg, p, h, positions)
+            c, k_rope = ML.mla_latent(cfg, p, h, positions)
+            entry = jnp.concatenate([c, k_rope], -1)        # (P, S, r+dr)
+            kv_l = _dyn(pools["kv"], a_idx)
+            wpos = jnp.where(valid & (slot_ids >= 0)[:, None],
+                             start_pos[:, None] + jnp.arange(S)[None], -1)
+            kv_l = _scatter_prefill_pos(kv_l, bt, wpos, entry)
+            pools = dict(pools, kv=_dyn_set(pools["kv"], kv_l, a_idx))
+            # attention: expanded form over own chunk + paged for prefix
+            w_uk = p["w_uk"].reshape(r, cfg.num_heads, dh)
+            q_abs = jnp.einsum("bshd,rhd->bshr", q_nope.astype(jnp.float32),
+                               w_uk.astype(jnp.float32)).astype(h.dtype)
+            q_full = jnp.concatenate([q_abs, q_rope], -1)   # (P,S,hq,r+dr)
+            scale = 1.0 / np.sqrt(dh + dr)
+            o_lat = _paged_prefill_mla(q_full, kv_l, bt, start_pos,
+                                       start_pos + lengths, r, scale)
+            w_uv = p["w_uv"].reshape(r, cfg.num_heads, dv)
+            o = jnp.einsum("bshr,rhd->bshd", o_lat.astype(jnp.float32),
+                           w_uv.astype(jnp.float32))
+            o = o.reshape(P, S, cfg.num_heads * dv).astype(h.dtype)
+            q_entry = q_full
+        else:
+            q, k, v = ML.attn_qkv(cfg, p, h)
+            q = apply_rope(q, positions, cfg.rope_theta)
+            k = apply_rope(k, positions, cfg.rope_theta)
+            if spec.kv_replication > 1:
+                k = jnp.repeat(k, spec.kv_replication, axis=2)
+                v = jnp.repeat(v, spec.kv_replication, axis=2)
+            if ring:
+                wpos = positions % ring
+                keep = positions >= (start_pos + lengths - ring)[:, None]
+                wpos = jnp.where(valid & keep & (slot_ids >= 0)[:, None],
+                                 wpos, -1)
+            else:
+                wpos = jnp.where(valid & (slot_ids >= 0)[:, None],
+                                 start_pos[:, None] + jnp.arange(S)[None], -1)
+            k_l = _scatter_prefill_pos(_dyn(pools["k"], a_idx), bt, wpos, k)
+            v_l = _scatter_prefill_pos(_dyn(pools["v"], a_idx), bt, wpos, v)
+            pools = dict(pools, k=_dyn_set(pools["k"], k_l, a_idx),
+                         v=_dyn_set(pools["v"], v_l, a_idx))
+            if ring:
+                o = chunked_causal_attention(q, k, v,
+                                             local_window=cfg.local_window)
+            else:
+                o = paged.paged_prefill_attention(
+                    q, k_l, v_l, bt, start_pos, start_pos + lengths)
+            o = o.reshape(P, S, cfg.num_heads * cfg.head_dim)
+            q_entry = q
+        # seed observation window with the last w_obs valid queries
+        qwin = carry["qwin"]
+        qw_l = _dyn(qwin, a_idx)
+        Mq = qw_l.shape[0]
+        qslot = gather_slot(carry["qslot"], slot_ids)
+        # cache position of each query = start_pos + s
+        cache_pos = start_pos[:, None] + jnp.arange(S)[None]
+        end = (start_pos + lengths)[:, None]
+        in_win = valid & (cache_pos >= end - w_obs)
+        ring_idx = cache_pos % w_obs
+        qs = jnp.where((qslot >= 0) & (slot_ids >= 0), qslot, Mq)
+        flat_idx = jnp.where(in_win, qs[:, None] * w_obs + ring_idx, Mq * w_obs)
+        qw_flat = qw_l.reshape(Mq * w_obs, *qw_l.shape[2:])
+        qw_flat = qw_flat.at[flat_idx.reshape(-1)].set(
+            q_entry.reshape((-1,) + q_entry.shape[2:]).astype(qw_flat.dtype),
+            mode="drop")
+        carry = dict(carry, pools=pools,
+                     qwin=_dyn_set(qwin, qw_flat.reshape(qw_l.shape), a_idx))
+        return o @ p["wo"].astype(h.dtype), carry
+
+    def _prefill_rec(p, h, carry, r_idx, kind, ctx):
+        slot_ids, lengths, start_pos, positions, valid, _ = ctx
+        P, S, _ = h.shape
+        rec = carry["rec"]
+        if kind == "rglru":
+            xw = causal_conv_masked(p, h @ p["wx"].astype(h.dtype), valid)
+            a, bb = ML._rglru_gates(cfg, p, xw)
+            a = jnp.where(valid[..., None], a, 1.0)
+            bb = jnp.where(valid[..., None], bb, 0.0)
+            def comb(l, r_):
+                al, bl = l
+                ar, br = r_
+                return al * ar, bl * ar + br
+            _, hs = jax.lax.associative_scan(comb, (a, bb), axis=1)
+            gate = jax.nn.gelu((h @ p["wy_gate"].astype(h.dtype))
+                               .astype(jnp.float32))
+            out = (hs * gate).astype(h.dtype) @ p["wo"].astype(h.dtype)
+            # final state at last valid position
+            last = jnp.maximum(lengths - 1, 0)
+            h_last = jnp.take_along_axis(hs, last[:, None, None], 1)[:, 0]
+            # conv state: last cw-1 inputs (xw pre-conv? conv uses raw xw ins)
+            xw_raw = h @ p["wx"].astype(h.dtype)
+            xw_raw = jnp.where(valid[..., None], xw_raw, 0)
+            cw = cfg.conv1d_width
+            idx = last[:, None] - jnp.arange(cw - 2, -1, -1)[None]
+            conv_st = jnp.take_along_axis(
+                xw_raw, jnp.maximum(idx, 0)[..., None], 1)
+            conv_st = jnp.where((idx >= 0)[..., None], conv_st, 0)
+            sid = jnp.where(slot_ids >= 0, slot_ids, rec["h"].shape[1])
+            h_all = _dyn(rec["h"], r_idx).at[sid].set(h_last, mode="drop")
+            c_all = _dyn(rec["conv"], r_idx).at[sid].set(
+                conv_st.astype(rec["conv"].dtype), mode="drop")
+            rec = dict(rec, h=_dyn_set(rec["h"], h_all, r_idx),
+                       conv=_dyn_set(rec["conv"], c_all, r_idx))
+            return out, dict(carry, rec=rec)
+        else:  # rwkv — chunked matmul form (state round-trips /chunk;
+            #        EXPERIMENTS.md §Perf iteration A)
+            chunk = 64 if S % 64 == 0 else (
+                32 if S % 32 == 0 else (S if S < 32 else 1))
+            if chunk > 1:
+                out, S_fin = ML.rwkv_forward(cfg, p, h, chunk=chunk,
+                                             valid=valid, return_state=True)
+            else:
+                out, S_fin = _rwkv_prefill_naive(cfg, p, h, valid)
+            last = jnp.maximum(lengths - 1, 0)
+            shift = jnp.take_along_axis(h, last[:, None, None], 1)[:, 0]
+            sid = jnp.where(slot_ids >= 0, slot_ids, rec["S"].shape[1])
+            S_all = _dyn(rec["S"], r_idx).at[sid].set(S_fin, mode="drop")
+            sh_all = _dyn(rec["shift"], r_idx).at[sid].set(
+                shift.astype(rec["shift"].dtype), mode="drop")
+            rec = dict(rec, S=_dyn_set(rec["S"], S_all, r_idx),
+                       shift=_dyn_set(rec["shift"], sh_all, r_idx))
+            return out, dict(carry, rec=rec)
+
+    def causal_conv_masked(p, xw, valid):
+        xw = jnp.where(valid[..., None], xw, 0)
+        return ML.causal_conv1d(p, xw)
+
+    def step(params, state, tokens, slot_ids, lengths, start_pos,
+             frame_embeds=None, prefix_embeds=None):
+        dt = jnp.dtype(spec.dtype)
+        P, S = tokens.shape
+        x = params["embed"].astype(dt)[tokens]
+        if prefix_embeds is not None:
+            # VLM patch prefix occupies cache positions [0, n_patch); only
+            # fresh (start_pos == 0) rows prepend it.
+            npfx = prefix_embeds.shape[1]
+            x = jnp.concatenate([prefix_embeds.astype(dt), x], axis=1)
+            S = S + npfx
+            lengths = lengths + npfx
+        positions = start_pos[:, None] + jnp.arange(S)[None]
+        valid = jnp.arange(S)[None] < lengths[:, None]
+        memory = None
+        if cfg.is_enc_dec:
+            memory = lm.encode(cfg, params, frame_embeds)
+        carry = {k: state[k] for k in
+                 ("pools", "qwin", "rec", "cross_kv", "block_tables",
+                  "seq_lens", "qslot") if k in state}
+        ctx = (slot_ids, lengths, start_pos, positions, valid, memory)
+        a_i, r_i, l_i = 0, 0, 0
+        for p_, (kind, ffn) in zip(params.get("head", []), plan["head"]):
+            x, carry = layer_apply(p_, x, carry, kind, ffn, a_i, r_i, l_i, ctx)
+            a_i += int(kind == "attn"); r_i += int(kind != "attn"); l_i += 1
+        if plan["n_units"]:
+            a0, r0, l0 = a_i, r_i, l_i
+            au, ru = lay["a_unit"], lay["r_unit"]
+            nu = plan["n_units"]
+
+            def body(c2, xs):
+                x, carry = c2
+                unit_p, uidx = xs
+                aa, rr, ll = a0 + uidx * au, r0 + uidx * ru, \
+                    l0 + uidx * len(plan["unit"])
+                for j, (kind, ffn) in enumerate(plan["unit"]):
+                    na = sum(1 for kk, _ in plan["unit"][:j] if kk == "attn")
+                    x, carry = layer_apply(unit_p[str(j)], x, carry, kind,
+                                           ffn, aa + na, rr + (j - na),
+                                           ll + j, ctx)
+                return (x, carry), None
+
+            (x, carry), _ = jax.lax.scan(
+                body, (x, carry), (params["main"], jnp.arange(nu)))
+            a_i += nu * au; r_i += nu * ru; l_i += nu * len(plan["unit"])
+        for p_, (kind, ffn) in zip(params.get("tail", []), plan["tail"]):
+            x, carry = layer_apply(p_, x, carry, kind, ffn, a_i, r_i, l_i, ctx)
+            a_i += int(kind == "attn"); r_i += int(kind != "attn"); l_i += 1
+        x = apply_norm(cfg, params["final_norm"], x)
+        # last valid token's logits per row
+        last = jnp.maximum(lengths - 1, 0)
+        x_last = jnp.take_along_axis(x, last[:, None, None], 1)[:, 0]
+        logits = (x_last @ lm.unembed_matrix(cfg, params).astype(x.dtype)
+                  ).astype(jnp.float32)
+        new_state = dict(state)
+        new_state.update(carry)
+        return logits, new_state
+
+    return step
+
+
+def _rwkv_prefill_naive(cfg, p, h, valid):
+    """O(S) token scan fallback for chunk-incompatible lengths."""
+    P, S, _ = h.shape
+    x_prev = jnp.pad(h, ((0, 0), (1, 0), (0, 0)))[:, :-1]
+    r, k, v, g, logw = ML._rwkv_proj(cfg, p, h, x_prev)
+    hh, K = cfg.num_heads, cfg.head_dim
+    rh = r.reshape(P, S, hh, K).astype(jnp.float32)
+    kh = k.reshape(P, S, hh, K).astype(jnp.float32)
+    vh = v.reshape(P, S, hh, K).astype(jnp.float32)
+    logw = jnp.where(valid[..., None], logw, 0.0)
+    kh = jnp.where(valid[..., None, None], kh, 0.0)
+    wh = jnp.exp(logw.reshape(P, S, hh, K))
+    u = p["u"]
+
+    def stp(Sst, inp):
+        rt, kt, vt, wt = inp
+        kv = jnp.einsum("bhk,bhv->bhkv", kt, vt)
+        yt = jnp.einsum("bhk,bhkv->bhv", rt, Sst + u[None, :, :, None] * kv)
+        return wt[..., None] * Sst + kv, yt
+
+    S0 = jnp.zeros((P, hh, K, K), jnp.float32)
+    S_fin, y = jax.lax.scan(
+        stp, S0, (rh.transpose(1, 0, 2, 3), kh.transpose(1, 0, 2, 3),
+                  vh.transpose(1, 0, 2, 3), wh.transpose(1, 0, 2, 3)))
+    y = y.transpose(1, 0, 2, 3)
+    return ML._rwkv_out(cfg, p, y, g, P, S), S_fin
+
+
+def _scatter_prefill_pos(pool, bt, wpos, values):
+    """Scatter (P, S, ...) values at explicit cache positions wpos (P, S);
+    wpos < 0 dropped. bt: (P, max_blocks)."""
+    b = pool.shape[1]
+    blk = jnp.take_along_axis(bt, jnp.maximum(wpos, 0) // b, 1)
+    idx = blk * b + jnp.maximum(wpos, 0) % b
+    idx = jnp.where(wpos >= 0, idx, pool.shape[0] * b)
+    flat = pool.reshape((-1,) + pool.shape[2:])
+    flat = flat.at[idx.reshape(-1)].set(
+        values.reshape((-1,) + values.shape[2:]).astype(pool.dtype),
+        mode="drop")
+    return flat.reshape(pool.shape)
+
+
+def _paged_prefill_mla(q_full, kv_pool, bt, q_start, kv_lens, r, scale):
+    """MLA prefill attention in absorbed space against the pool. Contracts
+    the FULL (r+dr)-wide entries so the sharded latent dim is never sliced
+    (§Perf iteration D — see paged.paged_decode_attention_mla)."""
+    P, S, hq, _ = q_full.shape
+    entries = paged.gather_entries(kv_pool, bt)      # (P, T, r+dr)
+    T = entries.shape[1]
+    from repro.models import moe_ctx
+    qspec = moe_ctx.mla_q_spec.get()
+    if qspec is not None:
+        q_full = jax.lax.with_sharding_constraint(q_full, qspec)
+    s = jnp.einsum("bshe,bte->bhst", q_full.astype(jnp.float32),
+                   entries.astype(jnp.float32)) * scale
+    qpos = q_start[:, None] + jnp.arange(S)[None]
+    kpos = jnp.arange(T)[None]
+    mask = (kpos[:, None] <= qpos[..., None]) & \
+        (kpos[:, None] < kv_lens[:, None, None])
+    s = jnp.where(mask[:, None], s, paged.NEG_INF)
+    pr = jax.nn.softmax(s, -1)
+    o = jnp.einsum("bhst,bte->bshe", pr, entries.astype(jnp.float32))
+    return o[..., :r].astype(q_full.dtype)

@@ -1,0 +1,251 @@
+"""Loop-aware HLO cost analysis.
+
+XLA's ``compiled.cost_analysis()`` counts every ``while`` body ONCE
+(verified: a 10-iteration scan of a 4.2-MFLOP matmul reports 4.2 MFLOPs).
+Our models scan over layers, loss chunks and attention chunks, so raw
+numbers under-report by 1-2 orders of magnitude. This module re-derives
+flops / bytes / collective-bytes from ``compiled.as_text()`` with loop trip
+counts honored (``backend_config known_trip_count``, emitted by XLA for all
+lax.scan loops).
+
+Scope (documented approximations):
+  * flops: dot ops only (2 · prod(result) · contracted); elementwise ops are
+    negligible next to matmuls for these models;
+  * bytes: operand+result bytes of ops in *execution* computations (entry,
+    while bodies, conditional branches); fusion internals excluded — this
+    mirrors XLA's bytes-accessed definition post-fusion;
+  * collective bytes: result-shape bytes × kind factor (all-reduce 2×,
+    others 1×) — ring-algorithm wire traffic per chip.
+Shapes in the post-SPMD module are per-partition, so every number is
+per-chip.
+"""
+from __future__ import annotations
+
+import dataclasses
+import json
+import re
+from collections import defaultdict
+
+_DTYPE_BYTES = {
+    "pred": 1, "s4": 1, "u4": 1, "s8": 1, "u8": 1, "s16": 2, "u16": 2,
+    "bf16": 2, "f16": 2, "s32": 4, "u32": 4, "f32": 4, "s64": 8, "u64": 8,
+    "f64": 8, "c64": 8, "c128": 16, "f8e4m3fn": 1, "f8e5m2": 1,
+}
+
+_COMP_HDR = re.compile(r"^(?:ENTRY\s+)?%?([\w\.\-]+)\s*\(.*\)\s*->.*\{\s*$")
+_OP_LHS = re.compile(r"^\s*(?:ROOT\s+)?%([\w\.\-]+)\s*=\s*(.*)$")
+_OP_KIND = re.compile(r"(?<!%)\b([a-z][\w\-]*)\(")
+_SHAPE_RE = re.compile(r"(\w+)\[([\d,]*)\]")
+_CALLS_RE = re.compile(r"calls=%?([\w\.\-]+)")
+_BODY_RE = re.compile(r"body=%?([\w\.\-]+)")
+_COND_RE = re.compile(r"condition=%?([\w\.\-]+)")
+_TRIP_RE = re.compile(r'known_trip_count[^\d]*(\d+)')
+_BRANCH_RE = re.compile(r"branch_computations=\{([^}]*)\}")
+_CDIM_RE = re.compile(r"lhs_contracting_dims=\{([\d,]*)\}")
+_OPERAND_RE = re.compile(r"%([\w\.\-]+)")
+_PARAM_RE = re.compile(r"([\w\.\-]+):\s*(\(?[^,)]*(?:\[[\d,]*\])[^,)]*\)?)")
+
+COLLECTIVES = ("all-reduce", "all-gather", "reduce-scatter", "all-to-all",
+               "collective-permute", "ragged-all-to-all")
+_WIRE_FACTOR = {"all-reduce": 2.0}
+
+
+def _shape_elems_bytes(shape_str):
+    total_b = 0
+    for m in _SHAPE_RE.finditer(shape_str):
+        dt, dims = m.group(1), m.group(2)
+        if dt not in _DTYPE_BYTES:
+            continue
+        n = 1
+        for d in dims.split(","):
+            if d:
+                n *= int(d)
+        total_b += n * _DTYPE_BYTES[dt]
+    return total_b
+
+
+def _shape_dims(shape_str):
+    """First array shape's dims (for dot result/operands)."""
+    m = _SHAPE_RE.search(shape_str)
+    if not m:
+        return None
+    return [int(d) for d in m.group(2).split(",") if d]
+
+
+@dataclasses.dataclass
+class Op:
+    name: str
+    shape: str
+    kind: str
+    rest: str
+
+
+@dataclasses.dataclass
+class Comp:
+    name: str
+    ops: list
+    shapes: dict                      # value name -> shape str
+    is_fusion_target: bool = False
+
+
+def parse_module(text: str):
+    comps = {}
+    cur = None
+    for line in text.splitlines():
+        if cur is None:
+            m = _COMP_HDR.match(line.strip()) if "{" in line else None
+            if m and "->" in line:
+                cur = Comp(m.group(1), [], {})
+                # parameter shapes from header
+                inner = line[line.find("(") + 1:line.rfind(")->")
+                             if ")->" in line else line.rfind(") ->")]
+                for pm in _PARAM_RE.finditer(inner):
+                    cur.shapes[pm.group(1)] = pm.group(2)
+            continue
+        s = line.strip()
+        if s == "}":
+            comps[cur.name] = cur
+            cur = None
+            continue
+        m = _OP_LHS.match(line)
+        if m:
+            rhs = m.group(2)
+            km = _OP_KIND.search(rhs)
+            if not km:
+                continue
+            op = Op(m.group(1), rhs[:km.start()].strip(), km.group(1),
+                    rhs[km.end():])
+            cur.ops.append(op)
+            cur.shapes[op.name] = op.shape
+    return comps
+
+
+def _dot_flops(op: Op, comp: Comp):
+    res = _shape_dims(op.shape)
+    if res is None:
+        return 0
+    n_res = 1
+    for d in res:
+        n_res *= d
+    cm = _CDIM_RE.search(op.rest)
+    contracted = 1
+    # operand 0 shape
+    ops = _OPERAND_RE.findall(op.rest.split(")")[0])
+    if ops:
+        lhs_shape = comp.shapes.get(ops[0])
+        if lhs_shape:
+            dims = _shape_dims(lhs_shape)
+            if dims and cm:
+                for idx in cm.group(1).split(","):
+                    if idx and int(idx) < len(dims):
+                        contracted *= dims[int(idx)]
+    return 2.0 * n_res * contracted
+
+
+def analyze(text: str):
+    comps = parse_module(text)
+    entry = None
+    for name, c in comps.items():
+        if "main" in name:
+            entry = name
+    if entry is None and comps:
+        entry = list(comps)[-1]
+
+    # multipliers via worklist from entry
+    mult = defaultdict(float)
+    mult[entry] = 1.0
+    exec_comps = {entry}
+    order = [entry]
+    seen = {entry}
+    i = 0
+    while i < len(order):
+        cname = order[i]
+        i += 1
+        c = comps.get(cname)
+        if c is None:
+            continue
+        for op in c.ops:
+            children = []
+            if op.kind == "while":
+                body = _BODY_RE.search(op.rest)
+                cond = _COND_RE.search(op.rest)
+                trip = _TRIP_RE.search(op.rest)
+                n = float(trip.group(1)) if trip else 1.0
+                if body:
+                    children.append((body.group(1), n, True))
+                if cond:
+                    children.append((cond.group(1), n, True))
+            elif op.kind == "conditional":
+                bm = _BRANCH_RE.search(op.rest)
+                if bm:
+                    for b in _OPERAND_RE.findall(bm.group(1)):
+                        children.append((b, 1.0, True))
+            else:
+                cm = _CALLS_RE.search(op.rest)
+                if cm:
+                    # fusion targets: flops counted, bytes not
+                    children.append((cm.group(1), 1.0, op.kind != "fusion"))
+            for child, factor, is_exec in children:
+                mult[child] += mult[cname] * factor
+                if is_exec:
+                    exec_comps.add(child)
+                if child not in seen:
+                    seen.add(child)
+                    order.append(child)
+
+    def _root_kind(comp_name):
+        c = comps.get(comp_name)
+        return c.ops[-1].kind if c and c.ops else ""
+
+    _INPLACE = ("dynamic-update-slice", "scatter")
+    _GATHERY = ("gather", "dynamic-slice")
+    # dtype/layout artifacts: the CPU backend lowers bf16 arithmetic to f32
+    # with explicit convert/copy/bitcast chains that a TPU compile fuses
+    # away — counting them would charge phantom HBM traffic (DESIGN.md §7)
+    _LAYOUTY = ("convert", "copy", "bitcast", "transpose", "reshape",
+                "broadcast", "slice", "concatenate", "iota", "compare",
+                "select", "reduce-window")
+
+    flops = 0.0
+    bytes_accessed = 0.0
+    coll = defaultdict(float)
+    for cname, c in comps.items():
+        m = mult.get(cname, 0.0)
+        if m == 0.0:
+            continue
+        for op in c.ops:
+            if op.kind in ("dot", "convolution"):
+                flops += m * _dot_flops(op, c)
+            if op.kind in COLLECTIVES:
+                wire = _shape_elems_bytes(op.shape) * \
+                    _WIRE_FACTOR.get(op.kind, 1.0)
+                coll[op.kind] += m * wire
+            if cname in exec_comps and op.kind not in (
+                    "parameter", "constant", "tuple", "get-tuple-element",
+                    "bitcast", "while", "conditional"):
+                # while/conditional shells pass the whole loop carry by
+                # reference — not HBM traffic; their bodies are counted.
+                eff = op.kind
+                if op.kind == "fusion":
+                    cm = _CALLS_RE.search(op.rest)
+                    if cm:
+                        eff = _root_kind(cm.group(1))
+                if eff in _LAYOUTY:
+                    continue
+                ops_str = op.rest.split(")")[0]
+                operands = [_shape_elems_bytes(c.shapes.get(o, ""))
+                            for o in _OPERAND_RE.findall(ops_str)]
+                if eff in _INPLACE:
+                    # in-place update: read+write the update region only,
+                    # the big buffer operand/result are aliased
+                    big = max(operands) if operands else 0
+                    b = 2.0 * (sum(operands) - big)
+                elif eff in _GATHERY:
+                    # reads exactly the gathered rows (+ writes the result)
+                    b = 2.0 * _shape_elems_bytes(op.shape)
+                else:
+                    b = _shape_elems_bytes(op.shape) + sum(operands)
+                bytes_accessed += m * b
+    coll["total"] = sum(v for k, v in coll.items() if k != "total")
+    return {"flops": flops, "bytes": bytes_accessed,
+            "collectives": dict(coll)}

@@ -1,0 +1,206 @@
+"""Sharding rules: logical param axes -> mesh PartitionSpecs with
+divisibility fallbacks.
+
+Rules are name+shape driven so they survive the stacked-stage layout (rules
+apply to TRAILING dims; leading scan/stack dims stay unsharded). When a
+tensor's natural TP sharding is invalid for an arch (recurrentgemma's 10
+q-heads on a 16-way model axis, whisper's 6 heads, rwkv6's 40 wkv heads),
+the rule falls back per-tensor — FFN/vocab still shard while attention
+replicates — instead of failing the arch (DESIGN.md §5).
+
+ZeRO-1: optimizer moments take the param spec plus the first still-open,
+divisible dim sharded over the data axes.
+"""
+from __future__ import annotations
+
+import re
+from typing import Optional
+
+import jax
+import numpy as np
+from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
+
+
+def _axis_size(mesh, name):
+    return mesh.shape[name] if name in mesh.shape else 1
+
+
+def _tp(mesh):
+    return _axis_size(mesh, "model")
+
+
+def _data_axes(mesh):
+    return tuple(a for a in ("pod", "data") if a in mesh.shape)
+
+
+def param_spec(cfg, path: str, shape, mesh) -> P:
+    """PartitionSpec for one param leaf (trailing-dims semantics)."""
+    tp = _tp(mesh)
+    nd = len(shape)
+    name = path.split("/")[-1]
+    parent = path.split("/")[-2] if "/" in path else ""
+
+    def spec_on(dim_from_end, ok):
+        if not ok or tp == 1:
+            return P()
+        dim = nd + dim_from_end
+        if shape[dim] % tp != 0:
+            return P()
+        out = [None] * nd
+        out[dim] = "model"
+        return P(*out)
+
+    hq, hkv = cfg.num_heads, cfg.num_kv_heads
+    heads_ok = hq and hq % tp == 0
+    kv_ok = hkv and hkv % tp == 0
+
+    if name == "embed" or name == "unembed":
+        # vocab dim over model (logit/embedding parallelism)
+        vdim = 0 if name == "embed" else 1
+        if shape[vdim] % tp == 0 and tp > 1:
+            out = [None] * nd
+            out[vdim] = "model"
+            return P(*out)
+        return P()
+    if parent == "moe" or parent == "shared":
+        if name in ("w1", "w3", "w2") and parent == "moe":
+            # experts over model (EP)
+            edim = nd - 3
+            if shape[edim] % tp == 0 and tp > 1:
+                out = [None] * nd
+                out[edim] = "model"
+                return P(*out)
+            return P()
+        if name in ("w1", "w3"):
+            return spec_on(-1, True)
+        if name == "w2":
+            return spec_on(-2, True)
+        return P()
+    if name in ("wq",):
+        return spec_on(-1, heads_ok)
+    if name in ("wk", "wv"):
+        return spec_on(-1, kv_ok)
+    if name in ("w_uk", "w_uv"):
+        return spec_on(-1, heads_ok)
+    if name == "wo":
+        return spec_on(-2, heads_ok)
+    if name in ("bq",):
+        return spec_on(-1, heads_ok)
+    if name in ("bk", "bv"):
+        return spec_on(-1, kv_ok)
+    if name in ("w1", "w3"):                   # dense ffn
+        return spec_on(-1, True)
+    if name == "w2":
+        return spec_on(-2, True)
+    if name in ("wx", "wy_gate", "conv_w"):    # rg-lru channels
+        return spec_on(-1, True)
+    if name in ("w_r", "w_k", "w_v", "w_g", "w_lora_b"):   # rwkv mixer
+        # NOTE (§Perf iteration A2, REFUTED): replicating these to kill the
+        # head-misalignment collectives made the memory term 6x WORSE
+        # (replicated chunk-scan compute on every model rank) without
+        # removing the collectives. Sharded is the better operating point.
+        return spec_on(-1, True)
+    if name == "w_o":
+        return spec_on(-2, True)
+    return P()                                  # norms, gates, router, ...
+
+
+def _leaf_paths(tree):
+    flat = jax.tree_util.tree_flatten_with_path(tree)[0]
+    out = []
+    for path, leaf in flat:
+        key = "/".join(str(getattr(p, "key", getattr(p, "idx", p)))
+                       for p in path)
+        out.append((key, leaf))
+    return out
+
+
+def param_shardings(cfg, param_tree, mesh):
+    """Pytree of NamedSharding matching ``param_tree`` (shapes or arrays)."""
+    flat, treedef = jax.tree_util.tree_flatten(param_tree)
+    specs = []
+    for key, leaf in _leaf_paths(param_tree):
+        specs.append(NamedSharding(
+            mesh, param_spec(cfg, key, leaf.shape, mesh)))
+    return jax.tree_util.tree_unflatten(treedef, specs)
+
+
+def zero1_shardings(cfg, param_tree, mesh):
+    """Optimizer-moment shardings: param spec + first open divisible dim
+    over the data axes (ZeRO-1)."""
+    daxes = _data_axes(mesh)
+    dsize = int(np.prod([mesh.shape[a] for a in daxes])) if daxes else 1
+
+    def one(key, leaf):
+        base = param_spec(cfg, key, leaf.shape, mesh)
+        parts = list(base) + [None] * (len(leaf.shape) - len(base))
+        if dsize > 1:
+            for i, (s, pspec) in enumerate(zip(leaf.shape, parts)):
+                if pspec is None and s % dsize == 0 and s >= dsize:
+                    parts[i] = daxes if len(daxes) > 1 else daxes[0]
+                    break
+        return NamedSharding(mesh, P(*parts))
+
+    flat, treedef = jax.tree_util.tree_flatten(param_tree)
+    specs = [one(key, leaf) for key, leaf in _leaf_paths(param_tree)]
+    moments = jax.tree_util.tree_unflatten(treedef, specs)
+    return {"m": moments, "v": moments,
+            "step": NamedSharding(mesh, P())}
+
+
+def batch_shardings(mesh, batch_tree):
+    """Batch dim over all data axes."""
+    daxes = _data_axes(mesh)
+    spec = daxes if len(daxes) > 1 else (daxes[0] if daxes else None)
+
+    def one(leaf):
+        parts = [spec] + [None] * (len(leaf.shape) - 1)
+        return NamedSharding(mesh, P(*parts))
+
+    return jax.tree.map(one, batch_tree)
+
+
+# ----------------------------------------------------------------------
+# serving state shardings
+
+def serve_state_shardings(cfg, state_tree, mesh, *, replicate_batch=False):
+    """Paged pools shard their block dim over the data axes (each data shard
+    is an independent serving replica owning its pool segment); per-slot
+    arrays shard the slot dim; weights keep their TP sharding at the jit
+    level. ``replicate_batch`` (long_500k, batch=1) replicates instead."""
+    daxes = _data_axes(mesh)
+    spec = None if replicate_batch or not daxes else \
+        (daxes if len(daxes) > 1 else daxes[0])
+
+    def one(key, leaf):
+        name = key.split("/")[-1]
+        nd = len(leaf.shape)
+        if name in ("k", "v", "f", "kv") and "pools" in key:
+            parts = [None, spec] + [None] * (nd - 2)     # (L, N, ...)
+        elif "qwin" in key:
+            parts = [None, spec] + [None] * (nd - 2)     # (L, M, ...)
+        elif "cross_kv" in key or "rec" in key.split("/")[0]:
+            parts = [None, spec] + [None] * (nd - 2)     # (L, B, ...)
+        elif name in ("block_tables", "seq_lens", "positions", "qslot"):
+            parts = [spec] + [None] * (nd - 1)
+        else:
+            parts = [None] * nd
+        return NamedSharding(mesh, P(*parts))
+
+    flat, treedef = jax.tree_util.tree_flatten(state_tree)
+    specs = [one(key, leaf) for key, leaf in _leaf_paths(state_tree)]
+    return jax.tree_util.tree_unflatten(treedef, specs)
+
+
+def sharding_summary(cfg, param_tree, mesh, max_rows=0):
+    """Human-readable table of param shardings + replication fallbacks."""
+    rows, fallbacks = [], 0
+    for key, leaf in _leaf_paths(param_tree):
+        spec = param_spec(cfg, key, leaf.shape, mesh)
+        sharded = any(s is not None for s in spec)
+        if not sharded and np.prod(leaf.shape) > 1_000_000:
+            fallbacks += 1
+        rows.append((key, leaf.shape, tuple(spec)))
+    if max_rows:
+        rows = rows[:max_rows]
+    return rows, fallbacks

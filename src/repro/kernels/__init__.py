@@ -1,0 +1,8 @@
+"""Pallas TPU kernels for the compute hot-spots the paper optimizes
+(App. C): paged decode attention, paged observation-window scoring (Alg. 1),
+lightning + flash redundancy (C.7 / Alg. 3), KV compaction (Alg. 4).
+
+Each kernel: <name>.py (pl.pallas_call + explicit BlockSpec VMEM tiling),
+ops.py (jit'd wrappers + backend dispatch), ref.py (pure-jnp oracles).
+Validated with interpret=True on CPU; TPU is the target.
+"""

@@ -1,0 +1,82 @@
+"""Jit'd wrappers + backend dispatch for the Pallas kernels.
+
+``backend="pallas"`` routes through the TPU kernels (interpret=True on CPU);
+``backend="jnp"`` uses the pure-jnp references. The engine/compression layers
+call through these so the backend is one switch.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+
+from repro.kernels import compaction, paged_attention as pa, paged_score, \
+    redundancy
+from repro.kernels import ref
+from repro.core import paged as paged_ref
+
+_INTERPRET = True  # CPU container; real TPU would set False
+
+
+def set_interpret(flag: bool):
+    global _INTERPRET
+    _INTERPRET = flag
+
+
+@functools.partial(jax.jit, static_argnames=("backend",))
+def paged_decode_attention(q, k_pages, v_pages, block_tables, seq_lens,
+                           backend="pallas"):
+    if backend == "pallas":
+        return pa.paged_attention(q, k_pages, v_pages, block_tables,
+                                  seq_lens, interpret=_INTERPRET)
+    return paged_ref.paged_decode_attention(q, k_pages, v_pages,
+                                            block_tables, seq_lens)
+
+
+@functools.partial(jax.jit, static_argnames=("backend",))
+def score_logits(q_win, k_pages, block_tables, seq_lens, backend="pallas"):
+    if backend == "pallas":
+        return paged_score.paged_score_logits(q_win, k_pages, block_tables,
+                                              seq_lens, interpret=_INTERPRET)
+    return ref.paged_score_logits_ref(q_win, k_pages, block_tables, seq_lens)
+
+
+def attention_scores_from_logits(logits, seq_lens):
+    """Softmax over T, GQA max over g, mean over w (paper App. C.2).
+    logits: (n, h, g, w, T) masked with NEG_INF. Returns (n, T, h)."""
+    p = jax.nn.softmax(logits, axis=-1)
+    T = logits.shape[-1]
+    valid = jnp.arange(T)[None] < seq_lens[:, None]
+    p = jnp.where(valid[:, None, None, None], p, 0.0)
+    return p.max(axis=2).mean(axis=2).transpose(0, 2, 1)
+
+
+@functools.partial(jax.jit, static_argnames=("backend", "p_thresh"))
+def lightning_redundancy(k_pages, block_tables, seq_lens, p_thresh=0.8,
+                         backend="pallas"):
+    if backend == "pallas":
+        return redundancy.lightning_redundancy(
+            k_pages, block_tables, seq_lens, p_thresh=p_thresh,
+            interpret=_INTERPRET)
+    return ref.lightning_redundancy_ref(k_pages, block_tables, seq_lens,
+                                        p_thresh=p_thresh)
+
+
+@functools.partial(jax.jit, static_argnames=("backend", "p_thresh"))
+def flash_redundancy(k_pages, block_tables, seq_lens, p_thresh=0.8,
+                     backend="pallas"):
+    if backend == "pallas":
+        return redundancy.flash_redundancy(
+            k_pages, block_tables, seq_lens, p_thresh=p_thresh,
+            interpret=_INTERPRET)
+    return ref.flash_redundancy_ref(k_pages, block_tables, seq_lens,
+                                    p_thresh=p_thresh)
+
+
+@functools.partial(jax.jit, static_argnames=("backend",))
+def compact_gather(pool_flat, src_slots, backend="pallas"):
+    if backend == "pallas":
+        return compaction.compact_gather(pool_flat, src_slots,
+                                         interpret=_INTERPRET)
+    return ref.compact_gather_ref(pool_flat, src_slots)

@@ -1,0 +1,104 @@
+"""Pallas TPU kernel: paged decode attention (flash-decoding over pages).
+
+TPU adaptation of GPU PagedAttention (DESIGN.md §3): the page indirection
+happens at grid-index time — the K/V BlockSpec ``index_map`` reads the
+scalar-prefetched block table, so each grid step DMAs one dense
+``(b, d)`` page stripe HBM->VMEM and runs the (g×d)·(d×b) product on the MXU
+with an online-softmax accumulator held in VMEM scratch.
+
+Grid: (B, h_kv, max_blocks); the last dim is sequential ("arbitrary") so the
+scratch accumulators persist across a request's pages.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+NEG_INF = -1e30
+
+
+def _kernel(block_tables, seq_lens,      # scalar prefetch
+            q_ref, k_ref, v_ref,         # VMEM tiles
+            o_ref,                       # output tile
+            m_s, l_s, acc_s,             # scratch
+            *, block_size, max_blocks, scale):
+    ib = pl.program_id(0)
+    i = pl.program_id(2)
+
+    @pl.when(i == 0)
+    def _init():
+        m_s[...] = jnp.full_like(m_s, NEG_INF)
+        l_s[...] = jnp.zeros_like(l_s)
+        acc_s[...] = jnp.zeros_like(acc_s)
+
+    q = q_ref[0, 0].astype(jnp.float32)                 # (g, d)
+    k = k_ref[0, :, 0].astype(jnp.float32)              # (b, d)
+    v = v_ref[0, :, 0].astype(jnp.float32)              # (b, d)
+    s = jax.lax.dot_general(q, k, (((1,), (1,)), ((), ())),
+                            preferred_element_type=jnp.float32) * scale
+    kpos = i * block_size + jax.lax.broadcasted_iota(
+        jnp.int32, (1, block_size), 1)
+    valid = kpos < seq_lens[ib]
+    s = jnp.where(valid, s, NEG_INF)
+
+    m_prev = m_s[...]
+    m_new = jnp.maximum(m_prev, s.max(axis=1, keepdims=True))
+    p = jnp.exp(s - m_new)
+    p = jnp.where(valid, p, 0.0)
+    corr = jnp.exp(m_prev - m_new)
+    l_s[...] = l_s[...] * corr + p.sum(axis=1, keepdims=True)
+    acc_s[...] = acc_s[...] * corr + jax.lax.dot_general(
+        p, v, (((1,), (0,)), ((), ())),
+        preferred_element_type=jnp.float32)
+    m_s[...] = m_new
+
+    @pl.when(i == max_blocks - 1)
+    def _finish():
+        o_ref[0, 0] = (acc_s[...] /
+                       jnp.maximum(l_s[...], 1e-30)).astype(o_ref.dtype)
+
+
+def paged_attention(q, k_pages, v_pages, block_tables, seq_lens, *,
+                    interpret=True):
+    """q: (B, h_q, d); pools: (N, b, h_kv, d); block_tables: (B, mb);
+    seq_lens: (B,). Returns (B, h_q, d)."""
+    B, hq, d = q.shape
+    N, b, hkv, _ = k_pages.shape
+    g = hq // hkv
+    mb = block_tables.shape[1]
+    scale = 1.0 / np.sqrt(d)
+    qr = q.reshape(B, hkv, g, d)
+    bt = jnp.maximum(block_tables, 0).astype(jnp.int32)
+
+    grid_spec = pltpu.PrefetchScalarGridSpec(
+        num_scalar_prefetch=2,
+        grid=(B, hkv, mb),
+        in_specs=[
+            pl.BlockSpec((1, 1, g, d), lambda ib, ih, i, bt, sl: (ib, ih, 0, 0)),
+            pl.BlockSpec((1, b, 1, d),
+                         lambda ib, ih, i, bt, sl: (bt[ib, i], 0, ih, 0)),
+            pl.BlockSpec((1, b, 1, d),
+                         lambda ib, ih, i, bt, sl: (bt[ib, i], 0, ih, 0)),
+        ],
+        out_specs=pl.BlockSpec((1, 1, g, d),
+                               lambda ib, ih, i, bt, sl: (ib, ih, 0, 0)),
+        scratch_shapes=[
+            pltpu.VMEM((g, 1), jnp.float32),
+            pltpu.VMEM((g, 1), jnp.float32),
+            pltpu.VMEM((g, d), jnp.float32),
+        ],
+    )
+    out = pl.pallas_call(
+        functools.partial(_kernel, block_size=b, max_blocks=mb, scale=scale),
+        grid_spec=grid_spec,
+        out_shape=jax.ShapeDtypeStruct((B, hkv, g, d), q.dtype),
+        compiler_params=pltpu.CompilerParams(
+            dimension_semantics=("parallel", "parallel", "arbitrary")),
+        interpret=interpret,
+    )(bt, seq_lens, qr, k_pages, v_pages)
+    return out.reshape(B, hq, d)

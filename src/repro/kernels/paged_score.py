@@ -1,0 +1,78 @@
+"""Pallas TPU kernel: paged observation-window attention logits (paper Alg. 1).
+
+Computes per-page logit tiles A' = Q_win · K_page^T / sqrt(d) with the
+last-block causal mask, exactly as the paper stores them (App. C.2: logits
+are materialized contiguously, then softmax/GQA-max/window-mean run on the
+dense layout — those reductions are in ops.py). One grid step = one page DMA,
+one (g·w × d)·(d × b) MXU product.
+
+Grid: (n, h_kv, max_blocks).
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+NEG_INF = -1e30
+
+
+def _kernel(block_tables, seq_lens,          # scalar prefetch
+            q_ref, k_ref, o_ref, *, block_size, scale, window):
+    ib = pl.program_id(0)
+    i = pl.program_id(2)
+    q = q_ref[0, 0].astype(jnp.float32)      # (g*w, d)
+    k = k_ref[0, :, 0].astype(jnp.float32)   # (b, d)
+    s = jax.lax.dot_general(q, k, (((1,), (1,)), ((), ())),
+                            preferred_element_type=jnp.float32) * scale
+    # causal mask: query u sits at cache pos seq_len - w + u
+    gw = s.shape[0]
+    u = jax.lax.broadcasted_iota(jnp.int32, (gw, block_size), 0) % window
+    qpos = seq_lens[ib] - window + u
+    kpos = i * block_size + jax.lax.broadcasted_iota(
+        jnp.int32, (gw, block_size), 1)
+    mask = (kpos <= qpos) & (kpos < seq_lens[ib])
+    o_ref[0, 0] = jnp.where(mask, s, NEG_INF).astype(o_ref.dtype)
+
+
+def paged_score_logits(q_win, k_pages, block_tables, seq_lens, *,
+                       interpret=True):
+    """q_win: (n, w, h_q, d) chronological window queries;
+    k_pages: (N, b, h_kv, d); block_tables: (n, mb); seq_lens: (n,).
+    Returns logits (n, h_kv, g, w, mb*b) fp32 with causal+validity mask
+    already applied (NEG_INF)."""
+    n, w, hq, d = q_win.shape
+    N, b, hkv, _ = k_pages.shape
+    g = hq // hkv
+    mb = block_tables.shape[1]
+    scale = 1.0 / np.sqrt(d)
+    # (n, hkv, g*w, d): row-major (g, w) so kernel iota %w recovers u
+    qr = q_win.transpose(0, 2, 1, 3).reshape(n, hkv, g, w, d) \
+        .reshape(n, hkv, g * w, d)
+    bt = jnp.maximum(block_tables, 0).astype(jnp.int32)
+
+    grid_spec = pltpu.PrefetchScalarGridSpec(
+        num_scalar_prefetch=2,
+        grid=(n, hkv, mb),
+        in_specs=[
+            pl.BlockSpec((1, 1, g * w, d),
+                         lambda ib, ih, i, bt, sl: (ib, ih, 0, 0)),
+            pl.BlockSpec((1, b, 1, d),
+                         lambda ib, ih, i, bt, sl: (bt[ib, i], 0, ih, 0)),
+        ],
+        out_specs=pl.BlockSpec((1, 1, g * w, b),
+                               lambda ib, ih, i, bt, sl: (ib, ih, 0, i)),
+    )
+    out = pl.pallas_call(
+        functools.partial(_kernel, block_size=b, scale=scale, window=w),
+        grid_spec=grid_spec,
+        out_shape=jax.ShapeDtypeStruct((n, hkv, g * w, mb * b), jnp.float32),
+        compiler_params=pltpu.CompilerParams(
+            dimension_semantics=("parallel", "parallel", "arbitrary")),
+        interpret=interpret,
+    )(bt, seq_lens, qr, k_pages)
+    return out.reshape(n, hkv, g, w, mb * b)

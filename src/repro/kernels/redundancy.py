@@ -1,0 +1,167 @@
+"""Pallas TPU kernels: key-state redundancy scores (paper App. C.5/C.7).
+
+``lightning_redundancy``: the paper's novel O(N·b²) score — one grid step
+loads one page, computes the (b×b) block-local cosine similarity entirely in
+VMEM (one MXU tile), applies the diag-zero and per-column last-above-p
+zero-out, and writes only the (b,) row sums. Memory O(N·b).
+
+``flash_redundancy``: the faithful O(N²·b²) baseline (paper Alg. 3) — for a
+fixed column block m, an inner loop walks row blocks i = N-1..0 with the
+zero-out tag held in VMEM across iterations; only per-(i,m) row-sums reach
+HBM (memory O(N²·b)).
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+
+def _zero_last_above(c, p_thresh, already=None):
+    """Zero, per column, the last (highest-row) entry > p; honor/update the
+    cross-block tag ``already`` (cols already zeroed in a newer block)."""
+    b_rows = c.shape[0]
+    above = c > p_thresh
+    if already is not None:
+        above = above & jnp.logical_not(already)[None, :]
+    has = above.any(axis=0)
+    rows = jax.lax.broadcasted_iota(jnp.int32, above.shape, 0)
+    last = jnp.max(jnp.where(above, rows, -1), axis=0)          # (b,)
+    hit = (rows == last[None, :]) & has[None, :]
+    c = jnp.where(hit, 0.0, c)
+    new_already = has if already is None else (already | has)
+    return c, new_already
+
+
+def _lightning_kernel(block_tables, seq_lens, k_ref, o_ref, *, block_size,
+                      p_thresh, eps=1e-12):
+    i = pl.program_id(2)
+    k = k_ref[0, :, 0].astype(jnp.float32)                      # (b, d)
+    norm = jnp.sqrt(jnp.sum(k * k, axis=1, keepdims=True))
+    khat = k / jnp.maximum(norm, eps)
+    c = jax.lax.dot_general(khat, khat, (((1,), (1,)), ((), ())),
+                            preferred_element_type=jnp.float32)
+    b = block_size
+    rows = jax.lax.broadcasted_iota(jnp.int32, (b, b), 0)
+    cols = jax.lax.broadcasted_iota(jnp.int32, (b, b), 1)
+    # validity: entries at cache pos >= seq_len contribute nothing
+    ib = pl.program_id(0)
+    pos_r = i * b + rows
+    pos_c = i * b + cols
+    vm = (pos_r < seq_lens[ib]) & (pos_c < seq_lens[ib])
+    c = jnp.where(vm & (rows != cols), c, 0.0)
+    c, _ = _zero_last_above(c, p_thresh)
+    o_ref[0, 0] = (jnp.sum(c, axis=1) / b).astype(o_ref.dtype)
+
+
+def lightning_redundancy(k_pages, block_tables, seq_lens, *, p_thresh=0.8,
+                         interpret=True):
+    """k_pages: (N, b, h, d); block_tables: (n, mb); seq_lens: (n,).
+    Returns raw row-sum scores (n, mb*b, h) (normalized by b), matching
+    ``scoring.redundancy_lightning`` on the gathered layout."""
+    N, b, h, d = k_pages.shape
+    n, mb = block_tables.shape
+    bt = jnp.maximum(block_tables, 0).astype(jnp.int32)
+    grid_spec = pltpu.PrefetchScalarGridSpec(
+        num_scalar_prefetch=2,
+        grid=(n, h, mb),
+        in_specs=[pl.BlockSpec((1, b, 1, d),
+                               lambda ib, ih, i, bt, sl: (bt[ib, i], 0, ih, 0))],
+        out_specs=pl.BlockSpec((1, 1, b),
+                               lambda ib, ih, i, bt, sl: (ib, ih, i)),
+    )
+    out = pl.pallas_call(
+        functools.partial(_lightning_kernel, block_size=b, p_thresh=p_thresh),
+        grid_spec=grid_spec,
+        out_shape=jax.ShapeDtypeStruct((n, h, mb * b), jnp.float32),
+        compiler_params=pltpu.CompilerParams(
+            dimension_semantics=("parallel", "parallel", "arbitrary")),
+        interpret=interpret,
+    )(bt, seq_lens, k_pages)
+    return out.transpose(0, 2, 1)                                # (n, T, h)
+
+
+# ----------------------------------------------------------------------
+def _flash_kernel(block_tables, seq_lens, km_ref, kall_ref, o_ref,
+                  *, block_size, max_blocks, p_thresh, eps=1e-12):
+    """Grid (n, h, m): column block m fixed; inner loop over row blocks
+    i = N-1..0 (paper Alg. 3). Per-(i,m) row sums are accumulated into the
+    request's (mb, b) output tile, which is revisited (same index_map block)
+    across the sequential m dimension."""
+    ib = pl.program_id(0)
+    m = pl.program_id(2)
+    b = block_size
+
+    @pl.when(m == 0)
+    def _init():
+        o_ref[...] = jnp.zeros_like(o_ref)
+
+    km = km_ref[0, :, 0].astype(jnp.float32)                    # (b, d)
+    km = km / jnp.maximum(jnp.sqrt(jnp.sum(km * km, 1, keepdims=True)), eps)
+    cols = jax.lax.broadcasted_iota(jnp.int32, (b, b), 1)
+    rows = jax.lax.broadcasted_iota(jnp.int32, (b, b), 0)
+    pos_c = m * b + cols
+
+    def body(t, z):
+        i = max_blocks - 1 - t
+        ki = kall_ref[0, i, :, 0].astype(jnp.float32)
+        ki = ki / jnp.maximum(jnp.sqrt(jnp.sum(ki * ki, 1, keepdims=True)),
+                              eps)
+        c = jax.lax.dot_general(ki, km, (((1,), (1,)), ((), ())),
+                                preferred_element_type=jnp.float32)
+        pos_r = i * b + rows
+        vm = (pos_r < seq_lens[ib]) & (pos_c < seq_lens[ib])
+        c = jnp.where(vm & (pos_r != pos_c), c, 0.0)
+        c, z = _zero_last_above(c, p_thresh, already=z)
+        o_ref[0, 0, i] = o_ref[0, 0, i] + jnp.sum(c, axis=1)
+        return z
+
+    jax.lax.fori_loop(0, max_blocks, body, jnp.zeros((b,), bool))
+
+
+def flash_redundancy(k_pages, block_tables, seq_lens, *, p_thresh=0.8,
+                     interpret=True):
+    """Faithful Alg. 3. Returns raw row sums (n, mb*b, h) normalized by the
+    valid length (matching ``scoring.redundancy_full``).
+
+    The row blocks K_i are served from a VMEM-resident gather of the
+    request's pages (the paper's Triton kernel re-reads K_i from HBM; on TPU
+    the small-N compression regime fits VMEM — a production variant would
+    stream pages with double-buffered DMA for very large N)."""
+    N, b, h, d = k_pages.shape
+    n, mb = block_tables.shape
+    bt = jnp.maximum(block_tables, 0).astype(jnp.int32)
+    gathered = k_pages[bt]                                       # (n, mb, b, h, d)
+
+    grid_spec = pltpu.PrefetchScalarGridSpec(
+        num_scalar_prefetch=2,
+        grid=(n, h, mb),
+        in_specs=[
+            pl.BlockSpec((1, b, 1, d),
+                         lambda ib, ih, m, bt, sl: (bt[ib, m], 0, ih, 0)),
+            pl.BlockSpec((1, mb, b, 1, d),
+                         lambda ib, ih, m, bt, sl: (ib, 0, 0, ih, 0)),
+        ],
+        out_specs=pl.BlockSpec((1, 1, mb, b),
+                               lambda ib, ih, m, bt, sl: (ib, ih, 0, 0)),
+    )
+
+    def kernel(bt_ref, sl_ref, km_ref, kall_ref, o_ref):
+        _flash_kernel(bt_ref, sl_ref, km_ref, kall_ref, o_ref,
+                      block_size=b, max_blocks=mb, p_thresh=p_thresh)
+
+    outs = pl.pallas_call(
+        kernel,
+        grid_spec=grid_spec,
+        out_shape=jax.ShapeDtypeStruct((n, h, mb, b), jnp.float32),
+        compiler_params=pltpu.CompilerParams(
+            dimension_semantics=("parallel", "parallel", "arbitrary")),
+        interpret=interpret,
+    )(bt, seq_lens, k_pages, gathered)
+    r = outs.reshape(n, h, mb * b)
+    nvalid = jnp.maximum(seq_lens, 1).astype(jnp.float32)
+    return (r / nvalid[:, None, None]).transpose(0, 2, 1)

@@ -1,0 +1,56 @@
+"""Pure-jnp oracles for every Pallas kernel (the contracts live in
+repro.core.paged / repro.core.scoring; re-exported here so kernel tests read
+one import site)."""
+from __future__ import annotations
+
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core.paged import gather_entries, paged_decode_attention  # noqa: F401
+from repro.core import scoring
+
+
+def paged_score_logits_ref(q_win, k_pages, block_tables, seq_lens):
+    """Oracle for kernels.paged_score.paged_score_logits."""
+    n, w, hq, d = q_win.shape
+    N, b, hkv, _ = k_pages.shape
+    g = hq // hkv
+    bt = jnp.maximum(block_tables, 0)
+    ks = gather_entries(k_pages, bt)                  # (n, T, hkv, d)
+    T = ks.shape[1]
+    qg = q_win.reshape(n, w, hkv, g, d)
+    s = jnp.einsum("nwhgd,nthd->nhgwt", qg.astype(jnp.float32),
+                   ks.astype(jnp.float32)) / np.sqrt(d)
+    qpos = seq_lens[:, None] - w + jnp.arange(w)[None]            # (n, w)
+    kpos = jnp.arange(T)
+    mask = (kpos[None, None] <= qpos[..., None]) & \
+        (kpos[None, None] < seq_lens[:, None, None])
+    return jnp.where(mask[:, None, None], s, -1e30)
+
+
+def lightning_redundancy_ref(k_pages, block_tables, seq_lens, *, p_thresh=0.8):
+    bt = jnp.maximum(block_tables, 0)
+    entries = gather_entries(k_pages, bt)             # (n, T, h, d)
+    b = k_pages.shape[1]
+    T = entries.shape[1]
+    valid = jnp.arange(T)[None] < seq_lens[:, None]
+    import jax
+    return jax.vmap(lambda e, v: scoring.redundancy_lightning(
+        e, v, block_size=b, p_thresh=p_thresh))(entries, valid)
+
+
+def flash_redundancy_ref(k_pages, block_tables, seq_lens, *, p_thresh=0.8):
+    """Flash == full-matrix redundancy by construction."""
+    bt = jnp.maximum(block_tables, 0)
+    entries = gather_entries(k_pages, bt)
+    T = entries.shape[1]
+    valid = jnp.arange(T)[None] < seq_lens[:, None]
+    import jax
+    return jax.vmap(lambda e, v: scoring.redundancy_full(
+        e, v, p_thresh=p_thresh))(entries, valid)
+
+
+def compact_gather_ref(pool_flat, src_slots):
+    h = pool_flat.shape[1]
+    vals = pool_flat[src_slots, jnp.arange(h)[:, None]]   # (h, k, d)
+    return vals.transpose(1, 0, 2)

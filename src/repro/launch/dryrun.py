@@ -1,0 +1,418 @@
+import os
+os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=512"
+# ^ MUST run before any jax import: jax locks the device count on first init.
+# (No `from __future__` here: the env var lines above must stay first.)
+_DOC = """Multi-pod dry-run: lower + compile every (arch × shape × mesh) cell
+on the production meshes and extract memory/cost/collective roofline terms.
+
+Usage:
+  python -m repro.launch.dryrun --arch llama3-8b --shape decode_32k \
+      --mesh pod1 [--variant zipage] [--out out.json]
+  python -m repro.launch.dryrun --all --out-dir results/dryrun   # subprocess per cell
+  python -m repro.launch.dryrun --list
+
+Variants:
+  baseline  : the shape's own step (train/prefill/full-KV decode)
+  zipage    : decode with the paper's block cap (budget 2048 tokens) —
+              bounded pool + compress_step lowered alongside
+"""
+
+import argparse
+import dataclasses
+import json
+import subprocess
+import sys
+import time
+import traceback
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+from jax.sharding import NamedSharding, PartitionSpec as P
+
+from repro.configs import SHAPES, all_arch_names, cell_applicable, get_config
+from repro.configs.base import ShapeCell
+from repro.core import serve_model
+from repro.core.compression import CompressOptions, build_compress_fn
+from repro.distributed import roofline as rl
+from repro.distributed import sharding as shd
+from repro.launch.mesh import make_production_mesh
+from repro.models import lm
+from repro.training import optimizer as opt
+from repro.training.data import DataConfig, batch_specs
+from repro.training.train_loop import build_train_step
+
+BLOCK_SIZE = 64          # TPU-native page (DESIGN.md §3)
+BUDGET_TOKENS = 2048     # paper's main KV budget
+WINDOW = 16
+
+ARCHS = [
+    "recurrentgemma-2b", "deepseek-v2-lite-16b", "dbrx-132b", "llama3-8b",
+    "nemotron-4-15b", "olmo-1b", "qwen2.5-3b", "rwkv6-3b", "whisper-tiny",
+    "internvl2-26b",
+]
+
+
+def data_axes(mesh):
+    return tuple(a for a in ("pod", "data") if a in mesh.shape)
+
+
+def n_replicas(mesh):
+    return int(np.prod([mesh.shape[a] for a in data_axes(mesh)]))
+
+
+# ----------------------------------------------------------------------
+def frontend_specs(cfg, B, dtype=jnp.bfloat16):
+    out = {}
+    if cfg.frontend == "vision_stub":
+        out["prefix_embeds"] = jax.ShapeDtypeStruct(
+            (B, cfg.num_prefix_embeds, cfg.d_model), dtype)
+    if cfg.frontend == "audio_stub":
+        out["frame_embeds"] = jax.ShapeDtypeStruct(
+            (B, cfg.cross_seq_len, cfg.d_model), jnp.float32)
+    return out
+
+
+def input_specs(cfg, cell: ShapeCell):
+    """ShapeDtypeStruct stand-ins for every model input of this cell."""
+    if cell.kind == "train":
+        dc = DataConfig(seq_len=cell.seq_len, global_batch=cell.global_batch,
+                        vocab_size=cfg.vocab_size)
+        return batch_specs(dc, extra=frontend_specs(cfg, cell.global_batch))
+    if cell.kind == "prefill":
+        B, S = cell.global_batch, cell.seq_len
+        out = {
+            "tokens": jax.ShapeDtypeStruct((B, S), jnp.int32),
+            "slot_ids": jax.ShapeDtypeStruct((B,), jnp.int32),
+            "lengths": jax.ShapeDtypeStruct((B,), jnp.int32),
+            "start_pos": jax.ShapeDtypeStruct((B,), jnp.int32),
+        }
+        out.update(frontend_specs(cfg, B))
+        return out
+    # decode
+    B = cell.global_batch
+    return {
+        "tokens": jax.ShapeDtypeStruct((B,), jnp.int32),
+        "active": jax.ShapeDtypeStruct((B,), jnp.bool_),
+    }
+
+
+def make_serve_spec(cfg, cell: ShapeCell, mesh, variant):
+    b = BLOCK_SIZE
+    B = cell.global_batch
+    tp = mesh.shape.get("model", 1)
+    kv_rep = 1
+    if cfg.num_kv_heads and not cfg.attention_free and cfg.attn_type != "mla":
+        if tp > cfg.num_kv_heads and tp % cfg.num_kv_heads == 0:
+            r = tp // cfg.num_kv_heads
+            # q-head groups must stay aligned to stored slots
+            if cfg.num_heads % (cfg.num_kv_heads * r) == 0:
+                kv_rep = r
+    prefix = cfg.num_prefix_embeds if cfg.frontend == "vision_stub" else 0
+    if cfg.local_window:
+        mb = cfg.local_window // b
+    elif variant == "zipage" and cell.kind == "decode":
+        mb = BUDGET_TOKENS // b + 1          # N_max blocks (budget + reserve)
+    else:
+        mb = -(-(cell.seq_len + prefix) // b)
+    n_total = max(B * mb, 1)
+    # Page-streaming (chunked) attention is the production default for all
+    # decode cells (§Perf iteration C: 2.1x on full-KV decode; neutral at
+    # the zipage budget where decode is weight-bound). Set
+    # DRYRUN_GATHER_ATTN=1 to reproduce the pre-C gather numbers.
+    attn_impl = "jnp" if os.environ.get("DRYRUN_GATHER_ATTN") else "chunked"
+    return serve_model.ServeSpec(
+        n_slots=B, block_size=b, max_blocks=mb, n_total_blocks=n_total,
+        m_qslots=B, window=WINDOW, prefill_rows=B, prefill_len=cell.seq_len,
+        dtype="bfloat16", kv_replication=kv_rep, attn_backend=attn_impl)
+
+
+def serve_pspecs(cfg, state_tree, daxes, replicate_batch, *, mesh=None,
+                 with_model=False):
+    """Serving-state specs. ``with_model=False``: manual shard_map specs
+    (data axes only). ``with_model=True``: jit-level specs — additionally
+    shard head/feature dims over the auto "model" axis where divisible
+    (pools' h_store dim, qwin's h_q dim, MLA latent width, rwkv heads)."""
+    spec = None if replicate_batch or not daxes else \
+        (daxes if len(daxes) > 1 else daxes[0])
+    tp = mesh.shape.get("model", 1) if (mesh and with_model) else 1
+
+    def mdl(dim_size):
+        return "model" if (tp > 1 and dim_size % tp == 0) else None
+
+    def one(key, leaf):
+        name = key.split("/")[-1]
+        nd = len(leaf.shape)
+        sh = leaf.shape
+        if name in ("k", "v") and nd == 5:            # (L, N, b, h, d)
+            return P(None, spec, None, mdl(sh[3]), None)
+        if name == "f" and nd == 4:                   # (L, N, b, h)
+            return P(None, spec, None, mdl(sh[3]))
+        if name == "kv" and nd == 4:                  # MLA (L, N, b, e)
+            return P(None, spec, None, mdl(sh[3]))
+        if "qwin" in key:                             # (L, M, w, hq, dq)
+            return P(None, spec, None, mdl(sh[3]), None)
+        if "cross_kv" in key:                         # (L, B, S, h, d)
+            return P(None, spec, None, mdl(sh[3]), None)
+        if key.startswith("rec"):
+            if name == "S":                           # (L, B, h, K, K)
+                return P(None, spec, mdl(sh[2]), None, None)
+            if name in ("h", "shift"):                # (L, B, w|d)
+                return P(None, spec, mdl(sh[2]))
+            if name == "conv":                        # (L, B, cw-1, w)
+                return P(None, spec, None, mdl(sh[3]))
+            return P(*([None, spec] + [None] * (nd - 2)))
+        if name in ("block_tables", "seq_lens", "positions", "qslot"):
+            return P(*([spec] + [None] * (nd - 1)))
+        return P()
+
+    flat, treedef = jax.tree_util.tree_flatten(state_tree)
+    out = []
+    for path, leaf in jax.tree_util.tree_flatten_with_path(state_tree)[0]:
+        key = "/".join(str(getattr(p, "key", getattr(p, "idx", p)))
+                       for p in path)
+        out.append(one(key, leaf))
+    return jax.tree_util.tree_unflatten(treedef, out)
+
+
+# ----------------------------------------------------------------------
+def lower_train(cfg, cell, mesh):
+    adamw = opt.AdamWConfig()
+    step = build_train_step(cfg, adamw, accum_steps=1, vocab_chunk=512)
+    params_s = lm.param_specs(cfg)
+    opt_s = jax.eval_shape(lambda: opt.init_opt_state(params_s))
+    batch_s = input_specs(cfg, cell)
+    p_sh = shd.param_shardings(cfg, params_s, mesh)
+    o_sh = shd.zero1_shardings(cfg, params_s, mesh)
+    b_sh = shd.batch_shardings(mesh, batch_s)
+    rep = NamedSharding(mesh, P())
+    out_sh = (p_sh, o_sh, None, {"loss": rep, "grad_norm": rep, "lr": rep})
+
+    def step_no_err(params, opt_state, batch):
+        p, o, _, m = step(params, opt_state, None, batch)
+        return p, o, m
+
+    jitted = jax.jit(step_no_err,
+                     in_shardings=(p_sh, o_sh, b_sh),
+                     out_shardings=(p_sh, o_sh, out_sh[3]),
+                     donate_argnums=(0, 1))
+    from repro.models.moe_ctx import moe_partitioning
+    daxes = data_axes(mesh)
+    dspec = daxes if len(daxes) > 1 else daxes[0]
+    with jax.set_mesh(mesh), \
+            moe_partitioning(n_replicas(mesh),
+                             P(dspec, "model", None, None)):
+        lowered = jitted.lower(params_s, opt_s, batch_s)
+        compiled = lowered.compile()
+    return lowered, compiled
+
+
+def lower_serve(cfg, cell, mesh, variant):
+    spec = make_serve_spec(cfg, cell, mesh, variant)
+    daxes = data_axes(mesh)
+    B = cell.global_batch
+    replicate_batch = (B % n_replicas(mesh)) != 0
+    state_s = jax.eval_shape(lambda: serve_model.make_state(cfg, spec))
+    st_p = serve_pspecs(cfg, state_s, daxes, replicate_batch)
+    st_jit = serve_pspecs(cfg, state_s, daxes, replicate_batch, mesh=mesh,
+                          with_model=True)
+    bspec = None if replicate_batch else \
+        (daxes if len(daxes) > 1 else daxes[0])
+    params_s = lm.param_specs(cfg)
+    p_sh = shd.param_shardings(cfg, params_s, mesh)
+    p_p = jax.tree.map(lambda _: P(), params_s)
+    ins = input_specs(cfg, cell)
+
+    if cell.kind == "decode":
+        step = serve_model.build_decode_step(cfg, spec)
+        in_specs = (p_p, st_p, P(bspec), P(bspec))
+        out_specs = (P(bspec), st_p)
+        args = (params_s, state_s, ins["tokens"], ins["active"])
+    else:
+        base_step = serve_model.build_prefill_step(cfg, spec)
+        extra = [k for k in ("prefix_embeds", "frame_embeds") if k in ins]
+
+        def step(params, state, tokens, slot_ids, lengths, start_pos,
+                 *fe):
+            kw = dict(zip(extra, fe))
+            return base_step(params, state, tokens, slot_ids, lengths,
+                             start_pos, **kw)
+        in_specs = (p_p, st_p, P(bspec), P(bspec), P(bspec), P(bspec)) + \
+            tuple(P(bspec) for _ in extra)
+        out_specs = (P(bspec), st_p)
+        args = (params_s, state_s, ins["tokens"], ins["slot_ids"],
+                ins["lengths"], ins["start_pos"]) + \
+            tuple(ins[k] for k in extra)
+
+    smap = jax.shard_map(step, mesh=mesh, in_specs=in_specs,
+                         out_specs=out_specs,
+                         axis_names=frozenset(daxes), check_vma=False)
+    st_sh = jax.tree.map(lambda s: NamedSharding(mesh, s), st_jit)
+    arg_sh = [p_sh, st_sh] + [NamedSharding(mesh, s) for s in in_specs[2:]]
+    jitted = jax.jit(smap, in_shardings=tuple(arg_sh), donate_argnums=(1,))
+    from repro.models import moe_ctx
+    tok = None
+    if cfg.attn_type == "mla":
+        nd = 3 if cell.kind == "decode" else 4     # (B,[S],hq,e)
+        tok = moe_ctx.mla_q_spec.set(P(*([None] * (nd - 1) + ["model"])))
+    try:
+        with jax.set_mesh(mesh):
+            lowered = jitted.lower(*args)
+            compiled = lowered.compile()
+    finally:
+        if tok is not None:
+            moe_ctx.mla_q_spec.reset(tok)
+    return lowered, compiled
+
+
+def lower_compress(cfg, cell, mesh):
+    """Zipage compression step at the decode cell's scale."""
+    spec = make_serve_spec(cfg, cell, mesh, "zipage")
+    daxes = data_axes(mesh)
+    reps = n_replicas(mesh)
+    bucket = max(reps, 1)
+    state_s = jax.eval_shape(lambda: serve_model.make_state(cfg, spec))
+    budget_blocks = spec.max_blocks - 1
+    fn = build_compress_fn(cfg, block_size=spec.block_size,
+                           max_blocks=spec.max_blocks,
+                           budget_blocks=budget_blocks,
+                           opts=CompressOptions(window=WINDOW))
+    pools_s = state_s["pools"]
+    qwin_s = state_s["qwin"]
+    req_s = (
+        jax.ShapeDtypeStruct((bucket, spec.max_blocks), jnp.int32),
+        jax.ShapeDtypeStruct((bucket, budget_blocks), jnp.int32),
+        jax.ShapeDtypeStruct((bucket,), jnp.int32),
+        jax.ShapeDtypeStruct((bucket,), jnp.int32),
+        jax.ShapeDtypeStruct((bucket,), jnp.int32),
+    )
+    dspec = daxes if len(daxes) > 1 else daxes[0]
+    pool_p = jax.tree.map(lambda s: P(None, dspec), pools_s)
+    qwin_p = P(None, dspec)
+    req_p = (P(dspec), P(dspec), P(dspec), P(dspec), P(dspec))
+    smap = jax.shard_map(fn, mesh=mesh,
+                         in_specs=(pool_p, qwin_p, req_p),
+                         out_specs=(pool_p, P(dspec)),
+                         axis_names=frozenset(daxes), check_vma=False)
+    jitted = jax.jit(smap, donate_argnums=(0,))
+    with jax.set_mesh(mesh):
+        lowered = jitted.lower(pools_s, qwin_s, req_s)
+        compiled = lowered.compile()
+    return lowered, compiled
+
+
+# ----------------------------------------------------------------------
+def run_cell(arch, shape_name, mesh_name, variant="baseline"):
+    cfg = get_config(arch)
+    cell = SHAPES[shape_name]
+    ok, why = cell_applicable(cfg, cell)
+    if not ok:
+        return {"arch": arch, "shape": shape_name, "mesh": mesh_name,
+                "variant": variant, "status": "skipped", "reason": why}
+    if variant in ("zipage", "compress") and (
+            cell.kind != "decode" or cfg.attention_free or cfg.local_window):
+        return {"arch": arch, "shape": shape_name, "mesh": mesh_name,
+                "variant": variant, "status": "skipped",
+                "reason": f"{variant} variant applies to full-attention "
+                          "decode shapes only"}
+    mesh = make_production_mesh(multi_pod=(mesh_name == "pod2"))
+    chips = int(np.prod(list(mesh.shape.values())))
+    t0 = time.time()
+    if cell.kind == "train":
+        lowered, compiled = lower_train(cfg, cell, mesh)
+    elif variant == "compress":
+        lowered, compiled = lower_compress(cfg, cell, mesh)
+    else:
+        lowered, compiled = lower_serve(cfg, cell, mesh, variant)
+    t_compile = time.time() - t0
+    mem = compiled.memory_analysis()
+    hlo = compiled.as_text()
+    roof = rl.from_compiled(compiled, chips, hlo_text=hlo)
+    coll = rl.collective_bytes(hlo)
+    rec = {
+        "arch": arch, "shape": shape_name, "mesh": mesh_name,
+        "variant": variant, "status": "ok", "chips": chips,
+        "compile_s": round(t_compile, 1),
+        "memory": {
+            "argument_bytes": getattr(mem, "argument_size_in_bytes", None),
+            "output_bytes": getattr(mem, "output_size_in_bytes", None),
+            "temp_bytes": getattr(mem, "temp_size_in_bytes", None),
+            "peak_bytes": getattr(mem, "peak_memory_in_bytes", None),
+        },
+        "roofline": roof.as_dict(),
+        "collectives": coll,
+    }
+    if cell.kind == "train":
+        tokens = cell.seq_len * cell.global_batch
+        mf = rl.model_flops_per_token(cfg) * tokens / chips
+        rec["model_flops_per_chip"] = mf
+        rec["useful_flops_ratio"] = mf / max(roof.flops, 1.0)
+    return rec
+
+
+def cells(variants=("baseline", "zipage", "compress")):
+    for arch in ARCHS:
+        for shape in SHAPES:
+            for mesh in ("pod1", "pod2"):
+                for v in variants:
+                    yield arch, shape, mesh, v
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch")
+    ap.add_argument("--shape")
+    ap.add_argument("--mesh", default="pod1", choices=["pod1", "pod2"])
+    ap.add_argument("--variant", default="baseline",
+                    choices=["baseline", "zipage", "compress"])
+    ap.add_argument("--out")
+    ap.add_argument("--all", action="store_true")
+    ap.add_argument("--out-dir", default="results/dryrun")
+    ap.add_argument("--list", action="store_true")
+    args = ap.parse_args()
+
+    if args.list:
+        for c in cells():
+            print(*c)
+        return
+
+    if args.all:
+        os.makedirs(args.out_dir, exist_ok=True)
+        todo = list(cells())
+        for arch, shape, mesh, v in todo:
+            name = f"{arch}__{shape}__{mesh}__{v}.json"
+            path = os.path.join(args.out_dir, name)
+            if os.path.exists(path):
+                continue
+            cmd = [sys.executable, "-m", "repro.launch.dryrun",
+                   "--arch", arch, "--shape", shape, "--mesh", mesh,
+                   "--variant", v, "--out", path]
+            print(">>", name, flush=True)
+            r = subprocess.run(cmd, capture_output=True, text=True,
+                               timeout=3600)
+            if r.returncode != 0:
+                with open(path, "w") as f:
+                    json.dump({"arch": arch, "shape": shape, "mesh": mesh,
+                               "variant": v, "status": "error",
+                               "error": r.stderr[-2000:]}, f, indent=1)
+                print("   ERROR", r.stderr.splitlines()[-1] if r.stderr
+                      else "?", flush=True)
+        return
+
+    try:
+        rec = run_cell(args.arch, args.shape, args.mesh, args.variant)
+    except Exception:
+        rec = {"arch": args.arch, "shape": args.shape, "mesh": args.mesh,
+               "variant": args.variant, "status": "error",
+               "error": traceback.format_exc()[-4000:]}
+    js = json.dumps(rec, indent=1, default=str)
+    print(js)
+    if args.out:
+        with open(args.out, "w") as f:
+            f.write(js)
+    if rec["status"] == "error":
+        sys.exit(1)
+
+
+if __name__ == "__main__":
+    main()

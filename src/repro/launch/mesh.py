@@ -1,0 +1,22 @@
+"""Production meshes. Functions, not module constants — importing this module
+never touches jax device state."""
+from __future__ import annotations
+
+import jax
+
+
+def make_production_mesh(*, multi_pod: bool = False):
+    """Single pod: 16x16 = 256 chips ("data", "model").
+    Multi-pod: 2x16x16 = 512 chips ("pod", "data", "model"); the "pod" axis
+    crosses DCI and carries the (optionally int8-compressed) gradient hop."""
+    shape = (2, 16, 16) if multi_pod else (16, 16)
+    axes = ("pod", "data", "model") if multi_pod else ("data", "model")
+    return jax.make_mesh(shape, axes)
+
+
+def make_host_mesh(shape=None, axes=None):
+    """Small mesh over whatever devices exist (tests, examples)."""
+    n = len(jax.devices())
+    if shape is None:
+        shape, axes = (n,), ("data",)
+    return jax.make_mesh(shape, axes)

@@ -1,0 +1,111 @@
+"""Training launcher: mesh setup, sharding, checkpoint/restart, train loop.
+
+Runs for real on whatever devices exist (CPU tests use a (1,1) or fake-device
+mesh) and is the same assembly the dry-run lowers for the production meshes.
+
+  PYTHONPATH=src python -m repro.launch.train --arch tiny-lm --steps 50 \
+      --seq-len 64 --global-batch 8 --ckpt-dir /tmp/ck --ckpt-every 20
+"""
+from __future__ import annotations
+
+import argparse
+import os
+import time
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+from jax.sharding import NamedSharding, PartitionSpec as P
+
+from repro.configs import get_config
+from repro.distributed import sharding as shd
+from repro.launch.mesh import make_host_mesh, make_production_mesh
+from repro.models import lm
+from repro.training import checkpoint as ckpt
+from repro.training import optimizer as opt
+from repro.training.data import DataConfig, batch_at
+from repro.training.train_loop import build_train_step
+
+
+def main(argv=None):
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", default="tiny-lm")
+    ap.add_argument("--reduced", action="store_true",
+                    help="use the family-preserving reduced config")
+    ap.add_argument("--steps", type=int, default=50)
+    ap.add_argument("--seq-len", type=int, default=64)
+    ap.add_argument("--global-batch", type=int, default=8)
+    ap.add_argument("--lr", type=float, default=3e-3)
+    ap.add_argument("--accum", type=int, default=1)
+    ap.add_argument("--vocab-chunk", type=int, default=128)
+    ap.add_argument("--ckpt-dir", default="")
+    ap.add_argument("--ckpt-every", type=int, default=0)
+    ap.add_argument("--mesh", default="host",
+                    choices=["host", "pod1", "pod2"])
+    ap.add_argument("--seed", type=int, default=0)
+    ap.add_argument("--log-every", type=int, default=10)
+    args = ap.parse_args(argv)
+
+    cfg = get_config(args.arch)
+    if args.reduced:
+        cfg = cfg.reduced()
+    mesh = (make_host_mesh() if args.mesh == "host"
+            else make_production_mesh(multi_pod=args.mesh == "pod2"))
+    adamw = opt.AdamWConfig(lr=args.lr, warmup_steps=max(2, args.steps // 10),
+                            total_steps=args.steps)
+    dc = DataConfig(seq_len=args.seq_len, global_batch=args.global_batch,
+                    vocab_size=cfg.vocab_size, seed=args.seed)
+    step_fn = build_train_step(cfg, adamw, accum_steps=args.accum,
+                               vocab_chunk=args.vocab_chunk)
+
+    params = lm.init(cfg, jax.random.key(args.seed))
+    opt_state = opt.init_opt_state(params)
+    p_sh = shd.param_shardings(cfg, params, mesh)
+    o_sh = shd.zero1_shardings(cfg, params, mesh)
+    rep = NamedSharding(mesh, P())
+    m_sh = {"loss": rep, "grad_norm": rep, "lr": rep}
+
+    def step3(p, o, b):
+        pp, oo, _, m = step_fn(p, o, None, b)
+        return pp, oo, m
+
+    start_step = 0
+    if args.ckpt_dir:
+        os.makedirs(args.ckpt_dir, exist_ok=True)
+        last = ckpt.latest_step(args.ckpt_dir)
+        if last is not None:
+            restored, extra = ckpt.restore(
+                args.ckpt_dir, last, {"params": params, "opt": opt_state},
+                shardings={"params": p_sh, "opt": o_sh})
+            params, opt_state = restored["params"], restored["opt"]
+            start_step = extra["data_step"]
+            print(f"[train] restored step {start_step} from {args.ckpt_dir}")
+
+    params = jax.device_put(params, p_sh)
+    opt_state = jax.device_put(opt_state, o_sh)
+    batch0 = jax.tree.map(jnp.asarray, batch_at(dc, 0))
+    b_sh = shd.batch_shardings(mesh, batch0)
+    jstep = jax.jit(step3, in_shardings=(p_sh, o_sh, b_sh),
+                    out_shardings=(p_sh, o_sh, m_sh), donate_argnums=(0, 1))
+
+    t0 = time.time()
+    for i in range(start_step, args.steps):
+        batch = jax.device_put(
+            jax.tree.map(jnp.asarray, batch_at(dc, i)), b_sh)
+        params, opt_state, m = jstep(params, opt_state, batch)
+        if args.ckpt_every and (i + 1) % args.ckpt_every == 0:
+            ckpt.save(args.ckpt_dir, i + 1,
+                      {"params": params, "opt": opt_state},
+                      extra={"data_step": i + 1})
+        if (i + 1) % args.log_every == 0 or i == start_step:
+            print(f"[train] step {i + 1} loss {float(m['loss']):.4f} "
+                  f"gnorm {float(m['grad_norm']):.3f} "
+                  f"lr {float(m['lr']):.2e} "
+                  f"({(time.time() - t0) / (i - start_step + 1):.2f} s/step)",
+                  flush=True)
+    print(f"[train] done: final loss {float(m['loss']):.4f}")
+    return float(m["loss"])
+
+
+if __name__ == "__main__":
+    main()

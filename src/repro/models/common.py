@@ -1,0 +1,158 @@
+"""Shared model primitives: norms, activations, RoPE, init helpers.
+
+Pure-function style (no flax): params are plain pytrees of jnp arrays; every
+layer is ``apply(params, x, ...)``. Compute dtype is bf16 with fp32 norms /
+softmax accumulators, matching production TPU practice.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+# ----------------------------------------------------------------------
+# init
+
+def dense_init(key, shape, in_axis=0, dtype=jnp.float32, scale=1.0):
+    fan_in = shape[in_axis] if isinstance(in_axis, int) else int(
+        np.prod([shape[a] for a in in_axis]))
+    std = scale / np.sqrt(fan_in)
+    return (jax.random.normal(key, shape) * std).astype(dtype)
+
+
+def split_keys(key, n):
+    return list(jax.random.split(key, n))
+
+
+# ----------------------------------------------------------------------
+# norms
+
+def init_norm(cfg, d):
+    if cfg.norm_type == "rmsnorm":
+        return {"scale": jnp.ones((d,), jnp.float32)}
+    if cfg.norm_type == "layernorm":
+        return {"scale": jnp.ones((d,), jnp.float32),
+                "bias": jnp.zeros((d,), jnp.float32)}
+    if cfg.norm_type == "nonparam_ln":   # OLMo: no affine params
+        return {}
+    raise ValueError(cfg.norm_type)
+
+
+def apply_norm(cfg, p, x, eps=1e-6):
+    xf = x.astype(jnp.float32)
+    if cfg.norm_type == "rmsnorm":
+        xf = xf * jax.lax.rsqrt(jnp.mean(xf * xf, -1, keepdims=True) + eps)
+        xf = xf * p["scale"]
+    else:  # layernorm / nonparam_ln
+        mu = jnp.mean(xf, -1, keepdims=True)
+        var = jnp.mean(jnp.square(xf - mu), -1, keepdims=True)
+        xf = (xf - mu) * jax.lax.rsqrt(var + eps)
+        if p:
+            xf = xf * p["scale"] + p["bias"]
+    return xf.astype(x.dtype)
+
+
+def rms_head_norm(scale, x, eps=1e-6):
+    """Per-head q/k norm (Qwen3-style); x: (..., d_head)."""
+    xf = x.astype(jnp.float32)
+    xf = xf * jax.lax.rsqrt(jnp.mean(xf * xf, -1, keepdims=True) + eps)
+    return (xf * scale).astype(x.dtype)
+
+
+# ----------------------------------------------------------------------
+# activations
+
+def ffn_act_fn(name):
+    if name in ("silu_glu", "gelu_glu"):
+        base = jax.nn.silu if name == "silu_glu" else jax.nn.gelu
+        return lambda a, b: base(a) * b          # gated
+    if name == "sq_relu":
+        return lambda a, _b: jnp.square(jax.nn.relu(a))
+    if name == "gelu":
+        return lambda a, _b: jax.nn.gelu(a)
+    raise ValueError(name)
+
+
+def is_gated(name):
+    return name.endswith("_glu")
+
+
+# ----------------------------------------------------------------------
+# RoPE
+
+def rope_freqs(head_dim, theta):
+    return 1.0 / (theta ** (jnp.arange(0, head_dim, 2, dtype=jnp.float32)
+                            / head_dim))
+
+
+def apply_rope(x, positions, theta):
+    """x: (..., S, H, D) or (..., H, D) with positions broadcastable to (..., S)."""
+    d = x.shape[-1]
+    freqs = rope_freqs(d, theta)                       # (d/2,)
+    ang = positions[..., None].astype(jnp.float32) * freqs   # (..., S, d/2)
+    cos, sin = jnp.cos(ang), jnp.sin(ang)
+    cos = cos[..., None, :]                            # broadcast over heads
+    sin = sin[..., None, :]
+    x1, x2 = jnp.split(x.astype(jnp.float32), 2, axis=-1)
+    out = jnp.concatenate([x1 * cos - x2 * sin, x1 * sin + x2 * cos], -1)
+    return out.astype(x.dtype)
+
+
+# ----------------------------------------------------------------------
+# chunked (flash-style) causal attention — pure JAX, O(S·chunk) memory.
+
+NEG_INF = -1e30
+
+
+def chunked_causal_attention(q, k, v, *, q_start=0, kv_len=None,
+                             local_window=0, chunk=512):
+    """Causal multi-head attention, chunked over KV for memory.
+
+    q: (B, Sq, Hq, D); k, v: (B, Sk, Hkv, D). q position i attends kv
+    positions <= q_start + i (absolute kv index). GQA via head repeat.
+    local_window > 0 limits attention to the last ``local_window`` positions.
+    Returns (B, Sq, Hq, D).
+    """
+    B, Sq, Hq, D = q.shape
+    Sk, Hkv = k.shape[1], k.shape[2]
+    if kv_len is None:
+        kv_len = Sk
+    g = Hq // Hkv
+    scale = 1.0 / np.sqrt(D)
+    qpos = q_start + jnp.arange(Sq)
+
+    nchunks = -(-Sk // chunk)
+    pad = nchunks * chunk - Sk
+    kp = jnp.pad(k, ((0, 0), (0, pad), (0, 0), (0, 0)))
+    vp = jnp.pad(v, ((0, 0), (0, pad), (0, 0), (0, 0)))
+    kp = kp.reshape(B, nchunks, chunk, Hkv, D).transpose(1, 0, 2, 3, 4)
+    vp = vp.reshape(B, nchunks, chunk, Hkv, D).transpose(1, 0, 2, 3, 4)
+
+    def body(carry, kv):
+        m, l, acc, cidx = carry
+        kc, vc = kv                       # (B, chunk, Hkv, D)
+        kpos = cidx * chunk + jnp.arange(chunk)
+        # scores: (B, Hkv, g, Sq, chunk)
+        qg = q.reshape(B, Sq, Hkv, g, D)
+        s = jnp.einsum("bshgd,bchd->bhgsc", qg.astype(jnp.float32),
+                       kc.astype(jnp.float32)) * scale
+        mask = kpos[None, :] <= qpos[:, None]          # (Sq, chunk)
+        if local_window:
+            mask &= kpos[None, :] > qpos[:, None] - local_window
+        mask &= (kpos < kv_len)[None, :]
+        s = jnp.where(mask[None, None, None], s, NEG_INF)
+        m_new = jnp.maximum(m, s.max(-1))
+        p = jnp.exp(s - m_new[..., None])
+        corr = jnp.exp(m - m_new)
+        l_new = l * corr + p.sum(-1)
+        pv = jnp.einsum("bhgsc,bchd->bhgsd", p, vc.astype(jnp.float32))
+        acc_new = acc * corr[..., None] + pv
+        return (m_new, l_new, acc_new, cidx + 1), None
+
+    m0 = jnp.full((B, Hkv, g, Sq), NEG_INF, jnp.float32)
+    l0 = jnp.zeros((B, Hkv, g, Sq), jnp.float32)
+    a0 = jnp.zeros((B, Hkv, g, Sq, D), jnp.float32)
+    (m, l, acc, _), _ = jax.lax.scan(body, (m0, l0, a0, 0), (kp, vp))
+    out = acc / jnp.maximum(l, 1e-30)[..., None]
+    out = out.transpose(0, 3, 1, 2, 4).reshape(B, Sq, Hq, D)
+    return out.astype(q.dtype)

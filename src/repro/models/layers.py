@@ -1,0 +1,549 @@
+"""Layer implementations for every assigned family.
+
+Each layer is (init_*, *_forward) with pure pytree params. Forward paths here
+are the *training / prefill* (full-sequence) paths; single-token decode for
+recurrent mixers (`rglru_step`, `rwkv_step`) also lives here, while paged
+attention decode lives in `repro.core` (it owns the paged cache).
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.models.common import (
+    apply_norm, apply_rope, chunked_causal_attention, dense_init, ffn_act_fn,
+    init_norm, is_gated, rms_head_norm, split_keys,
+)
+
+# ======================================================================
+# GQA attention
+
+def init_attn(cfg, key, cross=False):
+    d, hq, hkv, dh = cfg.d_model, cfg.num_heads, cfg.num_kv_heads, cfg.head_dim
+    ks = split_keys(key, 4)
+    p = {
+        "wq": dense_init(ks[0], (d, hq * dh)),
+        "wk": dense_init(ks[1], (d, hkv * dh)),
+        "wv": dense_init(ks[2], (d, hkv * dh)),
+        "wo": dense_init(ks[3], (hq * dh, d)),
+    }
+    if cfg.qkv_bias and not cross:
+        p["bq"] = jnp.zeros((hq * dh,), jnp.float32)
+        p["bk"] = jnp.zeros((hkv * dh,), jnp.float32)
+        p["bv"] = jnp.zeros((hkv * dh,), jnp.float32)
+    if cfg.qk_norm:
+        p["q_norm"] = jnp.ones((dh,), jnp.float32)
+        p["k_norm"] = jnp.ones((dh,), jnp.float32)
+    return p
+
+
+def attn_qkv(cfg, p, x):
+    """Project x -> (q, k, v) with per-head layout (..., H, D)."""
+    B = x.shape[:-1]
+    hq, hkv, dh = cfg.num_heads, cfg.num_kv_heads, cfg.head_dim
+    q = x @ p["wq"].astype(x.dtype)
+    k = x @ p["wk"].astype(x.dtype)
+    v = x @ p["wv"].astype(x.dtype)
+    if "bq" in p:
+        q = q + p["bq"].astype(x.dtype)
+        k = k + p["bk"].astype(x.dtype)
+        v = v + p["bv"].astype(x.dtype)
+    q = q.reshape(*B, hq, dh)
+    k = k.reshape(*B, hkv, dh)
+    v = v.reshape(*B, hkv, dh)
+    if cfg.qk_norm:
+        q = rms_head_norm(p["q_norm"], q)
+        k = rms_head_norm(p["k_norm"], k)
+    return q, k, v
+
+
+def attn_forward(cfg, p, x, positions, *, local_window=None):
+    """Full-sequence causal attention. x: (B, S, d)."""
+    B, S, _ = x.shape
+    q, k, v = attn_qkv(cfg, p, x)
+    q = apply_rope(q, positions, cfg.rope_theta)
+    k = apply_rope(k, positions, cfg.rope_theta)
+    lw = cfg.local_window if local_window is None else local_window
+    o = chunked_causal_attention(q, k, v, local_window=lw)
+    o = o.reshape(B, S, cfg.num_heads * cfg.head_dim)
+    return o @ p["wo"].astype(x.dtype)
+
+
+def cross_attn_forward(cfg, p, x, memory):
+    """Encoder-decoder cross attention (no mask). memory: (B, Sm, d)."""
+    B, S, _ = x.shape
+    hq, hkv, dh = cfg.num_heads, cfg.num_kv_heads, cfg.head_dim
+    q = (x @ p["wq"].astype(x.dtype)).reshape(B, S, hq, dh)
+    k = (memory @ p["wk"].astype(x.dtype)).reshape(B, -1, hkv, dh)
+    v = (memory @ p["wv"].astype(x.dtype)).reshape(B, -1, hkv, dh)
+    g = hq // hkv
+    qg = q.reshape(B, S, hkv, g, dh)
+    s = jnp.einsum("bshgd,bmhd->bhgsm", qg.astype(jnp.float32),
+                   k.astype(jnp.float32)) / np.sqrt(dh)
+    a = jax.nn.softmax(s, -1)
+    o = jnp.einsum("bhgsm,bmhd->bshgd", a, v.astype(jnp.float32))
+    o = o.reshape(B, S, hq * dh).astype(x.dtype)
+    return o @ p["wo"].astype(x.dtype)
+
+
+# ======================================================================
+# MLA (DeepSeek-V2): latent KV with decoupled RoPE.
+
+def init_mla(cfg, key):
+    d, hq = cfg.d_model, cfg.num_heads
+    dh, dr, dv, r = cfg.head_dim, cfg.qk_rope_head_dim, cfg.v_head_dim, cfg.kv_lora_rank
+    ks = split_keys(key, 4)
+    return {
+        "wq": dense_init(ks[0], (d, hq * (dh + dr))),
+        "w_dkv": dense_init(ks[1], (d, r + dr)),        # down: latent + rope key
+        "kv_norm": jnp.ones((r,), jnp.float32),
+        "w_uk": dense_init(ks[2], (r, hq * dh)),        # latent -> per-head keys
+        "w_uv": dense_init(ks[2], (r, hq * dv)),
+        "wo": dense_init(ks[3], (hq * dv, d)),
+    }
+
+
+def mla_latent(cfg, p, x, positions):
+    """Compute per-token latent cache entry: (c_kv normed, k_rope roped)."""
+    r, dr = cfg.kv_lora_rank, cfg.qk_rope_head_dim
+    dkv = x @ p["w_dkv"].astype(x.dtype)
+    c, k_rope = dkv[..., :r], dkv[..., r:]
+    cf = c.astype(jnp.float32)
+    cf = cf * jax.lax.rsqrt(jnp.mean(cf * cf, -1, keepdims=True) + 1e-6)
+    c = (cf * p["kv_norm"]).astype(x.dtype)
+    k_rope = apply_rope(k_rope[..., None, :], positions, cfg.rope_theta)[..., 0, :]
+    return c, k_rope
+
+
+def mla_queries(cfg, p, x, positions):
+    hq, dh, dr = cfg.num_heads, cfg.head_dim, cfg.qk_rope_head_dim
+    q = (x @ p["wq"].astype(x.dtype)).reshape(*x.shape[:-1], hq, dh + dr)
+    q_nope, q_rope = q[..., :dh], q[..., dh:]
+    q_rope = apply_rope(q_rope, positions, cfg.rope_theta)
+    return q_nope, q_rope
+
+
+def mla_forward(cfg, p, x, positions):
+    """Full-sequence MLA (expanded form, efficient for prefill)."""
+    B, S, _ = x.shape
+    hq, dh, dv, r = cfg.num_heads, cfg.head_dim, cfg.v_head_dim, cfg.kv_lora_rank
+    dr = cfg.qk_rope_head_dim
+    q_nope, q_rope = mla_queries(cfg, p, x, positions)
+    c, k_rope = mla_latent(cfg, p, x, positions)
+    k_nope = (c @ p["w_uk"].astype(x.dtype)).reshape(B, S, hq, dh)
+    v = (c @ p["w_uv"].astype(x.dtype)).reshape(B, S, hq, dv)
+    # concat nope+rope into one dot space; rope part shared across heads
+    q = jnp.concatenate([q_nope, q_rope], -1) / np.sqrt(dh + dr)
+    k = jnp.concatenate([k_nope, jnp.broadcast_to(k_rope[:, :, None, :],
+                                                  (B, S, hq, dr))], -1)
+    # pad v to qk width so one chunked kernel serves both (common trick)
+    o = chunked_causal_attention(q * np.sqrt(dh + dr), k,
+                                 jnp.pad(v, ((0, 0),) * 3 + ((0, dh + dr - dv),)))
+    o = o[..., :dv].reshape(B, S, hq * dv)
+    return o @ p["wo"].astype(x.dtype)
+
+
+# ======================================================================
+# RG-LRU block (RecurrentGemma)
+
+def init_rglru(cfg, key):
+    d, w = cfg.d_model, cfg.lru_width or cfg.d_model
+    h = cfg.num_heads
+    wb = w // h
+    ks = split_keys(key, 6)
+    # constant-time-scale init: a in (0.9, 0.999)
+    a_init = jnp.log(jnp.expm1(
+        -jnp.log(jnp.linspace(0.9, 0.999, w))))  # softplus^-1 of -log a
+    return {
+        "wx": dense_init(ks[0], (d, w)),
+        "wy_gate": dense_init(ks[1], (d, w)),           # output gate branch
+        "conv_w": dense_init(ks[2], (cfg.conv1d_width, w)),
+        "conv_b": jnp.zeros((w,), jnp.float32),
+        "w_in_gate": dense_init(ks[3], (h, wb, wb), in_axis=1),
+        "w_rec_gate": dense_init(ks[4], (h, wb, wb), in_axis=1),
+        "a_param": a_init.astype(jnp.float32),
+        "wo": dense_init(ks[5], (w, d)),
+    }
+
+
+_C_RGLRU = 8.0
+
+
+def _rglru_gates(cfg, p, xw):
+    """Per-step gate computation. xw: (..., w) post-conv activations."""
+    h = cfg.num_heads
+    w = xw.shape[-1]
+    wb = w // h
+    xh = xw.reshape(*xw.shape[:-1], h, wb)
+    i_gate = jax.nn.sigmoid(jnp.einsum("...hb,hbc->...hc", xh.astype(jnp.float32),
+                                       p["w_in_gate"]))
+    r_gate = jax.nn.sigmoid(jnp.einsum("...hb,hbc->...hc", xh.astype(jnp.float32),
+                                       p["w_rec_gate"]))
+    i_gate = i_gate.reshape(*xw.shape[:-1], w)
+    r_gate = r_gate.reshape(*xw.shape[:-1], w)
+    log_a = -_C_RGLRU * r_gate * jax.nn.softplus(p["a_param"])
+    a = jnp.exp(log_a)
+    gated_x = xw.astype(jnp.float32) * i_gate
+    multiplier = jnp.sqrt(jnp.maximum(1.0 - jnp.exp(2.0 * log_a), 1e-12))
+    return a, gated_x * multiplier
+
+
+def causal_conv1d(p, x):
+    """Depthwise causal conv, width cw. x: (B, S, w)."""
+    cw = p["conv_w"].shape[0]
+    out = jnp.zeros_like(x, dtype=jnp.float32)
+    for i in range(cw):
+        shifted = jnp.pad(x, ((0, 0), (cw - 1 - i, 0), (0, 0)))[:, :x.shape[1]]
+        out = out + shifted.astype(jnp.float32) * p["conv_w"][i]
+    return (out + p["conv_b"]).astype(x.dtype)
+
+
+def rglru_forward(cfg, p, x):
+    """Full-sequence RG-LRU block. x: (B, S, d) -> (B, S, d)."""
+    xw = (x @ p["wx"].astype(x.dtype))
+    xw = causal_conv1d(p, xw)
+    a, b = _rglru_gates(cfg, p, xw)          # h_t = a_t h_{t-1} + b_t
+    def comb(l, r):
+        al, bl = l
+        ar, br = r
+        return al * ar, bl * ar + br
+    _, h = jax.lax.associative_scan(comb, (a, b), axis=1)
+    gate = jax.nn.gelu((x @ p["wy_gate"].astype(x.dtype)).astype(jnp.float32))
+    out = (h * gate).astype(x.dtype)
+    return out @ p["wo"].astype(x.dtype)
+
+
+def rglru_step(cfg, p, x, state):
+    """Single-token step. x: (B, d); state: {"h": (B,w), "conv": (B,cw-1,w)}."""
+    xw = x @ p["wx"].astype(x.dtype)
+    cw = p["conv_w"].shape[0]
+    hist = jnp.concatenate([state["conv"], xw[:, None]], 1)   # (B, cw, w)
+    xc = (jnp.einsum("bcw,cw->bw", hist.astype(jnp.float32), p["conv_w"])
+          + p["conv_b"]).astype(x.dtype)
+    a, b = _rglru_gates(cfg, p, xc)
+    h = a * state["h"] + b
+    gate = jax.nn.gelu((x @ p["wy_gate"].astype(x.dtype)).astype(jnp.float32))
+    out = (h * gate).astype(x.dtype) @ p["wo"].astype(x.dtype)
+    return out, {"h": h, "conv": hist[:, 1:]}
+
+
+def rglru_init_state(cfg, B, dtype):
+    w = cfg.lru_width or cfg.d_model
+    return {"h": jnp.zeros((B, w), jnp.float32),
+            "conv": jnp.zeros((B, cfg.conv1d_width - 1, w), dtype)}
+
+
+# ======================================================================
+# RWKV-6 (Finch) time mixing: data-dependent decay.
+
+_DECAY_LORA = 64
+
+
+def init_rwkv(cfg, key):
+    d = cfg.d_model
+    h, K = cfg.num_heads, cfg.head_dim
+    ks = split_keys(key, 8)
+    return {
+        "mu": 0.5 * jnp.ones((5, d), jnp.float32),   # token-shift mix r,k,v,g,w
+        "w_r": dense_init(ks[0], (d, d)),
+        "w_k": dense_init(ks[1], (d, d)),
+        "w_v": dense_init(ks[2], (d, d)),
+        "w_g": dense_init(ks[3], (d, d)),
+        "w0": jnp.full((d,), -6.0, jnp.float32),      # base decay (w≈exp(-exp(w0)))
+        "w_lora_a": dense_init(ks[4], (d, _DECAY_LORA)),
+        "w_lora_b": dense_init(ks[5], (_DECAY_LORA, d), scale=0.1),
+        "u": dense_init(ks[6], (h, K), scale=1.0),    # bonus for current token
+        "ln_x_scale": jnp.ones((d,), jnp.float32),
+        "ln_x_bias": jnp.zeros((d,), jnp.float32),
+        "w_o": dense_init(ks[7], (d, d)),
+    }
+
+
+def _rwkv_proj(cfg, p, x, x_prev):
+    """Token-shift lerp + projections. x: (..., d); x_prev same shape."""
+    mixed = [x + (x_prev - x) * p["mu"][i].astype(x.dtype) for i in range(5)]
+    xr, xk, xv, xg, xw = mixed
+    r = xr @ p["w_r"].astype(x.dtype)
+    k = xk @ p["w_k"].astype(x.dtype)
+    v = xv @ p["w_v"].astype(x.dtype)
+    g = xg @ p["w_g"].astype(x.dtype)
+    # data-dependent decay (the Finch contribution)
+    lora = jnp.tanh(xw.astype(jnp.float32) @ p["w_lora_a"]) @ p["w_lora_b"]
+    logw = -jnp.exp(jnp.clip(p["w0"] + lora, -20.0, 2.0))   # log(decay) in (-inf, 0)
+    return r, k, v, g, logw
+
+
+def _rwkv_out(cfg, p, y, g, B, S):
+    """Head-group norm + gate + output proj. y: (B,S,h,K) fp32."""
+    h, K = cfg.num_heads, cfg.head_dim
+    mu = jnp.mean(y, -1, keepdims=True)
+    var = jnp.var(y, -1, keepdims=True)
+    y = (y - mu) * jax.lax.rsqrt(var + 64e-5)
+    y = y.reshape(B, S, h * K) * p["ln_x_scale"] + p["ln_x_bias"]
+    y = y * jax.nn.silu(g.astype(jnp.float32))
+    return y.astype(g.dtype) @ p["w_o"].astype(g.dtype)
+
+
+def rwkv_forward_naive(cfg, p, x):
+    """Reference O(T) scan — oracle for the chunked path. x: (B,S,d)."""
+    B, S, d = x.shape
+    h, K = cfg.num_heads, cfg.head_dim
+    x_prev = jnp.pad(x, ((0, 0), (1, 0), (0, 0)))[:, :-1]
+    r, k, v, g, logw = _rwkv_proj(cfg, p, x, x_prev)
+    rh = r.reshape(B, S, h, K).astype(jnp.float32)
+    kh = k.reshape(B, S, h, K).astype(jnp.float32)
+    vh = v.reshape(B, S, h, K).astype(jnp.float32)
+    wh = jnp.exp(logw.reshape(B, S, h, K))
+    u = p["u"]
+
+    def step(S_state, inp):
+        rt, kt, vt, wt = inp
+        kv = jnp.einsum("bhk,bhv->bhkv", kt, vt)
+        yt = jnp.einsum("bhk,bhkv->bhv", rt, S_state + u[None, :, :, None] * kv)
+        S_new = wt[..., None] * S_state + kv
+        return S_new, yt
+
+    S0 = jnp.zeros((B, h, K, K), jnp.float32)
+    _, y = jax.lax.scan(step, S0,
+                        (rh.transpose(1, 0, 2, 3), kh.transpose(1, 0, 2, 3),
+                         vh.transpose(1, 0, 2, 3), wh.transpose(1, 0, 2, 3)))
+    y = y.transpose(1, 0, 2, 3)                   # (B,S,h,K)
+    return _rwkv_out(cfg, p, y, g, B, S)
+
+
+def rwkv_forward(cfg, p, x, *, chunk=32, remat_groups=8, valid=None,
+                 return_state=False):
+    """Chunked-parallel WKV6 (matmul form), numerically safe: within-chunk
+    decay factors are exp of non-positive sums. x: (B,S,d).
+
+    ``valid`` (B,S) masks padding (identity state updates: w=1, k=0), so the
+    final carry equals the state at the last valid token — the serving
+    prefill path uses this (``return_state=True``) instead of the O(S)
+    token scan (EXPERIMENTS.md §Perf iteration A)."""
+    B, S, d = x.shape
+    h, K = cfg.num_heads, cfg.head_dim
+    if S % chunk != 0:
+        assert not return_state and valid is None
+        return rwkv_forward_naive(cfg, p, x)
+    x_prev = jnp.pad(x, ((0, 0), (1, 0), (0, 0)))[:, :-1]
+    r, k, v, g, logw = _rwkv_proj(cfg, p, x, x_prev)
+    if valid is not None:
+        logw = jnp.where(valid[..., None], logw, 0.0)
+        k = jnp.where(valid[..., None], k, 0.0)
+    nC = S // chunk
+    # keep r/k/v in the compute dtype across the scan boundary — the
+    # resharding collectives around the misaligned head dim then move half
+    # the bytes (§Perf iteration A5); cast to f32 per-chunk inside the body.
+    rs = r.reshape(B, nC, chunk, h, K)
+    ks_ = k.reshape(B, nC, chunk, h, K)
+    vs = v.reshape(B, nC, chunk, h, K)
+    lw = logw.reshape(B, nC, chunk, h, K)
+    u = p["u"]
+
+    def chunk_body(S_state, inp):
+        rc, kc, vc, lwc = inp                     # (B, c, h, K)
+        rc = rc.astype(jnp.float32)
+        kc = kc.astype(jnp.float32)
+        vc = vc.astype(jnp.float32)
+        L = jnp.cumsum(lwc, axis=1)               # inclusive logP_t
+        Lprev = L - lwc                           # logP_{t-1}
+        # inter-chunk: y_t += (r_t * exp(Lprev_t)) @ S_state
+        q_in = rc * jnp.exp(Lprev)
+        y = jnp.einsum("bchk,bhkv->bchv", q_in, S_state)
+        # intra-chunk: decay_{t,s,k} = exp(Lprev_t - L_s) for s < t (<=0 safe)
+        dec = Lprev[:, :, None] - L[:, None, :]   # (B, t, s, h, K)
+        A = jnp.einsum("bthk,bshk,btshk->bhts", rc, ks_chunk_safe(kc),
+                       jnp.exp(jnp.minimum(dec, 0.0)))
+        tri = jnp.tril(jnp.ones((chunk, chunk), jnp.float32), -1)
+        A = A * tri
+        y = y + jnp.einsum("bhts,bshv->bthv", A, vc)
+        # current-token bonus
+        y = y + jnp.einsum("bchk,bchk,bchv->bchv", rc, u[None, None] * kc, vc)
+        # carry: S' = exp(L_end) S + sum_s exp(L_end - L_s) k_s v_s
+        Lend = L[:, -1][:, None]                  # (B,1,h,K)
+        kdec = kc * jnp.exp(Lend - L)
+        S_new = jnp.exp(Lend[:, 0])[..., None] * S_state + \
+            jnp.einsum("bshk,bshv->bhkv", kdec, vc)
+        return S_new, y
+
+    def ks_chunk_safe(kc):
+        return kc
+
+    # group chunks for remat: outer scan over groups, inner over chunks
+    grp = max(1, nC // remat_groups)
+    while nC % grp != 0:
+        grp -= 1
+    nG = nC // grp
+    stack = lambda a: a.reshape(B, nG, grp, chunk, h, K).transpose(1, 2, 0, 3, 4, 5)
+    seq = (stack(rs), stack(ks_), stack(vs), stack(lw))
+
+    @jax.checkpoint
+    def group_body(S_state, ginp):
+        def inner(Si, ci):
+            return chunk_body(Si, ci)
+        S_out, ys = jax.lax.scan(inner, S_state, ginp)
+        return S_out, ys
+
+    S0 = jnp.zeros((B, h, K, K), jnp.float32)
+    S_fin, y = jax.lax.scan(group_body, S0, seq)  # (nG, grp, B, chunk, h, K)
+    y = y.transpose(2, 0, 1, 3, 4, 5).reshape(B, S, h, K)
+    out = _rwkv_out(cfg, p, y, g, B, S)
+    if return_state:
+        return out, S_fin
+    return out
+
+
+def rwkv_step(cfg, p, x, state):
+    """Single-token step. x: (B,d); state {"S": (B,h,K,K) f32, "shift": (B,d)}."""
+    B, d = x.shape
+    h, K = cfg.num_heads, cfg.head_dim
+    r, k, v, g, logw = _rwkv_proj(cfg, p, x, state["shift"])
+    rh = r.reshape(B, h, K).astype(jnp.float32)
+    kh = k.reshape(B, h, K).astype(jnp.float32)
+    vh = v.reshape(B, h, K).astype(jnp.float32)
+    wh = jnp.exp(logw.reshape(B, h, K))
+    kv = jnp.einsum("bhk,bhv->bhkv", kh, vh)
+    y = jnp.einsum("bhk,bhkv->bhv", rh, state["S"] + p["u"][None, :, :, None] * kv)
+    S_new = wh[..., None] * state["S"] + kv
+    out = _rwkv_out(cfg, p, y[:, None], g[:, None], B, 1)[:, 0]
+    return out, {"S": S_new, "shift": x}
+
+
+def rwkv_init_state(cfg, B, dtype):
+    h, K = cfg.num_heads, cfg.head_dim
+    return {"S": jnp.zeros((B, h, K, K), jnp.float32),
+            "shift": jnp.zeros((B, cfg.d_model), dtype)}
+
+
+# ======================================================================
+# FFN (dense + MoE)
+
+def init_ffn(cfg, key, d_ff=None):
+    d = cfg.d_model
+    f = d_ff or cfg.d_ff
+    ks = split_keys(key, 3)
+    p = {"w1": dense_init(ks[0], (d, f)), "w2": dense_init(ks[1], (f, d))}
+    if is_gated(cfg.ffn_act):
+        p["w3"] = dense_init(ks[2], (d, f))
+    return p
+
+
+def ffn_forward(cfg, p, x):
+    act = ffn_act_fn(cfg.ffn_act)
+    a = x @ p["w1"].astype(x.dtype)
+    b = x @ p["w3"].astype(x.dtype) if "w3" in p else None
+    return act(a, b) @ p["w2"].astype(x.dtype)
+
+
+def init_moe(cfg, key):
+    d, E, f = cfg.d_model, cfg.num_experts, cfg.moe_d_ff
+    ks = split_keys(key, 5)
+    p = {
+        "router": dense_init(ks[0], (d, E)),
+        "w1": dense_init(ks[1], (E, d, f), in_axis=1),
+        "w2": dense_init(ks[2], (E, f, d), in_axis=1),
+    }
+    if is_gated(cfg.ffn_act):
+        p["w3"] = dense_init(ks[3], (E, d, f), in_axis=1)
+    if cfg.num_shared_experts:
+        p["shared"] = init_ffn(cfg, ks[4],
+                               d_ff=cfg.moe_d_ff * cfg.num_shared_experts)
+    return p
+
+
+def moe_forward(cfg, p, x, *, capacity_factor=None, valid=None, groups=None):
+    """Capacity-based top-k MoE (GShard-style dispatch). x: (B, S, d).
+
+    Experts shard over the "model"/"expert" mesh axis (EP). Dispatch is
+    computed per *group* (= data shard, via repro.models.moe_ctx): routing,
+    capacity and the token gather then stay shard-local, so only the
+    (G, E, C_local, d) dispatch buffers cross the mesh instead of an
+    all-gather of the full activations (EXPERIMENTS.md §Perf iteration B).
+    groups=1 is the plain single-group GShard dispatch. ``valid`` (B, S)
+    masks padding tokens out of the capacity competition (serving path).
+    """
+    from repro.models import moe_ctx
+    B, S, d = x.shape
+    E, k = cfg.num_experts, cfg.num_experts_per_tok
+    T = B * S
+    if capacity_factor is None:
+        capacity_factor = cfg.moe_capacity_factor
+    G = groups if groups is not None else moe_ctx.dispatch_groups.get()
+    if G < 1 or T % G != 0:
+        G = 1
+    Tg = T // G
+    xt = x.reshape(T, d)
+    logits = (xt @ p["router"].astype(x.dtype)).astype(jnp.float32)
+    probs = jax.nn.softmax(logits, -1)
+    gate_vals, expert_ids = jax.lax.top_k(probs, k)        # (T, k)
+    gate_vals = gate_vals / jnp.maximum(gate_vals.sum(-1, keepdims=True), 1e-9)
+
+    C = int(np.ceil(Tg * k / E * capacity_factor))
+    C = max(C, 4)
+    flat_e = expert_ids.reshape(G, Tg * k)                 # token-major
+    if valid is not None:
+        vt = jnp.repeat(valid.reshape(-1), k).reshape(G, Tg * k)
+        flat_e = jnp.where(vt, flat_e, E)                  # park on no expert
+    onehot = jax.nn.one_hot(flat_e, E, dtype=jnp.int32)    # (G, Tg*k, E)
+    pos_in_e = (jnp.cumsum(onehot, axis=1) - 1)
+    pos_in_e = jnp.sum(pos_in_e * onehot, axis=2)          # (G, Tg*k)
+    keep = pos_in_e < C
+    if valid is not None:
+        keep = keep & vt
+    slot = jnp.where(keep, flat_e * C + pos_in_e, E * C)   # (G, Tg*k)
+    tok_local = jnp.broadcast_to(
+        jnp.repeat(jnp.arange(Tg), k)[None], (G, Tg * k))
+    # dispatch buffer of LOCAL token ids per group (G, E*C); pad row = Tg
+    buf = jnp.full((G, E * C + 1), Tg, jnp.int32)
+    buf = buf.at[jnp.arange(G)[:, None], slot].set(tok_local)
+    buf_tok = buf[:, :E * C]
+    xg = jnp.concatenate(
+        [xt.reshape(G, Tg, d), jnp.zeros((G, 1, d), xt.dtype)], axis=1)
+    xe = jnp.take_along_axis(xg, buf_tok[..., None], axis=1)  # (G, E*C, d)
+    xe = xe.reshape(G, E, C, d)
+    spec = moe_ctx.dispatch_spec.get()
+    if spec is not None:
+        xe = jax.lax.with_sharding_constraint(xe, spec)
+    act = ffn_act_fn(cfg.ffn_act)
+    a = jnp.einsum("gecd,edf->gecf", xe, p["w1"].astype(x.dtype))
+    b = jnp.einsum("gecd,edf->gecf", xe, p["w3"].astype(x.dtype)) \
+        if "w3" in p else None
+    h = jnp.einsum("gecf,efd->gecd", act(a, b), p["w2"].astype(x.dtype))
+    h = h.reshape(G, E * C, d)
+    # combine: gather own contributions back per group, weighted by gates
+    gflat = (gate_vals.reshape(G, Tg * k) * keep).astype(x.dtype)
+    contrib = jnp.take_along_axis(
+        h, jnp.where(keep, slot, 0)[..., None], axis=1)    # (G, Tg*k, d)
+    contrib = jnp.where(keep[..., None], contrib * gflat[..., None], 0)
+    y = jnp.zeros((G, Tg, d), x.dtype).at[
+        jnp.arange(G)[:, None], tok_local].add(contrib)
+    y = y.reshape(T, d)
+    if "shared" in p:
+        y = y + ffn_forward(cfg, p["shared"], xt)
+    return y.reshape(B, S, d)
+
+
+# ======================================================================
+# layer init dispatch (one transformer block = mixer + ffn)
+
+def init_layer(cfg, key, kind, ffn_kind, *, with_cross=False):
+    ks = split_keys(key, 4)
+    p = {"ln1": init_norm(cfg, cfg.d_model), "ln2": init_norm(cfg, cfg.d_model)}
+    if kind == "attn":
+        p["attn"] = init_mla(cfg, ks[0]) if cfg.attn_type == "mla" \
+            else init_attn(cfg, ks[0])
+    elif kind == "rglru":
+        p["rglru"] = init_rglru(cfg, ks[0])
+    elif kind == "rwkv":
+        p["rwkv"] = init_rwkv(cfg, ks[0])
+    else:
+        raise ValueError(kind)
+    if ffn_kind == "moe":
+        p["moe"] = init_moe(cfg, ks[1])
+    else:
+        p["ffn"] = init_ffn(cfg, ks[1])
+    if with_cross:
+        p["ln_x"] = init_norm(cfg, cfg.d_model)
+        p["cross"] = init_attn(cfg, ks[2], cross=True)
+    return p

@@ -1,0 +1,248 @@
+"""Generic LM built from an ArchConfig.
+
+Layer stacking strategy (compile-time critical for 26–48 layer archs):
+consecutive layers with the same (mixer, ffn) spec pattern are grouped into
+*stages*; a stage of n pattern-units is a ``lax.scan`` over stacked params
+with an optionally remat'ed body. Heterogeneous patterns (recurrentgemma's
+(rglru, rglru, attn)) scan over whole pattern units; remainders unroll.
+
+The training/prefill forward lives here; paged decode lives in repro.core.
+"""
+from __future__ import annotations
+
+import functools
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.configs.base import ArchConfig, MIX_ATTN
+from repro.models import layers as L
+from repro.models.common import apply_norm, dense_init, init_norm, split_keys
+
+
+# ----------------------------------------------------------------------
+# layer plan
+
+def layer_specs(cfg: ArchConfig):
+    """Per-layer (mixer_kind, ffn_kind)."""
+    kinds = cfg.layer_kinds()
+    specs = []
+    for i, kind in enumerate(kinds):
+        if cfg.num_experts > 0 and i >= cfg.first_dense_layers:
+            specs.append((kind, "moe"))
+        else:
+            specs.append((kind, "dense"))
+    return specs
+
+
+def build_plan(cfg: ArchConfig):
+    """Split layers into head (unrolled), main (scanned units), tail (unrolled)."""
+    specs = layer_specs(cfg)
+    p = len(cfg.block_pattern)
+    head = specs[:cfg.first_dense_layers]
+    rest = specs[cfg.first_dense_layers:]
+    n_units = len(rest) // p
+    main_units = [rest[i * p:(i + 1) * p] for i in range(n_units)]
+    tail = rest[n_units * p:]
+    # all units must be identical specs for stacking
+    if main_units and any(u != main_units[0] for u in main_units):
+        # fall back: unroll everything (never triggers for assigned archs)
+        return {"head": specs, "unit": [], "n_units": 0, "tail": []}
+    return {"head": head, "unit": main_units[0] if main_units else [],
+            "n_units": n_units, "tail": tail}
+
+
+# ----------------------------------------------------------------------
+# init
+
+def _init_unit(cfg, key, unit_specs, with_cross=False):
+    ks = split_keys(key, max(1, len(unit_specs)))
+    return {str(i): L.init_layer(cfg, ks[i], kind, ffn, with_cross=with_cross)
+            for i, (kind, ffn) in enumerate(unit_specs)}
+
+
+def init(cfg: ArchConfig, key) -> dict:
+    plan = build_plan(cfg)
+    ks = split_keys(key, 8)
+    dt = jnp.dtype(cfg.dtype)
+    params = {
+        "embed": dense_init(ks[0], (cfg.vocab_size, cfg.d_model), in_axis=1,
+                            dtype=jnp.float32),
+        "final_norm": init_norm(cfg, cfg.d_model),
+    }
+    if not cfg.tie_embeddings:
+        params["unembed"] = dense_init(ks[1], (cfg.d_model, cfg.vocab_size))
+    with_cross = cfg.is_enc_dec
+    if plan["head"]:
+        hk = split_keys(ks[2], len(plan["head"]))
+        params["head"] = [L.init_layer(cfg, hk[i], kind, ffn,
+                                       with_cross=with_cross)
+                          for i, (kind, ffn) in enumerate(plan["head"])]
+    if plan["n_units"]:
+        uk = split_keys(ks[3], plan["n_units"])
+        units = [_init_unit(cfg, k, plan["unit"], with_cross) for k in uk]
+        params["main"] = jax.tree.map(lambda *xs: jnp.stack(xs), *units)
+    if plan["tail"]:
+        tk = split_keys(ks[4], len(plan["tail"]))
+        params["tail"] = [L.init_layer(cfg, tk[i], kind, ffn,
+                                       with_cross=with_cross)
+                          for i, (kind, ffn) in enumerate(plan["tail"])]
+    if cfg.is_enc_dec:
+        ek = split_keys(ks[5], cfg.encoder_layers)
+        enc_units = [{"0": L.init_layer(cfg, k, "attn", "dense")} for k in ek]
+        params["encoder"] = {
+            "layers": jax.tree.map(lambda *xs: jnp.stack(xs), *enc_units),
+            "final_norm": init_norm(cfg, cfg.d_model),
+        }
+    return params
+
+
+def param_specs(cfg: ArchConfig):
+    """Shape/dtype tree without allocating (dry-run path)."""
+    return jax.eval_shape(lambda: init(cfg, jax.random.key(0)))
+
+
+# ----------------------------------------------------------------------
+# forward (training / prefill)
+
+def apply_layer(cfg, p, x, positions, kind, ffn_kind, *, memory=None,
+                local_window=None):
+    h = apply_norm(cfg, p["ln1"], x)
+    if kind == "attn":
+        if cfg.attn_type == "mla":
+            mix = L.mla_forward(cfg, p["attn"], h, positions)
+        else:
+            mix = L.attn_forward(cfg, p["attn"], h, positions,
+                                 local_window=local_window)
+    elif kind == "rglru":
+        mix = L.rglru_forward(cfg, p["rglru"], h)
+    elif kind == "rwkv":
+        mix = L.rwkv_forward(cfg, p["rwkv"], h)
+    else:
+        raise ValueError(kind)
+    x = x + mix
+    if memory is not None and "cross" in p:
+        x = x + L.cross_attn_forward(cfg, p["cross"],
+                                     apply_norm(cfg, p["ln_x"], x), memory)
+    h2 = apply_norm(cfg, p["ln2"], x)
+    if ffn_kind == "moe":
+        x = x + L.moe_forward(cfg, p["moe"], h2)
+    else:
+        x = x + L.ffn_forward(cfg, p["ffn"], h2)
+    return x
+
+
+def _unit_body(cfg, unit_specs, remat, memory=None):
+    def body(x_pos, unit_p):
+        x, positions = x_pos
+        for i, (kind, ffn) in enumerate(unit_specs):
+            x = apply_layer(cfg, unit_p[str(i)], x, positions, kind, ffn,
+                            memory=memory)
+        return (x, positions), None
+    if remat:
+        body = jax.checkpoint(body, prevent_cse=False)
+    return body
+
+
+def encode(cfg, params, frame_embeds):
+    """Whisper encoder: bidirectional self-attention over frame embeddings."""
+    x = frame_embeds.astype(jnp.dtype(cfg.dtype))
+    enc = params["encoder"]
+
+    def body(x, lp):
+        p = lp["0"]
+        h = apply_norm(cfg, p["ln1"], x)
+        x = x + L.cross_attn_forward(cfg, p["attn"], h, h)   # unmasked self
+        h2 = apply_norm(cfg, p["ln2"], x)
+        x = x + L.ffn_forward(cfg, p["ffn"], h2)
+        return x, None
+
+    x, _ = jax.lax.scan(jax.checkpoint(body, prevent_cse=False), x,
+                        enc["layers"])
+    return apply_norm(cfg, enc["final_norm"], x)
+
+
+def forward_hidden(cfg: ArchConfig, params, tokens, *, positions=None,
+                   prefix_embeds=None, frame_embeds=None, remat=True):
+    """Token ids -> final hidden states (B, S_total, d)."""
+    dt = jnp.dtype(cfg.dtype)
+    x = params["embed"].astype(dt)[tokens]
+    if prefix_embeds is not None:                       # VLM patch prefix
+        x = jnp.concatenate([prefix_embeds.astype(dt), x], axis=1)
+    B, S, _ = x.shape
+    if positions is None:
+        positions = jnp.broadcast_to(jnp.arange(S), (B, S))
+    memory = None
+    if cfg.is_enc_dec:
+        if frame_embeds is None:
+            raise ValueError("enc-dec arch requires frame_embeds")
+        memory = encode(cfg, params, frame_embeds)
+    plan = build_plan(cfg)
+    for p_, (kind, ffn) in zip(params.get("head", []), plan["head"]):
+        x = apply_layer(cfg, p_, x, positions, kind, ffn, memory=memory)
+    if plan["n_units"]:
+        body = _unit_body(cfg, plan["unit"], remat, memory=memory)
+        (x, _), _ = jax.lax.scan(body, (x, positions), params["main"])
+    for p_, (kind, ffn) in zip(params.get("tail", []), plan["tail"]):
+        x = apply_layer(cfg, p_, x, positions, kind, ffn, memory=memory)
+    return apply_norm(cfg, params["final_norm"], x)
+
+
+def unembed_matrix(cfg, params):
+    if cfg.tie_embeddings:
+        return params["embed"].T
+    return params["unembed"]
+
+
+def forward(cfg, params, tokens, **kw):
+    h = forward_hidden(cfg, params, tokens, **kw)
+    w = unembed_matrix(cfg, params).astype(h.dtype)
+    return h @ w
+
+
+# ----------------------------------------------------------------------
+# chunked-vocab cross-entropy: never materializes (B, S, V) logits.
+
+def chunked_xent(cfg, params, hidden, labels, *, chunk=256, ignore_id=-100):
+    """hidden: (B, S, d); labels: (B, S). Returns (sum_loss, n_tokens)."""
+    B, S, d = hidden.shape
+    W = unembed_matrix(cfg, params)
+    nc = -(-S // chunk)
+    pad = nc * chunk - S
+    h = jnp.pad(hidden, ((0, 0), (0, pad), (0, 0)))
+    lb = jnp.pad(labels, ((0, 0), (0, pad)), constant_values=ignore_id)
+    h = h.reshape(B, nc, chunk, d).transpose(1, 0, 2, 3)
+    lb = lb.reshape(B, nc, chunk).transpose(1, 0, 2)
+
+    @functools.partial(jax.checkpoint, prevent_cse=False)
+    def body(carry, inp):
+        loss_sum, n = carry
+        hc, lc = inp
+        logits = (hc @ W.astype(hc.dtype)).astype(jnp.float32)
+        lse = jax.nn.logsumexp(logits, -1)
+        tgt = jnp.take_along_axis(
+            logits, jnp.maximum(lc, 0)[..., None], -1)[..., 0]
+        valid = lc != ignore_id
+        loss_sum = loss_sum + jnp.sum(jnp.where(valid, lse - tgt, 0.0))
+        n = n + jnp.sum(valid)
+        return (loss_sum, n), None
+
+    (loss_sum, n), _ = jax.lax.scan(
+        body, (jnp.zeros((), jnp.float32), jnp.zeros((), jnp.int32)), (h, lb))
+    return loss_sum, n
+
+
+def lm_loss(cfg, params, batch, *, vocab_chunk=256):
+    """batch: {"tokens": (B,S), "labels": (B,S), optional frontend embeds}."""
+    hidden = forward_hidden(
+        cfg, params, batch["tokens"],
+        prefix_embeds=batch.get("prefix_embeds"),
+        frame_embeds=batch.get("frame_embeds"))
+    labels = batch["labels"]
+    if "prefix_embeds" in batch:                 # loss only over text tokens
+        P = batch["prefix_embeds"].shape[1]
+        hidden = hidden[:, P:]
+    loss_sum, n = chunked_xent(cfg, params, hidden, labels, chunk=vocab_chunk)
+    return loss_sum / jnp.maximum(n, 1)

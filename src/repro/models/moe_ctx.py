@@ -1,0 +1,34 @@
+"""Context for distribution-aware MoE dispatch (set by launchers/dry-run).
+
+``dispatch_groups`` — number of data shards: the GShard dispatch computes
+routing/capacity per group so the token gather stays shard-local and only the
+(E, C_local, d) dispatch buffers cross the mesh (EXPERIMENTS.md §Perf
+iteration B). ``dispatch_spec``/``combine_spec`` — optional PartitionSpecs
+applied via with_sharding_constraint (requires an ambient mesh).
+"""
+import contextvars
+
+dispatch_groups = contextvars.ContextVar("moe_dispatch_groups", default=1)
+dispatch_spec = contextvars.ContextVar("moe_dispatch_spec", default=None)
+
+# MLA serving: PartitionSpec for the (B, hq, r+dr) absorbed queries. Without
+# it, q is head-sharded while the latent cache is width-sharded (both on
+# "model") and GSPMD all-gathers the cache to resolve the conflict —
+# ~0.6 GB/chip/layer at decode_32k (§Perf iteration D2).
+mla_q_spec = contextvars.ContextVar("mla_q_spec", default=None)
+
+
+class moe_partitioning:
+    """Context manager used by launchers: with moe_partitioning(16, spec)."""
+
+    def __init__(self, groups, spec=None):
+        self.groups, self.spec = groups, spec
+
+    def __enter__(self):
+        self._tg = dispatch_groups.set(self.groups)
+        self._ts = dispatch_spec.set(self.spec)
+        return self
+
+    def __exit__(self, *a):
+        dispatch_groups.reset(self._tg)
+        dispatch_spec.reset(self._ts)

@@ -1,0 +1,45 @@
+"""int8 cross-pod gradient reduction with error feedback.
+
+At multi-pod scale the "pod" mesh axis crosses the slow DCI links, so the
+cross-pod gradient all-reduce is the collective-roofline term that hurts.
+We compress exactly (and only) that hop: within-pod reductions stay in
+fp32/bf16 via GSPMD ("auto" axes), while the pod axis is manual
+(``shard_map``) and reduces int8-quantized gradients with per-leaf shared
+scales and error feedback (the quantization residual is carried to the next
+step, preserving convergence — 1-bit-Adam/EF-SGD lineage).
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+
+
+def quantize_psum_dequant(g, err, axis_name, *, levels=127):
+    """One leaf: error-feedback int8 all-reduce over ``axis_name``."""
+    gf = g.astype(jnp.float32) + err
+    amax = jax.lax.pmax(jnp.max(jnp.abs(gf)), axis_name)
+    scale = jnp.maximum(amax, 1e-12) / levels
+    q = jnp.clip(jnp.round(gf / scale), -levels, levels).astype(jnp.int32)
+    deq_local = q.astype(jnp.float32) * scale
+    new_err = gf - deq_local
+    n = jax.lax.psum(1, axis_name)
+    total = jax.lax.psum(q, axis_name)          # int wire format
+    return (total.astype(jnp.float32) * scale / n).astype(g.dtype), new_err
+
+
+def init_error_state(params):
+    return jax.tree.map(lambda p: jnp.zeros(p.shape, jnp.float32), params)
+
+
+def pod_compressed_mean(grads, err_state, axis_name="pod"):
+    """Tree-mapped EF-int8 mean over the pod axis. Must be called inside a
+    shard_map region where ``axis_name`` is manual."""
+    flat_g, treedef = jax.tree.flatten(grads)
+    flat_e = jax.tree.leaves(err_state)
+    outs = [quantize_psum_dequant(g, e, axis_name)
+            for g, e in zip(flat_g, flat_e)]
+    new_g = jax.tree.unflatten(treedef, [o[0] for o in outs])
+    new_e = jax.tree.unflatten(treedef, [o[1] for o in outs])
+    return new_g, new_e

@@ -1,0 +1,71 @@
+"""Training step builder: loss + grad accumulation + (optionally
+pod-compressed) reduction + AdamW. Distribution is orthogonal: the caller
+jits this with in/out shardings from repro.distributed.sharding.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+
+from repro.models import lm
+from repro.training import optimizer as opt
+from repro.training.compress_grads import pod_compressed_mean
+
+
+def microbatch(batch, accum_steps):
+    def split(x):
+        B = x.shape[0]
+        return x.reshape(accum_steps, B // accum_steps, *x.shape[1:])
+    return jax.tree.map(split, batch)
+
+
+def build_loss_fn(cfg, *, vocab_chunk=256):
+    def loss_fn(params, batch):
+        return lm.lm_loss(cfg, params, batch, vocab_chunk=vocab_chunk)
+    return loss_fn
+
+
+def build_train_step(cfg, adamw: opt.AdamWConfig, *, accum_steps=1,
+                     vocab_chunk=256, pod_axis=None):
+    """Returns train_step(params, opt_state, err_state, batch) ->
+    (params, opt_state, err_state, metrics).
+
+    pod_axis: if set (e.g. "pod"), gradients are reduced across that manual
+    mesh axis with EF-int8 compression; the step must then run under
+    shard_map with that axis manual (launch/train.py arranges it).
+    """
+    loss_fn = build_loss_fn(cfg, vocab_chunk=vocab_chunk)
+
+    def grads_of(params, batch):
+        if accum_steps == 1:
+            return jax.value_and_grad(loss_fn)(params, batch)
+        micro = microbatch(batch, accum_steps)
+
+        def body(carry, mb):
+            loss_acc, g_acc = carry
+            loss, g = jax.value_and_grad(loss_fn)(params, mb)
+            g_acc = jax.tree.map(
+                lambda a, b: a + b.astype(jnp.float32), g_acc, g)
+            return (loss_acc + loss, g_acc), None
+
+        g0 = jax.tree.map(lambda p: jnp.zeros(p.shape, jnp.float32), params)
+        (loss_sum, g_sum), _ = jax.lax.scan(
+            body, (jnp.zeros((), jnp.float32), g0), micro)
+        inv = 1.0 / accum_steps
+        return loss_sum * inv, jax.tree.map(lambda g: g * inv, g_sum)
+
+    def train_step(params, opt_state, err_state, batch):
+        loss, grads = grads_of(params, batch)
+        if pod_axis is not None:
+            grads, err_state = pod_compressed_mean(grads, err_state,
+                                                   axis_name=pod_axis)
+            loss = jax.lax.pmean(loss, pod_axis)
+        new_params, new_opt, gnorm = opt.adamw_update(adamw, params, grads,
+                                                      opt_state)
+        metrics = {"loss": loss, "grad_norm": gnorm,
+                   "lr": opt.lr_at(adamw, new_opt["step"])}
+        return new_params, new_opt, err_state, metrics
+
+    return train_step

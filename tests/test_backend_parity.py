@@ -1,0 +1,73 @@
+"""The Pallas and jnp backends must be interchangeable end-to-end: the full
+compression pipeline and decode step produce identical results."""
+import dataclasses
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.configs import get_config
+from repro.core.compression import CompressOptions, build_compress_fn
+
+RNG = np.random.default_rng(3)
+
+
+def test_compress_fn_backend_parity():
+    cfg = dataclasses.replace(get_config("tiny-lm"))
+    L, N, b, mb, bb, n, w = 2, 16, 4, 6, 3, 2, 2
+    h, d, hq = cfg.num_kv_heads, cfg.head_dim, cfg.num_heads
+    pools = {
+        "k": jnp.asarray(RNG.normal(size=(L, N, b, h, d)), jnp.float32),
+        "v": jnp.asarray(RNG.normal(size=(L, N, b, h, d)), jnp.float32),
+        "f": jnp.asarray(RNG.normal(size=(L, N, b, h)), jnp.float32),
+    }
+    qwin = jnp.asarray(RNG.normal(size=(L, 3, w, hq, d)), jnp.float32)
+    src_bt = np.full((n, mb), -1, np.int32)
+    src_bt[0, :5] = [3, 7, 1, 9, 12]
+    src_bt[1, :4] = [0, 2, 4, 5]
+    dest_bt = np.stack([src_bt[0, :bb], src_bt[1, :bb]])
+    req = (jnp.asarray(src_bt), jnp.asarray(dest_bt),
+           jnp.asarray([0, 1], np.int32), jnp.asarray([20, 16], np.int32),
+           jnp.asarray([bb * b, 0], np.int32))
+    outs = {}
+    for backend in ("jnp", "pallas"):
+        opts = CompressOptions(window=w, redundancy="lightning",
+                               pooling="first", backend=backend)
+        fn = jax.jit(build_compress_fn(cfg, block_size=b, max_blocks=mb,
+                                       budget_blocks=bb, opts=opts))
+        new_pools, new_seq = fn(pools, qwin, req)
+        outs[backend] = (jax.tree.map(np.asarray, new_pools),
+                         np.asarray(new_seq))
+    for key in ("k", "v", "f"):
+        np.testing.assert_allclose(outs["jnp"][0][key],
+                                   outs["pallas"][0][key],
+                                   rtol=1e-5, atol=1e-6)
+    np.testing.assert_array_equal(outs["jnp"][1], outs["pallas"][1])
+
+
+def test_compress_fn_backend_parity_flash():
+    cfg = get_config("tiny-lm")
+    L, N, b, mb, bb, n, w = 1, 12, 4, 4, 2, 1, 2
+    h, d, hq = cfg.num_kv_heads, cfg.head_dim, cfg.num_heads
+    pools = {
+        "k": jnp.asarray(RNG.normal(size=(L, N, b, h, d)), jnp.float32),
+        "v": jnp.asarray(RNG.normal(size=(L, N, b, h, d)), jnp.float32),
+        "f": jnp.zeros((L, N, b, h), jnp.float32),
+    }
+    qwin = jnp.asarray(RNG.normal(size=(L, 2, w, hq, d)), jnp.float32)
+    src_bt = np.full((n, mb), -1, np.int32)
+    src_bt[0] = [3, 7, 1, 9]
+    req = (jnp.asarray(src_bt), jnp.asarray(src_bt[:, :bb]),
+           jnp.asarray([0], np.int32), jnp.asarray([16], np.int32),
+           jnp.asarray([0], np.int32))
+    outs = {}
+    for backend in ("jnp", "pallas"):
+        opts = CompressOptions(window=w, redundancy="flash",
+                               pooling="none", backend=backend)
+        fn = jax.jit(build_compress_fn(cfg, block_size=b, max_blocks=mb,
+                                       budget_blocks=bb, opts=opts))
+        new_pools, _ = fn(pools, qwin, req)
+        outs[backend] = jax.tree.map(np.asarray, new_pools)
+    for key in ("k", "v"):
+        np.testing.assert_allclose(outs["jnp"][key], outs["pallas"][key],
+                                   rtol=1e-5, atol=1e-6)

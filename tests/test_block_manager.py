@@ -1,0 +1,101 @@
+"""Block manager + memory planner tests (incl. hypothesis stateful-ish)."""
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.configs import get_config
+from repro.core.block_manager import BlockManager, OutOfBlocks
+from repro.core.memory_planner import plan_memory
+
+
+def test_alloc_release_roundtrip():
+    bm = BlockManager(8, 4)
+    a = bm.allocate(3)
+    assert bm.num_free == 5
+    b = bm.allocate(5)
+    assert bm.num_free == 0
+    with pytest.raises(OutOfBlocks):
+        bm.allocate(1)
+    bm.release(a)
+    assert bm.num_free == 3
+    bm.release(b)
+    bm.check_invariants()
+
+
+def test_prefix_cache_hit_and_refcount():
+    bm = BlockManager(16, 4)
+    toks = list(range(10))                       # 2 full blocks + 2 tokens
+    blocks, matched, chain = bm.lookup_prefix(toks)
+    assert matched == 0 and blocks == [] and len(chain) == 2
+    alloc = bm.allocate(3)
+    bm.register_prefix(alloc, chain, 0)
+    # second request with same prefix
+    blocks2, matched2, chain2 = bm.lookup_prefix(toks)
+    assert matched2 == 8
+    assert blocks2 == alloc[:2]
+    assert all(bm.is_shared(b) for b in blocks2)
+    assert chain2 == chain
+    bm.release(blocks2)
+    assert not any(bm.is_shared(b) for b in alloc[:2])
+    bm.check_invariants()
+
+
+def test_cached_blocks_survive_release_until_eviction():
+    bm = BlockManager(4, 2)
+    toks = [1, 2, 3, 4]
+    _, _, chain = bm.lookup_prefix(toks)
+    alloc = bm.allocate(2)
+    bm.register_prefix(alloc, chain, 0)
+    bm.release(alloc)
+    assert bm.num_free == 4                      # reusable, not lost
+    blocks, matched, _ = bm.lookup_prefix(toks)  # resurrect from cached_free
+    assert matched == 4 and blocks == alloc
+    bm.release(blocks)
+    # exhaust memory -> cached blocks get evicted
+    other = bm.allocate(4)
+    blocks3, matched3, _ = bm.lookup_prefix(toks)
+    assert matched3 == 0
+    bm.release(other)
+    bm.check_invariants()
+
+
+@settings(max_examples=30, deadline=None)
+@given(st.lists(st.tuples(st.booleans(), st.integers(1, 5)), min_size=1,
+                max_size=40))
+def test_property_never_leaks_blocks(ops):
+    bm = BlockManager(12, 4)
+    held = []
+    for is_alloc, n in ops:
+        if is_alloc:
+            if bm.can_allocate(n):
+                held.append(bm.allocate(n))
+        elif held:
+            bm.release(held.pop())
+        bm.check_invariants()
+    for h in held:
+        bm.release(h)
+    bm.check_invariants()
+    assert bm.num_free == 12
+
+
+# ----------------------------------------------------------------------
+def test_memory_planner_matches_paper_lp():
+    cfg = get_config("llama3-8b")
+    GB = 1024**3
+    plan = plan_memory(cfg, 40 * GB, n_max=32, block_size=64)
+    # constraints of Eq. 1
+    assert plan.M * plan.m_q_req + plan.N_total * plan.m_kv_block <= 40 * GB
+    assert plan.M <= plan.N_total / 32
+    # maximality: one more request would not fit
+    assert (plan.M + 1) * (plan.m_kv_block * 32 + plan.m_q_req) > 40 * GB
+
+
+def test_memory_planner_global_score_overhead():
+    cfg = get_config("llama3-8b")
+    GB = 1024**3
+    with_g = plan_memory(cfg, 40 * GB, n_max=32, block_size=64,
+                         with_global=True)
+    without = plan_memory(cfg, 40 * GB, n_max=32, block_size=64,
+                          with_global=False)
+    assert with_g.m_kv_block > without.m_kv_block
+    assert with_g.M <= without.M

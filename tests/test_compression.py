@@ -1,0 +1,213 @@
+"""Compression pipeline tests: structural invariants of score->topk->compact.
+
+Trick: K values carry a position stamp in feature 0 (value = cache position)
+so after compaction we can read back exactly which tokens survived and in
+what order.
+"""
+import dataclasses
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.configs import get_config
+from repro.core import scoring
+from repro.core.compression import CompressOptions, build_compress_fn
+
+RNG = np.random.default_rng(1)
+
+
+def tiny_cfg(**kw):
+    cfg = get_config("tiny-lm")                 # 4 heads, kv 2, d 32
+    return dataclasses.replace(cfg, **kw) if kw else cfg
+
+
+def make_setup(cfg, *, L=2, N_total=16, b=4, max_blocks=8, budget_blocks=3,
+               n_req=2, w=2, seed=0):
+    rng = np.random.default_rng(seed)
+    h, d, hq = cfg.num_kv_heads, cfg.head_dim, cfg.num_heads
+    pools = {
+        "k": rng.normal(size=(L, N_total, b, h, d)).astype(np.float32),
+        "v": rng.normal(size=(L, N_total, b, h, d)).astype(np.float32),
+        "f": np.zeros((L, N_total, b, h), np.float32),
+    }
+    qwin = rng.normal(size=(L, 4, w, hq, d)).astype(np.float32)
+    return pools, qwin
+
+
+def stamp_positions(pools, block_table, b):
+    """Write cache-position stamps into K feature 0 for one request."""
+    k = pools["k"]
+    for ci, blk in enumerate(block_table):
+        if blk < 0:
+            continue
+        for s in range(b):
+            k[:, blk, s, :, 0] = ci * b + s
+    return pools
+
+
+def run_compress(cfg, pools, qwin, src_bt, dest_bt, seq_lens, hist_lens,
+                 qslots, *, b=4, max_blocks=8, budget_blocks=3, opts=None):
+    opts = opts or CompressOptions(window=2, redundancy="lightning",
+                                   pooling="none")
+    fn = build_compress_fn(cfg, block_size=b, max_blocks=max_blocks,
+                           budget_blocks=budget_blocks, opts=opts)
+    fn = jax.jit(fn)
+    jp = {k: jnp.asarray(v) for k, v in pools.items()}
+    req = (jnp.asarray(src_bt), jnp.asarray(dest_bt), jnp.asarray(qslots),
+           jnp.asarray(seq_lens), jnp.asarray(hist_lens))
+    new_pools, new_seq = fn(jp, jnp.asarray(qwin), req)
+    return {k: np.asarray(v) for k, v in new_pools.items()}, np.asarray(new_seq)
+
+
+def read_dest_stamps(pools, dest_blocks, b, head):
+    out = []
+    for blk in dest_blocks:
+        for s in range(b):
+            out.append(pools["k"][0, blk, s, head, 0])
+    return np.asarray(out)
+
+
+def test_compaction_preserves_order_and_window():
+    cfg = tiny_cfg()
+    b, mb, bb = 4, 8, 3
+    pools, qwin = make_setup(cfg, b=b, max_blocks=mb, budget_blocks=bb)
+    src_bt = np.full((2, mb), -1, np.int32)
+    src_bt[0, :5] = [3, 7, 1, 9, 12]            # 5 blocks, T=20
+    src_bt[1, :4] = [0, 2, 4, 5]
+    dest_bt = np.stack([src_bt[0, :bb], src_bt[1, :bb]])
+    pools = stamp_positions(pools, src_bt[0], b)
+    seq_lens = np.array([20, 16], np.int32)
+    new_pools, new_seq = run_compress(
+        cfg, pools, qwin, src_bt, dest_bt, seq_lens,
+        hist_lens=np.zeros(2, np.int32), qslots=np.array([0, 1], np.int32),
+        b=b, max_blocks=mb, budget_blocks=bb)
+    k_keep = bb * b
+    assert (new_seq == k_keep).all()
+    for head in range(cfg.num_kv_heads):
+        stamps = read_dest_stamps(new_pools, dest_bt[0], b, head)
+        # strictly increasing original order, subset of [0, 20)
+        assert (np.diff(stamps) > 0).all()
+        assert stamps.min() >= 0 and stamps.max() < 20
+        # observation window (last w=2) always kept
+        assert {18.0, 19.0} <= set(stamps.tolist())
+
+
+def test_padding_rows_are_noops():
+    cfg = tiny_cfg()
+    b, mb, bb = 4, 8, 3
+    pools, qwin = make_setup(cfg, b=b, max_blocks=mb, budget_blocks=bb)
+    src_bt = np.full((2, mb), -1, np.int32)
+    src_bt[0, :4] = [3, 7, 1, 9]
+    dest_bt = np.full((2, bb), -1, np.int32)
+    dest_bt[0] = src_bt[0, :bb]
+    before = {k: v.copy() for k, v in pools.items()}
+    seq_lens = np.array([16, 0], np.int32)
+    new_pools, new_seq = run_compress(
+        cfg, pools, qwin, src_bt, dest_bt, seq_lens,
+        hist_lens=np.zeros(2, np.int32), qslots=np.array([-1, -1], np.int32),
+        b=b, max_blocks=mb, budget_blocks=bb)
+    for key in ("k", "v", "f"):
+        np.testing.assert_array_equal(new_pools[key], before[key])
+    np.testing.assert_array_equal(new_seq, seq_lens)
+
+
+def test_inplace_vs_fresh_destination_equivalence():
+    """Compacting into the request's own first blocks must equal compacting
+    into fresh blocks (guards against aliasing bugs in gather/scatter)."""
+    cfg = tiny_cfg()
+    b, mb, bb = 4, 8, 3
+    pools, qwin = make_setup(cfg, b=b, max_blocks=mb, budget_blocks=bb,
+                             N_total=20)
+    src_bt = np.full((1, mb), -1, np.int32)
+    src_bt[0, :5] = [3, 7, 1, 9, 12]
+    seq_lens = np.array([20], np.int32)
+    qslots = np.array([0], np.int32)
+    hist = np.zeros(1, np.int32)
+
+    dest_inplace = src_bt[:, :bb].copy()
+    p1, _ = run_compress(cfg, {k: v.copy() for k, v in pools.items()}, qwin,
+                         src_bt, dest_inplace, seq_lens, hist, qslots,
+                         b=b, max_blocks=mb, budget_blocks=bb)
+    dest_fresh = np.array([[15, 16, 17]], np.int32)
+    p2, _ = run_compress(cfg, {k: v.copy() for k, v in pools.items()}, qwin,
+                         src_bt, dest_fresh, seq_lens, hist, qslots,
+                         b=b, max_blocks=mb, budget_blocks=bb)
+    for key in ("k", "v", "f"):
+        got = np.stack([p1[key][:, blk] for blk in dest_inplace[0]], 1)
+        want = np.stack([p2[key][:, blk] for blk in dest_fresh[0]], 1)
+        np.testing.assert_allclose(got, want, rtol=0, atol=0)
+
+
+def test_kept_set_matches_topk_of_scores():
+    """The survivors must be exactly the top-k of the final combined score."""
+    cfg = tiny_cfg()
+    b, mb, bb, w = 4, 8, 3, 2
+    opts = CompressOptions(window=w, redundancy="lightning", pooling="none",
+                           use_global=False)
+    pools, qwin = make_setup(cfg, b=b, max_blocks=mb, budget_blocks=bb, w=w)
+    src_bt = np.full((1, mb), -1, np.int32)
+    src_bt[0, :4] = [3, 7, 1, 9]
+    T = mb * b
+    seq_len = 16
+    pools = stamp_positions(pools, src_bt[0], b)
+
+    # oracle: recompute scores directly from gathered entries
+    from repro.core.compression import _score_one
+    entries = np.concatenate(
+        [pools["k"][0, blk] for blk in src_bt[0][src_bt[0] >= 0]], 0)
+    entries = np.concatenate(
+        [entries, np.zeros((T - seq_len,) + entries.shape[1:], np.float32)])
+    fscore = np.zeros((T, cfg.num_kv_heads), np.float32)
+    valid = np.arange(T) < seq_len
+    ring = qwin[0, 0]
+    order = (seq_len - w + np.arange(w)) % w
+    final, _ = _score_one(cfg, opts, jnp.asarray(ring[order]),
+                          jnp.asarray(entries), jnp.asarray(fscore),
+                          jnp.asarray(valid), seq_len, 0, b)
+    want_keep = np.asarray(scoring.topk_tag(final, bb * b))
+
+    new_pools, _ = run_compress(
+        cfg, pools, qwin, src_bt, src_bt[:, :bb], np.array([seq_len]),
+        np.zeros(1, np.int32), np.zeros(1, np.int32),
+        b=b, max_blocks=mb, budget_blocks=bb, opts=opts)
+    for head in range(cfg.num_kv_heads):
+        stamps = read_dest_stamps(new_pools, src_bt[0, :bb], b, head)
+        kept = np.zeros(T, bool)
+        kept[stamps.astype(int)] = True
+        np.testing.assert_array_equal(kept, want_keep[:, head])
+
+
+@settings(max_examples=15, deadline=None)
+@given(n_blocks=st.integers(4, 7), seed=st.integers(0, 10_000),
+       redundancy=st.sampled_from(["lightning", "none"]),
+       hist=st.integers(0, 1))
+def test_property_compression_invariants(n_blocks, seed, redundancy, hist):
+    """Hypothesis: for random pools/tables, compaction always (a) keeps
+    exactly k entries, (b) preserves order, (c) keeps the window, (d) yields
+    seq_len == k."""
+    cfg = tiny_cfg()
+    b, mb, bb, w = 4, 8, 3, 2
+    pools, qwin = make_setup(cfg, b=b, max_blocks=mb, budget_blocks=bb,
+                             w=w, seed=seed, N_total=16)
+    rng = np.random.default_rng(seed)
+    blocks = rng.choice(16, size=n_blocks, replace=False).astype(np.int32)
+    src_bt = np.full((1, mb), -1, np.int32)
+    src_bt[0, :n_blocks] = blocks
+    seq_len = n_blocks * b
+    pools = stamp_positions(pools, src_bt[0], b)
+    hist_len = (bb * b) if hist else 0
+    opts = CompressOptions(window=w, redundancy=redundancy, pooling="none")
+    new_pools, new_seq = run_compress(
+        cfg, pools, qwin, src_bt, src_bt[:, :bb], np.array([seq_len]),
+        np.array([hist_len], np.int32), np.zeros(1, np.int32),
+        b=b, max_blocks=mb, budget_blocks=bb, opts=opts)
+    assert new_seq[0] == bb * b
+    for head in range(cfg.num_kv_heads):
+        stamps = read_dest_stamps(new_pools, src_bt[0, :bb], b, head)
+        assert len(stamps) == bb * b
+        assert (np.diff(stamps) > 0).all()
+        assert stamps.max() == seq_len - 1      # newest token always kept
+        assert set(range(seq_len - w, seq_len)) <= set(stamps.astype(int))

@@ -1,0 +1,144 @@
+"""Additional coverage: KV-head replication parity, straggler-aware
+admission, randomized workload property test, memory-planner integration,
+grouped-MoE dispatch parity."""
+import dataclasses
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.configs import get_config
+from repro.core import serve_model
+from repro.core.compression import CompressOptions
+from repro.core.engine import EngineOptions, ZipageEngine
+from repro.core.memory_planner import plan_memory
+from repro.models import lm
+from repro.models import layers as L
+
+CFG = dataclasses.replace(get_config("tiny-lm"), dtype="float32")
+PARAMS = lm.init(CFG, jax.random.key(0))
+
+
+def test_kv_replication_decode_parity():
+    """h_store = h_kv * r (repeat-consecutive) must give identical logits —
+    the TP>h_kv serving layout (DESIGN.md §5) is math-neutral."""
+    S_prompt, n_dec = 6, 5
+    toks = np.asarray(jax.random.randint(jax.random.key(1),
+                                         (S_prompt + n_dec,), 0,
+                                         CFG.vocab_size))
+    outs = {}
+    for rep in (1, 2):
+        spec = serve_model.ServeSpec(
+            n_slots=1, block_size=4, max_blocks=8, n_total_blocks=16,
+            m_qslots=1, window=4, prefill_rows=1, prefill_len=16,
+            dtype="float32", kv_replication=rep)
+        state = serve_model.make_state(CFG, spec)
+        bt = np.full((1, 8), -1, np.int32)
+        bt[0] = np.arange(8)
+        state["block_tables"] = jnp.asarray(bt)
+        state["seq_lens"] = jnp.asarray([S_prompt], jnp.int32)
+        state["positions"] = jnp.asarray([S_prompt], jnp.int32)
+        prefill = jax.jit(serve_model.build_prefill_step(CFG, spec))
+        decode = jax.jit(serve_model.build_decode_step(CFG, spec))
+        pt = np.zeros((1, 16), np.int32)
+        pt[0, :S_prompt] = toks[:S_prompt]
+        logits, state = prefill(PARAMS, state, jnp.asarray(pt),
+                                jnp.asarray([0], jnp.int32),
+                                jnp.asarray([S_prompt], jnp.int32),
+                                jnp.asarray([0], jnp.int32))
+        got = [np.asarray(logits[0])]
+        for t in range(S_prompt, S_prompt + n_dec - 1):
+            logits, state = decode(PARAMS, state,
+                                   jnp.asarray([toks[t]], jnp.int32),
+                                   jnp.ones((1,), bool))
+            got.append(np.asarray(logits[0]))
+        outs[rep] = np.stack(got)
+    np.testing.assert_allclose(outs[1], outs[2], rtol=1e-5, atol=1e-5)
+
+
+def test_chunked_attn_backend_engine_parity():
+    """Engine outputs identical under gather vs chunked decode attention."""
+    outs = {}
+    for backend in ("jnp", "chunked"):
+        eng = ZipageEngine(CFG, PARAMS, EngineOptions(
+            block_size=8, n_total_blocks=64, max_batch=4, m_qslots=4,
+            n_max=3, window=4, compress=CompressOptions(window=4),
+            max_model_len=128, prefill_rows=2, prefill_len=32,
+            temperature=0.0))
+        eng.spec = dataclasses.replace(eng.spec, attn_backend=backend)
+        eng._decode = jax.jit(
+            serve_model.build_decode_step(CFG, eng.spec), donate_argnums=(1,))
+        rids = [eng.submit([1, 2, 3], 30), eng.submit([5, 6], 30)]
+        done = eng.run(max_steps=300)
+        outs[backend] = [done[r].output for r in rids]
+    assert outs["jnp"] == outs["chunked"]
+
+
+def test_straggler_admission_backoff():
+    eng = ZipageEngine(CFG, PARAMS, EngineOptions(
+        block_size=8, n_total_blocks=64, max_batch=8, m_qslots=4, n_max=3,
+        window=4, compress=CompressOptions(window=4), max_model_len=128,
+        prefill_rows=4, prefill_len=32))
+    eng._ewma = 0.001                        # pretend steps were fast
+    for i in range(6):
+        eng.submit([1 + i], 4)
+    eng.step()                               # real step is far slower => 3x
+    assert eng.admission_scale < 1.0         # backoff engaged
+    for _ in range(60):
+        if not (eng.waiting or eng.running):
+            break
+        eng.step()
+    assert eng.admission_scale <= 1.0
+    assert not eng.running and not eng.waiting
+
+
+@settings(max_examples=5, deadline=None)
+@given(seed=st.integers(0, 100), n=st.integers(2, 6),
+       scheduling=st.sampled_from(["hybrid", "constrained"]))
+def test_property_random_workload_completes_cleanly(seed, n, scheduling):
+    """Any random workload completes with exact block accounting."""
+    rng = np.random.default_rng(seed)
+    eng = ZipageEngine(CFG, PARAMS, EngineOptions(
+        block_size=8, n_total_blocks=48, max_batch=4, m_qslots=2, n_max=3,
+        window=4, compress=CompressOptions(window=4), max_model_len=128,
+        prefill_rows=2, prefill_len=32, temperature=0.0,
+        scheduling=scheduling,
+        prefix_caching=bool(seed % 2)))
+    rids = []
+    for i in range(n):
+        p = rng.integers(0, CFG.vocab_size,
+                         size=int(rng.integers(2, 20))).tolist()
+        rids.append(eng.submit(p, int(rng.integers(2, 40))))
+    done = eng.run(max_steps=2000)
+    assert set(rids) <= set(done)
+    eng.bm.check_invariants()
+    assert eng.bm.num_free == 48
+    assert sorted(eng.free_slots) == list(range(4))
+
+
+def test_memory_planner_drives_engine():
+    """Eq. 1 plan feeds a working engine configuration."""
+    plan = plan_memory(CFG, 8 * 1024 * 1024, n_max=3, block_size=8, window=4)
+    assert plan.M >= 1 and plan.N_total >= plan.M * 3
+    eng = ZipageEngine(CFG, PARAMS, EngineOptions(
+        block_size=8, n_total_blocks=min(plan.N_total, 128),
+        max_batch=4, m_qslots=min(plan.M, 4), n_max=3, window=4,
+        compress=CompressOptions(window=4), max_model_len=128,
+        prefill_rows=2, prefill_len=32))
+    r = eng.submit([1, 2, 3], 30)
+    done = eng.run(max_steps=300)
+    assert len(done[r].output) == 30
+
+
+def test_moe_grouped_dispatch_parity():
+    cfg = dataclasses.replace(get_config("dbrx-132b").reduced(),
+                              dtype="float32", moe_capacity_factor=8.0)
+    params = lm.init(cfg, jax.random.key(0))
+    x = jax.random.normal(jax.random.key(1), (2, 16, cfg.d_model)) * 0.1
+    moe_p = jax.tree.map(lambda a: a[0], params["main"])["0"]["moe"]
+    y1 = L.moe_forward(cfg, moe_p, x, groups=1)
+    y2 = L.moe_forward(cfg, moe_p, x, groups=4)
+    np.testing.assert_allclose(np.asarray(y1), np.asarray(y2),
+                               rtol=2e-5, atol=2e-6)

@@ -1,0 +1,108 @@
+"""Per-kernel allclose sweeps: Pallas (interpret=True) vs pure-jnp oracles,
+over shapes and dtypes."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.kernels import ops, ref
+
+RNG = np.random.default_rng(7)
+
+
+def make_pool(N, b, h, d, dtype):
+    return RNG.normal(size=(N, b, h, d)).astype(dtype)
+
+
+def make_tables(n, mb, N):
+    return np.stack([RNG.choice(N, mb, replace=False)
+                     for _ in range(n)]).astype(np.int32)
+
+
+@pytest.mark.parametrize("dtype", [np.float32, jnp.bfloat16])
+@pytest.mark.parametrize("B,hq,hkv,d,b,mb", [
+    (2, 4, 2, 16, 8, 3),
+    (1, 8, 8, 32, 4, 5),     # MHA
+    (3, 8, 1, 64, 8, 2),     # MQA
+])
+def test_paged_attention_kernel(B, hq, hkv, d, b, mb, dtype):
+    N = 16
+    q = RNG.normal(size=(B, hq, d)).astype(dtype)
+    kp, vp = make_pool(N, b, hkv, d, dtype), make_pool(N, b, hkv, d, dtype)
+    bt = make_tables(B, mb, N)
+    sl = RNG.integers(1, mb * b + 1, size=(B,)).astype(np.int32)
+    got = ops.paged_decode_attention(q, kp, vp, bt, sl, backend="pallas")
+    want = ops.paged_decode_attention(q, kp, vp, bt, sl, backend="jnp")
+    tol = 2e-2 if dtype == jnp.bfloat16 else 2e-5
+    np.testing.assert_allclose(np.asarray(got, np.float32),
+                               np.asarray(want, np.float32),
+                               rtol=tol, atol=tol)
+
+
+@pytest.mark.parametrize("dtype", [np.float32, jnp.bfloat16])
+@pytest.mark.parametrize("n,w,hq,hkv,d,b,mb", [
+    (2, 4, 4, 2, 16, 8, 3),
+    (1, 2, 4, 4, 32, 4, 4),
+])
+def test_paged_score_kernel(n, w, hq, hkv, d, b, mb, dtype):
+    N = 16
+    q = RNG.normal(size=(n, w, hq, d)).astype(dtype)
+    kp = make_pool(N, b, hkv, d, dtype)
+    bt = make_tables(n, mb, N)
+    sl = np.full((n,), mb * b, np.int32)
+    got = ops.score_logits(q, kp, bt, sl, backend="pallas")
+    want = ops.score_logits(q, kp, bt, sl, backend="jnp")
+    tol = 5e-2 if dtype == jnp.bfloat16 else 2e-5
+    g, wv = np.asarray(got, np.float32), np.asarray(want, np.float32)
+    # compare only unmasked entries (both use the same big-negative mask)
+    m = wv > -1e29
+    np.testing.assert_array_equal(g > -1e29, m)
+    np.testing.assert_allclose(g[m], wv[m], rtol=tol, atol=tol)
+    # and the derived scores
+    gs = ops.attention_scores_from_logits(got, jnp.asarray(sl))
+    ws = ops.attention_scores_from_logits(want, jnp.asarray(sl))
+    np.testing.assert_allclose(np.asarray(gs), np.asarray(ws),
+                               rtol=tol, atol=tol)
+
+
+@pytest.mark.parametrize("p_thresh", [0.5, 0.8])
+@pytest.mark.parametrize("n,h,d,b,mb", [(2, 2, 16, 8, 3), (1, 4, 32, 4, 4)])
+def test_lightning_redundancy_kernel(n, h, d, b, mb, p_thresh):
+    N = 16
+    kp = make_pool(N, b, h, d, np.float32)
+    # plant a near-duplicate pair within one block to exercise zero-out
+    kp[0, 1, :, :] = kp[0, 3, :, :] * 1.2
+    bt = make_tables(n, mb, N)
+    sl = np.array([mb * b] + [max(b, mb * b - b)] * (n - 1), np.int32)
+    got = ops.lightning_redundancy(kp, bt, sl, p_thresh=p_thresh,
+                                   backend="pallas")
+    want = ops.lightning_redundancy(kp, bt, sl, p_thresh=p_thresh,
+                                    backend="jnp")
+    np.testing.assert_allclose(np.asarray(got), np.asarray(want),
+                               rtol=2e-5, atol=2e-6)
+
+
+@pytest.mark.parametrize("n,h,d,b,mb", [(2, 2, 16, 8, 3), (1, 1, 32, 4, 4)])
+def test_flash_redundancy_kernel_matches_full_oracle(n, h, d, b, mb):
+    """Alg. 3 must reproduce the O(T²) full-matrix redundancy exactly."""
+    N = 16
+    kp = make_pool(N, b, h, d, np.float32)
+    kp[2, 0, :, :] = kp[1, 2, :, :] * 0.9       # cross-block duplicate
+    bt = make_tables(n, mb, N)
+    sl = np.full((n,), mb * b, np.int32)
+    got = ops.flash_redundancy(kp, bt, sl, p_thresh=0.7, backend="pallas")
+    want = ops.flash_redundancy(kp, bt, sl, p_thresh=0.7, backend="jnp")
+    np.testing.assert_allclose(np.asarray(got), np.asarray(want),
+                               rtol=2e-5, atol=2e-6)
+
+
+@pytest.mark.parametrize("dtype", [np.float32, jnp.bfloat16])
+def test_compact_gather_kernel(dtype):
+    S, h, d, k = 64, 3, 16, 10
+    pool = RNG.normal(size=(S, h, d)).astype(dtype)
+    src = np.stack([np.sort(RNG.choice(S, k, replace=False))
+                    for _ in range(h)]).astype(np.int32)
+    got = ops.compact_gather(pool, src, backend="pallas")
+    want = ops.compact_gather(pool, src, backend="jnp")
+    np.testing.assert_array_equal(np.asarray(got, np.float32),
+                                  np.asarray(want, np.float32))

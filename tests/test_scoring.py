@@ -1,0 +1,145 @@
+"""Scoring-function unit tests vs independent numpy oracles."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.core import scoring
+
+RNG = np.random.default_rng(0)
+
+
+def naive_attention_scores(q_win, entries, valid, seq_len):
+    """Independent oracle: softmax(qk/sqrt d) with causal+valid mask, GQA max
+    over group, mean over window."""
+    w, hq, d = q_win.shape
+    T, h, _ = entries.shape
+    g = hq // h
+    out = np.zeros((T, h))
+    probs = np.zeros((w, hq, T))
+    for u in range(w):
+        qpos = seq_len - w + u
+        for qh in range(hq):
+            s = entries[:, qh // g, :].astype(np.float64) @ \
+                q_win[u, qh].astype(np.float64) / np.sqrt(d)
+            mask = (np.arange(T) <= qpos) & valid
+            s = np.where(mask, s, -np.inf)
+            e = np.exp(s - s.max())
+            probs[u, qh] = e / e.sum()
+    for kh in range(h):
+        grp = probs[:, kh * g:(kh + 1) * g]       # (w, g, T)
+        out[:, kh] = grp.max(axis=1).mean(axis=0)
+    return out
+
+
+def test_attention_scores_vs_oracle():
+    w, hq, h, d, T = 4, 4, 2, 8, 16
+    seq_len = 13
+    q = RNG.normal(size=(w, hq, d)).astype(np.float32)
+    k = RNG.normal(size=(T, h, d)).astype(np.float32)
+    valid = np.arange(T) < seq_len
+    got = np.asarray(scoring.attention_scores(
+        jnp.asarray(q), jnp.asarray(k), jnp.asarray(valid), seq_len))
+    want = naive_attention_scores(q, k, valid, seq_len)
+    np.testing.assert_allclose(got, want, rtol=2e-4, atol=2e-5)
+
+
+def test_attention_scores_causal_mask():
+    """Keys after a query position must get zero probability from it; the
+    last key overall can only be scored by the last query."""
+    w, hq, h, d, T = 4, 2, 2, 8, 8
+    seq_len = 8
+    q = RNG.normal(size=(w, hq, d)).astype(np.float32)
+    k = RNG.normal(size=(T, h, d)).astype(np.float32)
+    valid = np.ones(T, bool)
+    s = np.asarray(scoring.attention_scores(
+        jnp.asarray(q), jnp.asarray(k), jnp.asarray(valid), seq_len))
+    assert (s > 0).all()  # every key precedes at least the last query
+
+
+def test_global_score_update():
+    T, h = 8, 2
+    s = jnp.asarray(RNG.normal(size=(T, h)).astype(np.float32))
+    f = jnp.asarray(RNG.normal(size=(T, h)).astype(np.float32))
+    out = np.asarray(scoring.global_score_update(s, f, hist_len=5, alpha=0.8))
+    want = np.asarray(s).copy()
+    want[:5] = np.maximum(0.8 * np.asarray(f)[:5], want[:5])
+    np.testing.assert_allclose(out, want)
+
+
+def naive_redundancy(entries, valid, p):
+    T, h, d = entries.shape
+    out = np.zeros((T, h))
+    n = max(valid.sum(), 1)
+    for kh in range(h):
+        e = entries[:, kh].astype(np.float64)
+        e = e / np.maximum(np.linalg.norm(e, axis=-1, keepdims=True), 1e-12)
+        c = e @ e.T
+        c[~valid, :] = 0
+        c[:, ~valid] = 0
+        np.fill_diagonal(c, 0)
+        for j in range(T):
+            above = np.nonzero(c[:, j] > p)[0]
+            if len(above):
+                c[above[-1], j] = 0
+        out[:, kh] = c.sum(axis=1) / n
+    return out
+
+
+def test_redundancy_full_vs_oracle():
+    T, h, d = 12, 2, 8
+    entries = RNG.normal(size=(T, h, d)).astype(np.float32)
+    entries[7, 0] = entries[3, 0] * 1.5          # force a high-similarity pair
+    valid = np.arange(T) < 10
+    got = np.asarray(scoring.redundancy_full(
+        jnp.asarray(entries), jnp.asarray(valid), p_thresh=0.8))
+    want = naive_redundancy(entries, valid, 0.8)
+    np.testing.assert_allclose(got, want, rtol=1e-4, atol=1e-5)
+
+
+def test_lightning_equals_full_for_single_block():
+    """With one block and matching normalization the two scores agree."""
+    T, h, d = 8, 2, 8
+    entries = RNG.normal(size=(T, h, d)).astype(np.float32)
+    valid = np.ones(T, bool)
+    full = np.asarray(scoring.redundancy_full(
+        jnp.asarray(entries), jnp.asarray(valid), p_thresh=0.8))
+    light = np.asarray(scoring.redundancy_lightning(
+        jnp.asarray(entries), jnp.asarray(valid), block_size=T, p_thresh=0.8))
+    np.testing.assert_allclose(light, full, rtol=1e-5, atol=1e-6)
+
+
+def test_lightning_blocks_are_local():
+    """Changing one block's keys must not change other blocks' scores."""
+    T, h, d, b = 16, 1, 4, 4
+    e1 = RNG.normal(size=(T, h, d)).astype(np.float32)
+    e2 = e1.copy()
+    e2[:b] = RNG.normal(size=(b, h, d))
+    valid = np.ones(T, bool)
+    r1 = np.asarray(scoring.redundancy_lightning(
+        jnp.asarray(e1), jnp.asarray(valid), block_size=b))
+    r2 = np.asarray(scoring.redundancy_lightning(
+        jnp.asarray(e2), jnp.asarray(valid), block_size=b))
+    np.testing.assert_allclose(r1[b:], r2[b:], rtol=1e-6)
+    assert not np.allclose(r1[:b], r2[:b])
+
+
+def test_max_pool_scores():
+    T, h = 8, 1
+    s = jnp.asarray(np.array([[0, 0, 5, 0, 0, 0, 1, 0]], np.float32).T)
+    valid = np.ones(T, bool)
+    out = np.asarray(scoring.max_pool_scores(s, jnp.asarray(valid), kernel=3))
+    np.testing.assert_allclose(out[:, 0], [0, 5, 5, 5, 0, 1, 1, 1])
+
+
+def test_combine_and_topk():
+    T, h = 16, 2
+    s = jnp.asarray(RNG.normal(size=(T, h)).astype(np.float32))
+    red = jnp.zeros((T, h))
+    valid = jnp.asarray(np.arange(T) < 12)
+    final = scoring.combine_scores(s, red, valid, win_len=2, seq_len=12,
+                                   lam=0.2)
+    tag = np.asarray(scoring.topk_tag(final, 6))
+    assert (tag.sum(axis=0) == 6).all()
+    assert tag[10:12].all()              # observation window pinned
+    assert not tag[12:].any()            # invalid region never kept
