@@ -1,0 +1,21 @@
+PYTHON ?= python
+export PYTHONPATH := src$(if $(PYTHONPATH),:$(PYTHONPATH))
+
+.PHONY: test test-fast quickstart bench install-dev
+
+# tier-1 verify (ROADMAP.md)
+test:
+	$(PYTHON) -m pytest -x -q
+
+# quick signal: facade + engine + block manager only
+test-fast:
+	$(PYTHON) -m pytest -q tests/test_api.py tests/test_engine.py tests/test_block_manager.py
+
+quickstart:
+	$(PYTHON) examples/quickstart.py
+
+bench:
+	$(PYTHON) -m benchmarks.run
+
+install-dev:
+	pip install -r requirements-dev.txt

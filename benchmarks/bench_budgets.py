@@ -22,12 +22,12 @@ def run():
     params = params_trained()
     reqs = workload("amc", 12, rng)
     full = run_engine(reqs, params=params, n_max=None)
-    ref_out = {r: full["done"][r].output for r in full["rids"]}
+    ref_out = {r: full["done"][r].token_ids for r in full["rids"]}
     for budget_blocks in (2, 3, 4, 6):
         budget = (budget_blocks - 1) * 8
         r = run_engine(reqs, params=params, n_max=budget_blocks)
         agr = float(np.mean([
-            agreement(r["done"][rid].output, ref_out[rid2])
+            agreement(r["done"][rid].token_ids, ref_out[rid2])
             for rid, rid2 in zip(r["rids"], full["rids"])]))
         rows.append((f"budgets/{budget}tok",
                      1e6 * r["wall_s"] / max(r["steps"], 1),

@@ -33,11 +33,11 @@ def run():
     params = params_trained()
     reqs = workload("amc", 10, rng)
     full = run_engine(reqs, params=params, n_max=None)
-    ref = {r: full["done"][r].output for r in full["rids"]}
+    ref = {r: full["done"][r].token_ids for r in full["rids"]}
     for name, opts in VARIANTS.items():
         r = run_engine(reqs, params=params, n_max=3, window=4,
                        compress=opts)
-        agr = float(np.mean([agreement(r["done"][a].output, ref[b])
+        agr = float(np.mean([agreement(r["done"][a].token_ids, ref[b])
                              for a, b in zip(r["rids"], full["rids"])]))
         rows.append((f"quality/{name}",
                      1e6 * r["wall_s"] / max(r["steps"], 1),

@@ -1,16 +1,14 @@
 """Shared benchmark fixtures: tiny model (random + briefly trained),
-workload generators, engine runner."""
+workload generators, engine runner — all through the `repro.api` facade."""
 import dataclasses
-import os
 import time
 
 import jax
 import jax.numpy as jnp
 import numpy as np
 
+from repro.api import SamplingParams, Zipage
 from repro.configs import get_config
-from repro.core.compression import CompressOptions
-from repro.core.engine import EngineOptions, ZipageEngine
 from repro.models import lm
 from repro.training import optimizer as opt
 from repro.training.data import DataConfig, batch_at
@@ -64,35 +62,40 @@ def workload(kind, n, rng):
 
 DEFAULT_ENGINE = dict(
     block_size=8, n_total_blocks=72, max_batch=32, m_qslots=16, n_max=4,
-    window=4, compress=CompressOptions(window=4), scheduling="hybrid",
-    prefix_caching=True, async_compression=True, max_model_len=512,
-    prefill_rows=4, prefill_len=64, temperature=0.0)
+    window=4, scheduling="hybrid", prefix_caching=True,
+    async_compression=True, max_model_len=512, prefill_rows=4,
+    prefill_len=64)
 
 
 def run_engine(reqs, params=None, **overrides):
+    """Serve `reqs` ([(prompt, n_out), ...]) through the Zipage facade and
+    report throughput/concurrency. Facade config overrides (block_size,
+    n_max, scheduling, ...) ride on DEFAULT_ENGINE."""
     kw = dict(DEFAULT_ENGINE)
     kw.update(overrides)
-    eng = ZipageEngine(CFG, params or params_random(), EngineOptions(**kw))
-    rids = [eng.submit(p, o) for p, o in reqs]
+    z = Zipage(CFG, params or params_random(), **kw)
     t0 = time.monotonic()
-    done = eng.run(max_steps=20_000)
+    outs = z.generate([p for p, _o in reqs],
+                      [SamplingParams(max_new_tokens=o) for _p, o in reqs],
+                      max_steps=20_000)
     dt = time.monotonic() - t0
-    toks = sum(len(done[r].output) for r in rids)
+    toks = sum(o.n_tokens for o in outs)
     tpots = []
-    for r in rids:
-        rq = done[r]
-        if rq.t_finish and rq.t_first_token and len(rq.output) > 1:
-            tpots.append((rq.t_finish - rq.t_first_token)
-                         / (len(rq.output) - 1))
+    for o in outs:
+        m = o.metrics
+        if m.t_finish and m.t_first_token and o.n_tokens > 1:
+            tpots.append((m.t_finish - m.t_first_token) / (o.n_tokens - 1))
     return {
-        "engine": eng, "done": done, "rids": rids,
-        "wall_s": dt, "tokens": toks, "steps": eng.step_count,
+        "engine": z, "outputs": outs,
+        "done": {o.request_id: o for o in outs},
+        "rids": [o.request_id for o in outs],
+        "wall_s": dt, "tokens": toks, "steps": z.step_count,
         "tps": toks / dt,
-        "tokens_per_step": toks / max(eng.step_count, 1),
+        "tokens_per_step": toks / max(z.step_count, 1),
         "tpot_ms": 1e3 * float(np.mean(tpots)) if tpots else float("nan"),
         "mean_concurrency": float(np.mean([m["n_running"]
-                                           for m in eng.metrics])),
-        "compressions": sum(m["n_compressing"] for m in eng.metrics),
+                                           for m in z.metrics])),
+        "compressions": sum(m["n_compressing"] for m in z.metrics),
         "block_util": float(np.mean([m["block_util"]
-                                     for m in eng.metrics])),
+                                     for m in z.metrics])),
     }

@@ -4,34 +4,25 @@ target blocks so sharing survives.
 
   PYTHONPATH=src python examples/prefix_sharing.py
 """
-import dataclasses
-
-import jax
-import numpy as np
-
-from repro.configs import get_config
+from repro.api import CacheConfig, SamplingParams, Zipage
 from repro.core.compression import CompressOptions
-from repro.core.engine import EngineOptions, ZipageEngine
-from repro.models import lm
-
-cfg = dataclasses.replace(get_config("tiny-lm"), dtype="float32")
-params = lm.init(cfg, jax.random.key(0))
 
 SYSTEM_PROMPT = list(range(1, 33))          # 8 full blocks of 4
 
 
 def run(prefix_caching):
-    eng = ZipageEngine(cfg, params, EngineOptions(
-        block_size=4, n_total_blocks=128, max_batch=8, m_qslots=8,
-        n_max=4, window=2, compress=CompressOptions(window=2),
-        prefix_caching=prefix_caching, max_model_len=256,
-        prefill_rows=4, prefill_len=64, temperature=0.0))
-    rids = [eng.submit(SYSTEM_PROMPT + [100 + i], 30) for i in range(8)]
-    done = eng.run(max_steps=2000)
-    cached = [done[r].n_cached for r in rids]
-    eng.bm.check_invariants()
-    assert eng.bm.num_free == 128
-    return eng.step_count, cached
+    z = Zipage.from_config(
+        "tiny-lm",
+        cache=CacheConfig(block_size=4, n_total_blocks=128, n_max=4,
+                          window=2, compress=CompressOptions(window=2),
+                          prefix_caching=prefix_caching, max_model_len=256),
+        max_batch=8, m_qslots=8, prefill_rows=4, prefill_len=64)
+    outs = z.generate([SYSTEM_PROMPT + [100 + i] for i in range(8)],
+                      SamplingParams(max_new_tokens=30))
+    cached = [o.metrics.n_cached_prompt_tokens for o in outs]
+    z.bm.check_invariants()
+    assert z.num_free_blocks == 128
+    return z.step_count, cached
 
 
 steps_pc, cached_pc = run(True)

@@ -1,42 +1,62 @@
-"""Quickstart: serve a tiny LM with Compressed PagedAttention.
+"""Quickstart: serve a tiny LM through the `Zipage` facade.
+
+One line brings the engine up; requests carry their own SamplingParams
+(temperature / top-k / top-p / seed / stop sequences), tokens stream back
+as CompletionChunks while the continuous batch runs, and abort() cancels a
+request mid-flight with its blocks returned to the pool.
 
   PYTHONPATH=src python examples/quickstart.py
 """
-import dataclasses
+from repro.api import SamplingParams, Zipage
 
-import jax
-
-from repro.configs import get_config
-from repro.core.compression import CompressOptions
-from repro.core.engine import EngineOptions, ZipageEngine
-from repro.models import lm
-
-cfg = dataclasses.replace(get_config("tiny-lm"), dtype="float32")
-params = lm.init(cfg, jax.random.key(0))
-
-engine = ZipageEngine(cfg, params, EngineOptions(
-    block_size=8,            # page size b
-    n_total_blocks=64,       # KV pool
-    max_batch=4,             # decode slots
-    m_qslots=4,              # paper's M: query-slot concurrency
+z = Zipage.from_config(
+    "tiny-lm",
+    block_size=8,            # page size b          (CacheConfig)
+    n_total_blocks=64,       # KV pool              (CacheConfig)
     n_max=3,                 # block cap => KV budget = (n_max-1)*b = 16
-    window=4,                # observation window w
-    compress=CompressOptions(window=4, redundancy="lightning",
-                             alpha=0.8, lam=0.2, tau=0.4),
+    window=4,                # observation window w (CacheConfig)
+    max_model_len=128,
+    max_batch=4,             # decode slots         (SchedulerConfig)
+    m_qslots=4,              # paper's M            (SchedulerConfig)
     scheduling="hybrid",
     async_compression=True,
-    max_model_len=128,
-    temperature=0.0,
-))
+    prefill_rows=4,          # prefill bucket       (ModelRunnerConfig)
+    prefill_len=64,
+)
 
-prompts = [[1, 2, 3, 4, 5], [9, 8, 7, 6], [20, 21, 22]]
-rids = [engine.submit(p, max_new_tokens=40) for p in prompts]
-done = engine.run()
+# --- batch mode: one call, per-request sampling -----------------------
+outs = z.generate(
+    [[1, 2, 3, 4, 5], [9, 8, 7, 6], [20, 21, 22]],
+    [SamplingParams(max_new_tokens=24),                       # greedy
+     SamplingParams(temperature=0.8, seed=7, max_new_tokens=24),
+     SamplingParams(temperature=1.2, top_k=40, seed=1, max_new_tokens=24,
+                    logprobs=True)])
+for o in outs:
+    print(f"req {o.request_id}: {o.n_tokens} tokens "
+          f"(finish={o.finish_reason}), first 8 = {o.token_ids[:8]}")
 
-for rid, p in zip(rids, prompts):
-    r = done[rid]
-    print(f"req {rid}: prompt {p} -> {len(r.output)} tokens, "
-          f"first 10 = {r.output[:10]}")
-n_comp = sum(m["n_compressing"] for m in engine.metrics)
-print(f"steps: {engine.step_count}, compressions: {n_comp}, "
-      f"all blocks returned: {engine.bm.num_free == 64}")
+# --- streaming mode: add_request / step, with a mid-flight abort ------
+# Two requests at different temperatures AND seeds decode in the SAME
+# continuous batch; chunks arrive as tokens land.
+r_greedy = z.add_request([1, 2, 3, 4, 5],
+                         SamplingParams(max_new_tokens=40))
+r_warm = z.add_request([9, 8, 7, 6],
+                       SamplingParams(temperature=0.9, seed=123,
+                                      max_new_tokens=40))
+streamed = {r_greedy: [], r_warm: []}
+aborted = None
+while z.has_unfinished():
+    for out in z.step():
+        if out.chunk and out.chunk.token_ids:
+            streamed[out.request_id] += out.chunk.token_ids
+            print(f"  step {z.step_count:3d} req {out.request_id}: "
+                  f"+{len(out.chunk.token_ids)} -> {len(out.token_ids)}")
+    if aborted is None and len(streamed[r_warm]) >= 10:
+        aborted = z.abort(r_warm)     # cancel mid-flight; blocks returned
+        print(f"  aborted req {r_warm} at {aborted.n_tokens} tokens "
+              f"(finish={aborted.finish_reason})")
+
+n_comp = sum(m["n_compressing"] for m in z.metrics)
+print(f"steps: {z.step_count}, compressions: {n_comp}, "
+      f"all blocks returned: {z.num_free_blocks == 64}")
+assert z.num_free_blocks == 64

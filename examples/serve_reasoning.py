@@ -7,46 +7,41 @@ baseline preempts/queues once the pool fills. Prints TPS + speedup.
 
   PYTHONPATH=src python examples/serve_reasoning.py
 """
-import dataclasses
 import time
 
-import jax
 import numpy as np
 
+from repro.api import SamplingParams, Zipage
 from repro.configs import get_config
-from repro.core.compression import CompressOptions
-from repro.core.engine import EngineOptions, ZipageEngine
-from repro.models import lm
 
-cfg = dataclasses.replace(get_config("tiny-lm"), dtype="float32")
-params = lm.init(cfg, jax.random.key(0))
 rng = np.random.default_rng(0)
+VOCAB = get_config("tiny-lm").vocab_size
 # reasoning shape: short prompts, LONG outputs; demand (32 reqs × ~17 blocks)
 # far exceeds the 72-block pool => the pool, not the batch, is the limiter —
 # exactly the regime of the paper's Figure 7/8.
-REQS = [(rng.integers(0, cfg.vocab_size, size=12).tolist(), 120)
-        for _ in range(32)]
+PROMPTS = [rng.integers(0, VOCAB, size=12).tolist() for _ in range(32)]
+PARAMS = SamplingParams(max_new_tokens=120)
 
 
 def run(n_max, label):
-    eng = ZipageEngine(cfg, params, EngineOptions(
-        block_size=8, n_total_blocks=72, max_batch=32, m_qslots=16,
-        n_max=n_max, window=4, compress=CompressOptions(window=4),
-        scheduling="hybrid", async_compression=True,
-        max_model_len=256, prefill_rows=4, prefill_len=64,
-        temperature=0.0))
-    rids = [eng.submit(p, o) for p, o in REQS]
+    z = Zipage.from_config(
+        "tiny-lm",
+        block_size=8, n_total_blocks=72, n_max=n_max, window=4,
+        max_model_len=256,
+        max_batch=32, m_qslots=16, scheduling="hybrid",
+        async_compression=True,
+        prefill_rows=4, prefill_len=64)
     t0 = time.monotonic()
-    done = eng.run(max_steps=6000)
+    outs = z.generate(PROMPTS, PARAMS)
     dt = time.monotonic() - t0
-    toks = sum(len(done[r].output) for r in rids)
-    mean_run = np.mean([m["n_running"] for m in eng.metrics])
-    print(f"{label:22s} steps={eng.step_count:5d} tokens={toks:5d} "
-          f"tokens/step={toks / eng.step_count:5.1f} "
+    toks = sum(o.n_tokens for o in outs)
+    mean_run = np.mean([m["n_running"] for m in z.metrics])
+    preempts = sum(o.metrics.preempt_count for o in outs)
+    print(f"{label:22s} steps={z.step_count:5d} tokens={toks:5d} "
+          f"tokens/step={toks / z.step_count:5.1f} "
           f"mean_concurrency={mean_run:5.1f} "
-          f"preempts={sum(r.preempt_count for r in done.values())} "
-          f"wall={dt:.1f}s")
-    return eng.step_count, toks
+          f"preempts={preempts} wall={dt:.1f}s")
+    return z.step_count, toks
 
 
 steps_zip, toks = run(4, "Zipage (budget=24)")

@@ -1,0 +1,24 @@
+"""Public serving API for the Zipage engine.
+
+Stable surface — examples, benchmarks and launchers import from here only:
+
+    from repro.api import Zipage, SamplingParams
+
+    z = Zipage.from_config("tiny-lm", block_size=8, n_total_blocks=64)
+    outs = z.generate([[1, 2, 3]], SamplingParams(max_new_tokens=32))
+
+See docs/API.md for the full tour (streaming, abort, config split).
+"""
+from repro.api.config import (CacheConfig, ModelRunnerConfig,  # noqa: F401
+                              SchedulerConfig, build_engine_options)
+from repro.api.outputs import (CompletionChunk, CompressionMetrics,  # noqa: F401
+                               FinishReason, RequestMetrics, RequestOutput)
+from repro.api.params import SamplingParams  # noqa: F401
+from repro.api.engine import Zipage  # noqa: F401
+
+__all__ = [
+    "Zipage", "SamplingParams", "RequestOutput", "CompletionChunk",
+    "RequestMetrics", "CompressionMetrics", "FinishReason",
+    "CacheConfig", "SchedulerConfig", "ModelRunnerConfig",
+    "build_engine_options",
+]

@@ -1,0 +1,114 @@
+"""Orthogonal serving configs composed into the internal ``EngineOptions``.
+
+The engine-internal ``EngineOptions`` mixes cache sizing, scheduler policy
+and runner shapes in one bag. The public API splits them along ownership
+lines (mirroring vLLM's CacheConfig/SchedulerConfig split):
+
+  * ``CacheConfig``       — KV pool: paging, budget, compression, prefix cache
+  * ``SchedulerConfig``   — batching policy: slots, query slots, async comp.
+  * ``ModelRunnerConfig`` — device step shapes: prefill buckets, dtype
+
+``build_engine_options`` composes the three back into ``EngineOptions`` for
+the internal layer; ``route_overrides`` lets call sites pass flat kwargs
+(``Zipage.from_config("tiny-lm", block_size=8, max_batch=4)``) that are
+routed to the config owning each field.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Optional, Tuple
+
+from repro.core.compression import CompressOptions
+from repro.core.engine import EngineOptions
+
+
+@dataclasses.dataclass(frozen=True)
+class CacheConfig:
+    """KV-cache pool layout and the Compressed-PagedAttention budget."""
+    block_size: int = 16
+    n_total_blocks: int = 256
+    n_max: Optional[int] = 4         # block cap; None => full-KV baseline
+    window: int = 4                  # observation window w
+    prefix_caching: bool = True
+    compress: Optional[CompressOptions] = None   # None => window defaults
+    max_model_len: int = 512
+
+
+@dataclasses.dataclass(frozen=True)
+class SchedulerConfig:
+    """Continuous-batching policy (paper §4.3/§4.5)."""
+    max_batch: int = 16              # decode slots
+    m_qslots: int = 8                # paper's M (query-slot pool)
+    scheduling: str = "hybrid"       # hybrid | constrained
+    async_compression: bool = True
+
+
+@dataclasses.dataclass(frozen=True)
+class ModelRunnerConfig:
+    """Fixed device-step shapes and numerics."""
+    prefill_rows: int = 4
+    prefill_len: int = 128
+    dtype: str = "float32"
+    layer_stride: int = 0            # 0 => all layers in one compress call
+    measure_phases: bool = False     # block per phase for timing benches
+
+
+_CONFIG_TYPES = (CacheConfig, SchedulerConfig, ModelRunnerConfig)
+_FIELD_OWNER = {f.name: t for t in _CONFIG_TYPES
+                for f in dataclasses.fields(t)}
+
+
+def route_overrides(cache: Optional[CacheConfig] = None,
+                    scheduler: Optional[SchedulerConfig] = None,
+                    runner: Optional[ModelRunnerConfig] = None,
+                    **overrides
+                    ) -> Tuple[CacheConfig, SchedulerConfig,
+                               ModelRunnerConfig]:
+    """Apply flat field overrides on top of (possibly defaulted) configs."""
+    by_type = {CacheConfig: dict(), SchedulerConfig: dict(),
+               ModelRunnerConfig: dict()}
+    for k, v in overrides.items():
+        owner = _FIELD_OWNER.get(k)
+        if owner is None:
+            if k in ("temperature", "seed", "top_k", "top_p"):
+                raise TypeError(
+                    f"{k!r} is per-request now — pass it via "
+                    "SamplingParams, not the engine config")
+            raise TypeError(f"unknown engine config field {k!r}")
+        by_type[owner][k] = v
+    cache = dataclasses.replace(cache or CacheConfig(),
+                                **by_type[CacheConfig])
+    scheduler = dataclasses.replace(scheduler or SchedulerConfig(),
+                                    **by_type[SchedulerConfig])
+    runner = dataclasses.replace(runner or ModelRunnerConfig(),
+                                 **by_type[ModelRunnerConfig])
+    return cache, scheduler, runner
+
+
+def build_engine_options(cache: CacheConfig, scheduler: SchedulerConfig,
+                         runner: ModelRunnerConfig) -> EngineOptions:
+    compress = cache.compress
+    if compress is None:
+        compress = CompressOptions(window=cache.window)
+    elif compress.window != cache.window:
+        raise ValueError(
+            f"CacheConfig.window ({cache.window}) must match "
+            f"compress.window ({compress.window}); set both, or pass only "
+            "compress and window together")
+    return EngineOptions(
+        block_size=cache.block_size,
+        n_total_blocks=cache.n_total_blocks,
+        max_batch=scheduler.max_batch,
+        m_qslots=scheduler.m_qslots,
+        n_max=cache.n_max,
+        window=cache.window,
+        scheduling=scheduler.scheduling,
+        prefix_caching=cache.prefix_caching,
+        async_compression=scheduler.async_compression,
+        compress=compress,
+        max_model_len=cache.max_model_len,
+        prefill_rows=runner.prefill_rows,
+        prefill_len=runner.prefill_len,
+        dtype=runner.dtype,
+        layer_stride=runner.layer_stride,
+        measure_phases=runner.measure_phases)

@@ -1,0 +1,9 @@
+"""Per-request sampling parameters (facade re-export).
+
+``SamplingParams`` lives next to the device sampler in
+``repro.core.sampling`` (the engine consumes it directly); the public
+import path is this module / ``repro.api``.
+"""
+from repro.core.sampling import SamplingParams  # noqa: F401
+
+__all__ = ["SamplingParams"]

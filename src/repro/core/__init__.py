@@ -1,10 +1,15 @@
 """The paper's primary contribution: Compressed PagedAttention + the Zipage
 serving engine (scheduler, paged pools, compression, prefix cache).
 
-Public API:
-    from repro.core import ZipageEngine, EngineOptions, CompressOptions
+This is the INTERNAL layer. The stable public surface is the facade:
+
+    from repro.api import Zipage, SamplingParams      # see docs/API.md
+
+``ZipageEngine``/``EngineOptions`` remain importable for tests and
+embedders that need scheduler internals.
 """
 from repro.core.compression import CompressOptions, build_compress_fn  # noqa
 from repro.core.engine import EngineOptions, ZipageEngine  # noqa
 from repro.core.memory_planner import MemoryPlan, plan_memory  # noqa
-from repro.core.request import Request, State  # noqa
+from repro.core.request import FinishReason, Request, State  # noqa
+from repro.core.sampling import SamplingParams  # noqa

@@ -9,7 +9,12 @@ steps: prefill, decode, compress. Features:
   * asynchronous compression: compressing requests sit out one decode step
     and rejoin; decode of the rest is dispatched without waiting (§4.5),
   * preemption (recompute mode) + FCFS, straggler-aware admission policy,
+  * per-request sampling (``SamplingParams``: temperature/top-k/top-p with
+    per-request PRNG streams, stop sequences, eos sets, logprobs),
+  * mid-flight cancellation (``abort``) returning blocks to the pool,
   * snapshot/restore fault tolerance.
+
+This is the internal layer; the public surface is ``repro.api.Zipage``.
 
 Setting ``n_max=None`` disables compression entirely, which *is* the
 nano-vLLM baseline of the paper's comparisons (plain PagedAttention).
@@ -18,8 +23,9 @@ from __future__ import annotations
 
 import dataclasses
 import time
+import warnings
 from collections import deque
-from typing import Dict, List, Optional
+from typing import Dict, List, Optional, Sequence
 
 import jax
 import jax.numpy as jnp
@@ -29,8 +35,8 @@ from repro.configs.base import ArchConfig
 from repro.core import serve_model
 from repro.core.block_manager import BlockManager
 from repro.core.compression import CompressOptions, build_compress_fn
-from repro.core.request import Request, State
-from repro.core.sampling import sample
+from repro.core.request import FinishReason, Request, State
+from repro.core.sampling import SamplingParams, sample_batch
 
 
 @dataclasses.dataclass(frozen=True)
@@ -49,6 +55,9 @@ class EngineOptions:
     max_model_len: int = 512
     prefill_rows: int = 4
     prefill_len: int = 128
+    # Deprecated: engine-global sampling knobs, kept as defaults for the
+    # legacy ``submit()`` path only. New code passes a per-request
+    # ``SamplingParams`` via ``add_request()`` / the ``repro.api`` facade.
     temperature: float = 0.0         # 0 => greedy
     seed: int = 0
     dtype: str = "float32"
@@ -98,7 +107,7 @@ class ZipageEngine:
         self.free_qslots = list(range(opts.m_qslots - 1, -1, -1))
         self._rid = 0
         self._rng = np.random.default_rng(opts.seed)
-        self._samp_key = jax.random.key(opts.seed)
+        self._sampler = jax.jit(sample_batch)
         self.metrics: List[dict] = []
         self.step_count = 0
         self._ring = (self.spec.ring_blocks(cfg) if cfg.local_window else 0)
@@ -107,15 +116,67 @@ class ZipageEngine:
         self.admission_scale = 1.0
 
     # ------------------------------------------------------------------
-    def submit(self, prompt, max_new_tokens, eos_id=-1) -> int:
-        assert len(prompt) + max_new_tokens <= self.opts.max_model_len, \
-            "request exceeds max_model_len"
+    def add_request(self, prompt,
+                    sampling: Optional[SamplingParams] = None) -> int:
+        """Enqueue a request with per-request ``SamplingParams``. This is
+        the primary entry point (the ``repro.api.Zipage`` facade calls it);
+        ``submit()`` remains as a deprecated shim."""
+        if sampling is None:
+            sampling = SamplingParams(temperature=self.opts.temperature,
+                                      seed=self._default_seed())
+        assert len(prompt) + sampling.max_new_tokens \
+            <= self.opts.max_model_len, "request exceeds max_model_len"
         rid = self._rid
         self._rid += 1
-        self.waiting.append(Request(rid=rid, prompt=list(map(int, prompt)),
-                                    max_new_tokens=max_new_tokens,
-                                    eos_id=eos_id, arrival=time.monotonic()))
+        self.waiting.append(Request(
+            rid=rid, prompt=list(map(int, prompt)),
+            max_new_tokens=sampling.max_new_tokens, sampling=sampling,
+            arrival=time.monotonic()))
         return rid
+
+    def _default_seed(self) -> int:
+        """Decorrelate per-request streams under the engine-global seed:
+        identical seeds would replay identical draws per position."""
+        return (self.opts.seed * 1_000_003 + self._rid) & 0xFFFFFFFF
+
+    def submit(self, prompt, max_new_tokens, eos_id=None) -> int:
+        """Deprecated: legacy entry point with the ``eos_id=-1`` sentinel
+        (which can collide with masked/negative token conventions). Routes
+        through :class:`SamplingParams`; prefer ``add_request()`` or the
+        ``repro.api.Zipage`` facade. Bare ``submit(prompt, n)`` keeps its
+        historical behavior (engine-global temperature/seed, no eos)."""
+        if eos_id is not None:
+            warnings.warn(
+                "submit(..., eos_id=...) is deprecated; pass "
+                "SamplingParams(eos_ids=(...)) to add_request() instead "
+                "(eos_id=-1 meant 'disabled')", DeprecationWarning,
+                stacklevel=2)
+        return self.add_request(prompt, SamplingParams.from_legacy(
+            max_new_tokens, -1 if eos_id is None else eos_id,
+            temperature=self.opts.temperature, seed=self._default_seed()))
+
+    def abort(self, rid: int) -> bool:
+        """Cancel a request mid-flight: remove it from the waiting queue or
+        the running batch, return its blocks to the pool, and record it as
+        finished with reason ``"abort"``. Returns False if the rid is
+        unknown or already finished."""
+        for r in list(self.waiting):
+            if r.rid == rid:
+                self.waiting.remove(r)
+                break
+        else:
+            for r in self.running:
+                if r.rid == rid:
+                    self._release_slots(r)
+                    self.running.remove(r)
+                    break
+            else:
+                return False
+        r.state = State.FINISHED
+        r.finish_reason = FinishReason.ABORT
+        r.t_finish = time.monotonic()
+        self.finished[rid] = r
+        return True
 
     # ------------------------------------------------------------------
     # scheduling helpers
@@ -150,7 +211,9 @@ class ZipageEngine:
         return (r.n_blocks < self.opts.n_max
                 or r.tokens_in_last_block(b) < b - w)
 
-    def _preempt(self, r: Request):
+    def _release_slots(self, r: Request):
+        """Return r's blocks, decode slot and query slot to their pools and
+        clear the host mirrors (shared by preempt/finish/abort)."""
         self.bm.release(r.blocks)
         r.blocks = []
         if r.slot >= 0:
@@ -160,6 +223,9 @@ class ZipageEngine:
         if r.qslot >= 0:
             self.free_qslots.append(r.qslot)
         r.slot = r.qslot = -1
+
+    def _preempt(self, r: Request):
+        self._release_slots(r)
         r.compressed = False
         r.seq_len = r.position = 0
         r.n_cached = 0
@@ -272,14 +338,16 @@ class ZipageEngine:
                 self.params, self.state, jnp.asarray(toks),
                 jnp.asarray(slot_ids), jnp.asarray(lengths),
                 jnp.asarray(start), **kw)
-            tok = self._sample(logits)
+            # only rows finishing their last chunk consume a sample
+            row_reqs: List[Optional[Request]] = [None] * P
+            for i, r, _n in final:
+                row_reqs[i] = r
+            tok, lp = self._sample_rows(logits, row_reqs)
             for i, r, chunk_len in final:
                 self.tokens_next[r.slot] = tok[i]
-                r.output.append(int(tok[i]))
+                self._record_token(r, tok[i], None if lp is None else lp[i])
                 if r.qslot >= 0:
                     r.win_count = min(self.opts.window, chunk_len)
-                if r.t_first_token is None:
-                    r.t_first_token = time.monotonic()
             still = [r for r in batch if remaining[r.rid]]
             pending = still + pending[P:]
 
@@ -371,6 +439,8 @@ class ZipageEngine:
         for r, dest, reserved, release in planned:
             shared_released = [blk for blk in release if self.bm.ref[blk] > 1]
             self.bm.release(release)
+            r.n_compressions += 1
+            r.comp_blocks_freed += len(release) - len(shared_released)
             r.blocks = list(dest) + [reserved]
             r.seq_len = k
             r.compressed = True
@@ -390,6 +460,11 @@ class ZipageEngine:
         active = []
         for r in list(self.running):
             if r.state == State.COMPRESSING:
+                continue
+            if r.done():
+                # already terminated (eos/stop on the prefill-sampled
+                # token); decoding again would bury the match under a
+                # second token before _finish sees it
                 continue
             if r.state == State.BLOCKED:
                 r.state = State.RUNNING          # retry below
@@ -432,12 +507,45 @@ class ZipageEngine:
         self.state["positions"] = jnp.asarray(self.host_pos)
         self.state["qslot"] = jnp.asarray(self.host_qslot)
 
-    def _sample(self, logits):
-        if self.opts.temperature <= 0:
-            return np.asarray(jnp.argmax(logits, -1))
-        self._samp_key, k = jax.random.split(self._samp_key)
-        return np.asarray(sample(logits, k,
-                                 temperature=self.opts.temperature))
+    def _sample_rows(self, logits, reqs: Sequence[Optional[Request]]):
+        """Sample one token per row; ``reqs[i]`` is the request occupying
+        row i (None for padding rows). All-greedy batches with no logprob
+        consumers take the cheap argmax path; otherwise the jitted
+        per-row sampler runs with each request's (seed, n_generated) PRNG
+        state, so outputs are independent of batch composition.
+        Returns (tokens, logprobs) as numpy; logprobs is None on the
+        fast path."""
+        if not any(r is not None and (not r.sampling.is_greedy
+                                      or r.sampling.logprobs)
+                   for r in reqs):
+            return np.asarray(jnp.argmax(logits, -1)), None
+        n = logits.shape[0]
+        seeds = np.zeros((n,), np.uint32)
+        counters = np.zeros((n,), np.int32)
+        temps = np.zeros((n,), np.float32)
+        top_k = np.zeros((n,), np.int32)
+        top_p = np.ones((n,), np.float32)
+        for i, r in enumerate(reqs):
+            if r is None:
+                continue
+            sp = r.sampling
+            seeds[i] = np.uint32(sp.seed & 0xFFFFFFFF)
+            counters[i] = len(r.output)
+            temps[i] = sp.temperature
+            top_k[i] = sp.top_k
+            top_p[i] = sp.top_p
+        tok, lp = self._sampler(
+            logits, jnp.asarray(seeds), jnp.asarray(counters),
+            jnp.asarray(temps), jnp.asarray(top_k), jnp.asarray(top_p))
+        return np.asarray(tok), np.asarray(lp)
+
+    @staticmethod
+    def _record_token(r: Request, tok: int, lp) -> None:
+        r.output.append(int(tok))
+        if r.sampling.logprobs and lp is not None:
+            r.logprobs.append(float(lp))
+        if r.t_first_token is None:
+            r.t_first_token = time.monotonic()
 
     def _run_decode(self, active):
         if not active:
@@ -449,15 +557,16 @@ class ZipageEngine:
         logits, self.state = self._decode(
             self.params, self.state, jnp.asarray(self.tokens_next),
             jnp.asarray(mask))
-        tok = self._sample(logits)
+        slot_reqs: List[Optional[Request]] = [None] * self.opts.max_batch
+        for r in active:
+            slot_reqs[r.slot] = r
+        tok, lp = self._sample_rows(logits, slot_reqs)
         for r in active:
             t = int(tok[r.slot])
             self.tokens_next[r.slot] = t
-            r.output.append(t)
+            self._record_token(r, t, None if lp is None else lp[r.slot])
             if r.qslot >= 0:
                 r.win_count = min(self.opts.window, r.win_count + 1)
-            if r.t_first_token is None:
-                r.t_first_token = time.monotonic()
             r.seq_len = min(r.seq_len + 1, self._ring) if self._ring \
                 else (r.seq_len if self.cfg.attention_free else r.seq_len + 1)
             r.position += 1
@@ -466,15 +575,11 @@ class ZipageEngine:
 
     def _finish(self):
         for r in list(self.running):
-            if r.state != State.COMPRESSING and r.done():
-                self.bm.release(r.blocks)
-                r.blocks = []
-                self.host_bt[r.slot] = -1
-                self.host_qslot[r.slot] = -1
-                self.free_slots.append(r.slot)
-                if r.qslot >= 0:
-                    self.free_qslots.append(r.qslot)
-                r.slot = r.qslot = -1
+            if r.state != State.COMPRESSING \
+                    and (reason := r.check_finish()) is not None:
+                r.finish_reason = reason
+                r.truncate_stop()
+                self._release_slots(r)
                 r.state = State.FINISHED
                 r.t_finish = time.monotonic()
                 self.running.remove(r)

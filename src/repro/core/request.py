@@ -5,6 +5,8 @@ import dataclasses
 import enum
 from typing import List, Optional
 
+from repro.core.sampling import SamplingParams, matched_stop
+
 
 class State(enum.Enum):
     WAITING = "waiting"
@@ -15,16 +17,25 @@ class State(enum.Enum):
     FINISHED = "finished"
 
 
+class FinishReason:
+    STOP = "stop"                # eos token or stop sequence
+    LENGTH = "length"            # hit max_new_tokens
+    ABORT = "abort"              # cancelled via abort()
+
+
 @dataclasses.dataclass
 class Request:
     rid: int
     prompt: List[int]
     max_new_tokens: int
-    eos_id: int = -1
     arrival: float = 0.0
+    sampling: SamplingParams = dataclasses.field(
+        default_factory=SamplingParams)
 
     state: State = State.WAITING
     output: List[int] = dataclasses.field(default_factory=list)
+    logprobs: List[float] = dataclasses.field(default_factory=list)
+    finish_reason: Optional[str] = None
     blocks: List[int] = dataclasses.field(default_factory=list)
     slot: int = -1
     qslot: int = -1
@@ -36,6 +47,10 @@ class Request:
     n_shared: int = 0                  # shared blocks at admission
     preempt_count: int = 0
     win_count: int = 0                 # observation-window entries captured
+
+    # per-request compression metrics
+    n_compressions: int = 0            # compression events undergone
+    comp_blocks_freed: int = 0         # blocks released by those events
 
     # metrics
     t_first_token: Optional[float] = None
@@ -54,7 +69,25 @@ class Request:
         r = self.seq_len % block_size
         return block_size if (r == 0 and self.seq_len > 0) else r
 
+    def check_finish(self) -> Optional[str]:
+        """Finish reason the request has reached, or None if still going."""
+        sp = self.sampling
+        if self.output:
+            if sp.eos_ids is not None and self.output[-1] in sp.eos_ids:
+                return FinishReason.STOP
+            if matched_stop(self.output, sp) is not None:
+                return FinishReason.STOP
+        if len(self.output) >= self.max_new_tokens:
+            return FinishReason.LENGTH
+        return None
+
     def done(self) -> bool:
-        if self.output and self.eos_id >= 0 and self.output[-1] == self.eos_id:
-            return True
-        return len(self.output) >= self.max_new_tokens
+        return self.check_finish() is not None
+
+    def truncate_stop(self) -> None:
+        """Drop a matched stop sequence from the tail of the output
+        (eos tokens are kept, vLLM-style)."""
+        s = matched_stop(self.output, self.sampling)
+        if s is not None:
+            del self.output[-len(s):]
+            del self.logprobs[len(self.output):]

@@ -1,10 +1,125 @@
-"""Token sampling."""
+"""Token sampling: per-request params and the jit-compatible batch sampler.
+
+``SamplingParams`` is the request-scoped contract of the serving API
+(re-exported as ``repro.api.SamplingParams``).  ``sample_batch`` is the
+engine's device-side sampler: every row carries its own temperature,
+top-k/top-p and PRNG state, so one fixed-shape jitted call serves a
+continuous batch of heterogeneous requests.
+
+Per-row randomness is keyed by ``fold_in(key(seed), n_generated)`` — a
+request's token stream depends only on its own (seed, position), never on
+batch composition, admission order, or preemption. That is what makes
+per-request seeds reproducible under continuous batching.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Optional, Sequence, Tuple
+
 import jax
 import jax.numpy as jnp
 
 
+@dataclasses.dataclass(frozen=True)
+class SamplingParams:
+    """Per-request sampling / termination parameters (vLLM-style).
+
+    temperature <= 0 means greedy (argmax). ``top_k <= 0`` disables the
+    top-k filter; ``top_p`` must be in (0, 1], where exactly ``1.0``
+    disables nucleus filtering. ``stop`` is a tuple of
+    token-id sequences; a match ends the request with finish reason
+    ``"stop"`` and the matched tokens are truncated from the output.
+    ``eos_ids`` lists token ids that terminate generation (kept in the
+    output); ``None`` disables eos detection entirely — there is no ``-1``
+    sentinel in this API. ``seed`` drives the per-request PRNG stream;
+    ``logprobs`` requests the sampled token's logprob at each position.
+    """
+    temperature: float = 0.0
+    top_k: int = 0
+    top_p: float = 1.0
+    max_new_tokens: int = 16
+    stop: Tuple[Tuple[int, ...], ...] = ()
+    eos_ids: Optional[Tuple[int, ...]] = None
+    seed: int = 0
+    logprobs: bool = False
+
+    def __post_init__(self):
+        if self.max_new_tokens < 1:
+            raise ValueError("max_new_tokens must be >= 1")
+        if not (0.0 < self.top_p <= 1.0):
+            raise ValueError("top_p must be in (0, 1]")
+        # normalize stop/eos to hashable tuples (lists are convenient at
+        # call sites; the engine relies on immutability)
+        object.__setattr__(self, "stop", tuple(
+            tuple(int(t) for t in s) for s in self.stop))
+        if self.eos_ids is not None:
+            object.__setattr__(self, "eos_ids", tuple(
+                int(t) for t in self.eos_ids))
+
+    @property
+    def is_greedy(self) -> bool:
+        return self.temperature <= 0.0
+
+    @classmethod
+    def from_legacy(cls, max_new_tokens: int, eos_id: int = -1,
+                    temperature: float = 0.0, seed: int = 0
+                    ) -> "SamplingParams":
+        """Map the old ``submit(..., eos_id=-1)`` sentinel convention."""
+        return cls(temperature=temperature, seed=seed,
+                   max_new_tokens=max_new_tokens,
+                   eos_ids=None if eos_id < 0 else (eos_id,))
+
+
+def matched_stop(output: Sequence[int],
+                 params: SamplingParams) -> Optional[Tuple[int, ...]]:
+    """The stop token-sequence the output currently ends with, if any."""
+    for s in params.stop:
+        if s and len(output) >= len(s) and tuple(output[-len(s):]) == s:
+            return s
+    return None
+
+
+# ----------------------------------------------------------------------
+# device-side samplers
+
 def sample(logits, key, *, temperature=0.6, greedy=False):
-    """logits: (B, V) fp32 -> (B,) int32."""
+    """Legacy batch-uniform sampler. logits: (B, V) fp32 -> (B,) int32."""
     if greedy or temperature <= 0:
         return jnp.argmax(logits, -1).astype(jnp.int32)
     return jax.random.categorical(key, logits / temperature, -1).astype(jnp.int32)
+
+
+def sample_batch(logits, seeds, counters, temps, top_k, top_p):
+    """Per-row temperature / top-k / top-p sampling with per-row PRNG.
+
+    logits: (B, V) fp32; seeds/counters: (B,) uint32/int32 per-row PRNG
+    state; temps/top_p: (B,) fp32; top_k: (B,) int32 (<=0 disables).
+    Returns (tokens (B,) int32, logprobs (B,) fp32) where logprobs are
+    log-softmax of the *unfiltered* distribution at the chosen token.
+    Rows with temp <= 0 take the argmax.
+    """
+    V = logits.shape[-1]
+    greedy_tok = jnp.argmax(logits, -1).astype(jnp.int32)
+    full_logprobs = jax.nn.log_softmax(logits, -1)
+
+    sorted_logits, sorted_idx = jax.lax.top_k(logits, V)
+    ranks = jnp.arange(V)[None, :]
+    k = jnp.where(top_k[:, None] > 0, top_k[:, None], V)
+    probs = jax.nn.softmax(sorted_logits, -1)
+    cum = jnp.cumsum(probs, -1)
+    # nucleus: keep tokens while the mass *before* them is < top_p, so the
+    # highest-probability token always survives
+    keep = (ranks < k) & ((cum - probs) < top_p[:, None])
+    masked = jnp.where(keep, sorted_logits, -jnp.inf)
+    scaled = masked / jnp.maximum(temps, 1e-6)[:, None]
+
+    def draw(seed, counter, row):
+        key = jax.random.fold_in(jax.random.key(seed), counter)
+        return jax.random.categorical(key, row)
+
+    rank_sampled = jax.vmap(draw)(seeds, counters, scaled)
+    sampled_tok = jnp.take_along_axis(
+        sorted_idx, rank_sampled[:, None], -1)[:, 0].astype(jnp.int32)
+    tok = jnp.where(temps <= 0.0, greedy_tok, sampled_tok)
+    lp = jnp.take_along_axis(full_logprobs, tok[:, None], -1)[:, 0]
+    return tok, lp

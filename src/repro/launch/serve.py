@@ -1,4 +1,4 @@
-"""Serving launcher: builds a Zipage engine and runs a synthetic workload.
+"""Serving launcher: builds a Zipage facade and runs a synthetic workload.
 
   PYTHONPATH=src python -m repro.launch.serve --arch tiny-lm \
       --workload amc --n-requests 16 --budget 24
@@ -9,13 +9,9 @@ import argparse
 import json
 import time
 
-import jax
 import numpy as np
 
-from repro.configs import get_config
-from repro.core.compression import CompressOptions
-from repro.core.engine import EngineOptions, ZipageEngine
-from repro.models import lm
+from repro.api import SamplingParams, Zipage
 
 
 def synth_workload(kind, n, vocab, rng):
@@ -39,21 +35,21 @@ def synth_workload(kind, n, vocab, rng):
     return reqs
 
 
-def run_engine(cfg, params, reqs, **opts):
+def run_engine(arch, reqs, *, reduce=False, **opts):
     base = dict(block_size=8, n_total_blocks=192, max_batch=12, m_qslots=6,
-                n_max=4, window=4, compress=CompressOptions(window=4),
-                max_model_len=256, prefill_rows=4, prefill_len=128,
-                temperature=0.0)
+                n_max=4, window=4, max_model_len=256, prefill_rows=4,
+                prefill_len=128)
     base.update(opts)
-    eng = ZipageEngine(cfg, params, EngineOptions(**base))
-    rids = [eng.submit(p, o) for p, o in reqs]
+    z = Zipage.from_config(arch, reduce=reduce, **base)
     t0 = time.monotonic()
-    done = eng.run(max_steps=5000)
+    outs = z.generate([p for p, _o in reqs],
+                      [SamplingParams(max_new_tokens=o) for _p, o in reqs],
+                      max_steps=5000)
     dt = time.monotonic() - t0
-    toks = sum(len(done[r].output) for r in rids)
-    return {"engine": eng, "tps": toks / dt, "wall_s": dt,
-            "tokens": toks, "steps": eng.step_count,
-            "outputs": {r: done[r].output for r in rids}}
+    toks = sum(o.n_tokens for o in outs)
+    return {"engine": z, "tps": toks / dt, "wall_s": dt,
+            "tokens": toks, "steps": z.step_count,
+            "outputs": {o.request_id: o.token_ids for o in outs}}
 
 
 def main(argv=None):
@@ -73,25 +69,21 @@ def main(argv=None):
     ap.add_argument("--seed", type=int, default=0)
     args = ap.parse_args(argv)
 
-    cfg = get_config(args.arch)
-    if args.arch != "tiny-lm":
-        cfg = cfg.reduced()
-    import dataclasses
-    cfg = dataclasses.replace(cfg, dtype="float32")
-    params = lm.init(cfg, jax.random.key(0))
+    from repro.configs import get_config
+    vocab = get_config(args.arch).vocab_size
     rng = np.random.default_rng(args.seed)
-    reqs = synth_workload(args.workload, args.n_requests, cfg.vocab_size, rng)
+    reqs = synth_workload(args.workload, args.n_requests, vocab, rng)
     n_max = None if args.full_kv else (args.budget // 8 + 1)
-    res = run_engine(cfg, params, reqs, n_max=n_max,
-                     async_compression=args.asyncc,
+    res = run_engine(args.arch, reqs, reduce=args.arch != "tiny-lm",
+                     n_max=n_max, async_compression=args.asyncc,
                      scheduling=args.scheduling,
                      prefix_caching=args.prefix)
-    eng = res.pop("engine")
+    z = res.pop("engine")
     res.pop("outputs")
-    res["compressions"] = sum(m["n_compressing"] for m in eng.metrics)
-    res["peak_running"] = max(m["n_running"] for m in eng.metrics)
+    res["compressions"] = sum(m["n_compressing"] for m in z.metrics)
+    res["peak_running"] = max(m["n_running"] for m in z.metrics)
     res["mean_block_util"] = float(np.mean([m["block_util"]
-                                            for m in eng.metrics]))
+                                            for m in z.metrics]))
     print(json.dumps(res, indent=1))
     return res
 

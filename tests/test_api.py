@@ -1,0 +1,243 @@
+"""Serving-facade tests: per-request SamplingParams, streaming chunks,
+abort lifecycle, stop handling, and the config split.
+
+One shared facade instance (same device-step shapes) keeps jit
+recompilation to a minimum on CPU.
+"""
+import dataclasses
+import warnings
+
+import jax
+import pytest
+
+from repro.api import (CacheConfig, ModelRunnerConfig, SamplingParams,
+                       SchedulerConfig, Zipage)
+from repro.configs import get_config
+from repro.models import lm
+
+CFG = dataclasses.replace(get_config("tiny-lm"), dtype="float32")
+PARAMS = lm.init(CFG, jax.random.key(0))
+N_BLOCKS = 64
+
+
+def make_facade(**kw):
+    base = dict(block_size=8, n_total_blocks=N_BLOCKS, max_batch=4,
+                m_qslots=4, n_max=3, window=4, max_model_len=128,
+                prefill_rows=2, prefill_len=64)
+    base.update(kw)
+    return Zipage(CFG, PARAMS, **base)
+
+
+Z = make_facade()
+P1, P2 = [1, 2, 3, 4, 5], [9, 8, 7]
+
+
+def greedy(n):
+    return SamplingParams(max_new_tokens=n)
+
+
+def test_generate_batch_and_pool_accounting():
+    outs = Z.generate([P1, P2], greedy(8))
+    assert [o.n_tokens for o in outs] == [8, 8]
+    assert all(o.finished and o.finish_reason == "length" for o in outs)
+    assert outs[0].prompt_token_ids == P1
+    assert Z.num_free_blocks == N_BLOCKS
+    Z.bm.check_invariants()
+
+
+def test_per_request_seed_reproducibility():
+    sp = SamplingParams(temperature=0.9, seed=42, max_new_tokens=10)
+    # identical (prompt, seed) side by side in ONE continuous batch
+    a, b = Z.generate([P1, P1], [sp, sp])
+    assert a.token_ids == b.token_ids
+    # and across a fresh run of the same engine
+    c, = Z.generate([P1], sp)
+    assert c.token_ids == a.token_ids
+    # a different seed diverges
+    d, = Z.generate([P1], dataclasses.replace(sp, seed=7))
+    assert d.token_ids != a.token_ids
+
+
+def test_mixed_temperatures_independent_of_batch_mates():
+    """A greedy request must be unaffected by a stochastic batch mate —
+    per-slot PRNG state, not an engine-global key."""
+    base, = Z.generate([P1], greedy(10))
+    hot = SamplingParams(temperature=1.1, top_k=50, seed=3,
+                         max_new_tokens=10)
+    mixed = Z.generate([P1, P2], [greedy(10), hot])
+    assert mixed[0].token_ids == base.token_ids
+
+
+def test_stop_sequence_truncation():
+    base, = Z.generate([P1], greedy(10))
+    stop = tuple(base.token_ids[3:5])
+    out, = Z.generate([P1], SamplingParams(max_new_tokens=10,
+                                           stop=(stop,)))
+    assert out.finish_reason == "stop"
+    assert out.token_ids == base.token_ids[:3]     # stop tokens truncated
+    assert Z.num_free_blocks == N_BLOCKS
+
+
+def test_eos_ids_kept_in_output():
+    base, = Z.generate([P1], greedy(10))
+    eos = base.token_ids[4]
+    out, = Z.generate([P1], SamplingParams(max_new_tokens=10,
+                                           eos_ids=(eos,)))
+    assert out.finish_reason == "stop"
+    first = base.token_ids.index(eos)              # eos itself kept
+    assert out.token_ids == base.token_ids[:first + 1]
+
+
+def test_eos_on_first_prefill_token():
+    """The token sampled at the end of prefill must be eos/stop-checked
+    before the same step's decode buries it."""
+    base, = Z.generate([P1], greedy(10))
+    first = base.token_ids[0]
+    out, = Z.generate([P1], SamplingParams(max_new_tokens=10,
+                                           eos_ids=(first,)))
+    assert out.finish_reason == "stop" and out.token_ids == [first]
+    out, = Z.generate([P1], SamplingParams(max_new_tokens=10,
+                                           stop=((first,),)))
+    assert out.finish_reason == "stop" and out.token_ids == []
+    assert Z.num_free_blocks == N_BLOCKS
+
+
+def test_generate_max_steps_aborts_orphans():
+    with pytest.raises(RuntimeError, match="aborted unfinished"):
+        Z.generate([P1], greedy(30), max_steps=3)
+    assert not Z.has_unfinished()           # no orphans left running
+    assert Z.num_free_blocks == N_BLOCKS
+
+
+def test_abort_returns_all_blocks_mid_flight():
+    r1 = Z.add_request(P1, greedy(30))
+    r2 = Z.add_request(P2, greedy(30))
+    while not Z.output(r2).token_ids:
+        Z.step()                                    # r2 is mid-flight now
+    aborted = Z.abort(r2)
+    assert aborted.finished and aborted.finish_reason == "abort"
+    while Z.has_unfinished():
+        Z.step()
+    assert Z.output(r1).n_tokens == 30
+    assert Z.output(r1).finish_reason == "length"
+    assert Z.num_free_blocks == N_BLOCKS
+    Z.bm.check_invariants()
+    # aborting an unknown/finished id is a no-op
+    assert Z.abort(r2) is None
+    assert Z.abort(10_000) is None
+
+
+def test_abort_waiting_request():
+    rid = Z.add_request(P1, greedy(5))
+    out = Z.abort(rid)                              # never admitted
+    assert out.finish_reason == "abort" and out.token_ids == []
+    assert not Z.has_unfinished()
+    assert Z.num_free_blocks == N_BLOCKS
+
+
+def test_streaming_chunks_match_batch_generate():
+    batch, = Z.generate([P1], greedy(20))
+    rid = Z.add_request(P1, greedy(20))
+    chunks, finals = [], []
+    while Z.has_unfinished():
+        for out in Z.step():
+            assert out.chunk.index == sum(len(c) for c in chunks)
+            chunks.append(out.chunk.token_ids)
+            if out.finished:
+                finals.append(out)
+    streamed = [t for c in chunks for t in c]
+    assert streamed == batch.token_ids              # ordering + content
+    assert len(finals) == 1 and finals[0].request_id == rid
+    assert finals[0].token_ids == batch.token_ids
+
+
+def test_generate_interleaved_with_streaming_loses_no_chunks():
+    """generate() steps the shared engine; chunks of a concurrently
+    streaming request must be re-queued, not swallowed."""
+    rid = Z.add_request(P1, greedy(20))
+    got, finished_seen = [], False
+
+    def collect(outs):
+        nonlocal finished_seen
+        for o in outs:
+            if o.request_id == rid:
+                got.extend(o.chunk.token_ids)
+                finished_seen |= o.finished
+
+    collect(Z.step())
+    collect(Z.step())
+    batch, = Z.generate([P2], greedy(30))   # rid finishes inside here
+    assert batch.n_tokens == 30
+    while True:
+        outs = Z.step()
+        collect(outs)
+        if not outs and not Z.has_unfinished():
+            break
+    assert finished_seen
+    assert got == Z.output(rid).token_ids
+    assert len(got) == 20
+    assert Z.num_free_blocks == N_BLOCKS
+
+
+def test_logprobs_flag():
+    on, off = Z.generate(
+        [P1, P1], [SamplingParams(max_new_tokens=6, logprobs=True),
+                   SamplingParams(max_new_tokens=6)])
+    assert off.logprobs is None
+    assert len(on.logprobs) == 6
+    assert all(lp <= 0.0 for lp in on.logprobs)
+
+
+def test_compression_metrics_surface():
+    out, = Z.generate([P1], greedy(40))             # long enough to compress
+    m = out.metrics.compression
+    assert m.kv_budget_tokens == 16                 # (n_max-1)*block_size
+    assert m.n_compressions >= 1
+    # without prefix sharing, compression caps growth rather than releasing
+    # already-held blocks, so freed-count is >= 0 but held KV stays bounded
+    assert m.blocks_freed >= 0
+    assert m.kv_tokens_held <= 3 * 8                # n_max blocks
+    assert Z.num_free_blocks == N_BLOCKS
+
+
+def test_config_split_routing():
+    z = Zipage(CFG, PARAMS,
+               cache=CacheConfig(block_size=8, n_total_blocks=32,
+                                 max_model_len=64),
+               scheduler=SchedulerConfig(max_batch=2, m_qslots=2),
+               runner=ModelRunnerConfig(prefill_rows=2, prefill_len=32),
+               n_max=None)                          # override rides on base
+    assert z.engine.opts.n_total_blocks == 32
+    assert z.engine.opts.n_max is None
+    assert z.kv_budget_tokens is None
+    with pytest.raises(TypeError, match="per-request"):
+        make_facade(temperature=0.5)
+    with pytest.raises(TypeError, match="unknown"):
+        make_facade(blocksize=8)
+    from repro.core.compression import CompressOptions
+    with pytest.raises(ValueError, match="window"):
+        make_facade(window=4, compress=CompressOptions(window=2))
+
+
+def test_legacy_submit_shim():
+    eng = Z.engine
+    with warnings.catch_warnings(record=True) as rec:
+        warnings.simplefilter("always")
+        rid_dep = eng.submit(P1, 4, eos_id=-1)      # sentinel -> warning
+        rid_ok = eng.submit(P2, 4)                  # bare call: no warning
+    assert any(issubclass(w.category, DeprecationWarning) for w in rec)
+    assert len(rec) == 1
+    # run() bounds the engine's cumulative lifetime step counter
+    done = eng.run(max_steps=eng.step_count + 200)
+    assert len(done[rid_dep].output) == 4
+    assert len(done[rid_ok].output) == 4
+    assert Z.num_free_blocks == N_BLOCKS
+
+
+def test_sampling_params_validation():
+    with pytest.raises(ValueError):
+        SamplingParams(max_new_tokens=0)
+    with pytest.raises(ValueError):
+        SamplingParams(top_p=0.0)
+    sp = SamplingParams(stop=[[1, 2]], eos_ids=[3])
+    assert sp.stop == ((1, 2),) and sp.eos_ids == (3,)

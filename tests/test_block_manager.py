@@ -1,7 +1,7 @@
 """Block manager + memory planner tests (incl. hypothesis stateful-ish)."""
 import numpy as np
 import pytest
-from hypothesis import given, settings, strategies as st
+from hypothesis_compat import given, settings, st
 
 from repro.configs import get_config
 from repro.core.block_manager import BlockManager, OutOfBlocks
