@@ -1,11 +1,18 @@
 PYTHON ?= python
 export PYTHONPATH := src$(if $(PYTHONPATH),:$(PYTHONPATH))
 
-.PHONY: test test-fast quickstart bench install-dev
+.PHONY: test test-fast lint quickstart bench bench-kernels install-dev
 
-# tier-1 verify (ROADMAP.md)
+# tier-1 verify (ROADMAP.md). Local default is fail-fast; CI overrides
+# PYTEST_ARGS (e.g. --junitxml=...) and drops -x so junit reports are
+# complete.
+PYTEST_ARGS ?= -x
 test:
-	$(PYTHON) -m pytest -x -q
+	$(PYTHON) -m pytest -q $(PYTEST_ARGS)
+
+# correctness lint (ruff config in pyproject.toml; pip install ruff)
+lint:
+	$(PYTHON) -m ruff check src tests benchmarks examples
 
 # quick signal: facade + engine + block manager only
 test-fast:
@@ -16,6 +23,11 @@ quickstart:
 
 bench:
 	$(PYTHON) -m benchmarks.run
+
+# kernel micro-bench JSON — this exact target is what CI's bench-smoke job
+# uploads; run benchmarks.bench_kernels without --smoke for full shapes
+bench-kernels:
+	$(PYTHON) -m benchmarks.bench_kernels --smoke --out bench-kernels-smoke.json
 
 install-dev:
 	pip install -r requirements-dev.txt

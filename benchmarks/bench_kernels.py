@@ -1,6 +1,27 @@
-"""Per-kernel micro-bench: Pallas (interpret=True on CPU — correctness-path
-cost, NOT TPU perf) vs the jnp reference, plus shapes that matter for the
-paper (b=64-style pages scaled down for CPU)."""
+"""Per-kernel micro-bench: Pallas (interpret mode on CPU — correctness-path
+cost, NOT TPU perf) vs the jnp reference, plus an end-to-end
+``Zipage.generate()`` run with ``kernel_backend="pallas-interpret"`` that
+proves the dispatch layer works through the full serving stack.
+
+Usable two ways:
+
+  * ``python -m benchmarks.run bench_kernels`` — legacy CSV rows via
+    ``run()`` (name,us_per_call,derived). Same format; row names moved
+    from ``kernels/*/pallas`` to the canonical ``kernels/*/pallas-interpret``
+    (the measurement is continuous — the old rows already ran interpret
+    mode on CPU);
+  * ``python -m benchmarks.bench_kernels [--smoke] [--out FILE.json]`` —
+    JSON for the per-PR bench trajectory (CI's bench-smoke artifact):
+
+      {"schema": "zipage-bench-kernels/v1", "jax": ..., "platform": ...,
+       "smoke": bool, "results": [{"name", "backend", "us_per_call"}, ...],
+       "e2e": {"backend", "wall_s", "tokens", "tokens_per_s", "parity"}}
+
+``--smoke`` shrinks shapes/iteration counts so the job stays in CI budget.
+"""
+import argparse
+import json
+import sys
 import time
 
 import jax
@@ -10,6 +31,8 @@ import numpy as np
 from repro.kernels import ops
 
 RNG = np.random.default_rng(8)
+
+BACKENDS = ("jnp", "pallas-interpret")
 
 
 def timed(fn, *args, iters=3, **kw):
@@ -21,33 +44,115 @@ def timed(fn, *args, iters=3, **kw):
     return (time.perf_counter() - t0) / iters * 1e6
 
 
-def run():
-    rows = []
-    B, hq, hkv, d, N, b, mb = 4, 8, 2, 32, 32, 8, 8
+def kernel_results(smoke=False):
+    """[(name, backend, us_per_call)] over the five kernels × two backends."""
+    iters = 1 if smoke else 3
+    if smoke:
+        B, hq, hkv, d, N, b, mb = 2, 4, 2, 16, 16, 4, 4
+    else:
+        B, hq, hkv, d, N, b, mb = 4, 8, 2, 32, 32, 8, 8
     q = jnp.asarray(RNG.normal(size=(B, hq, d)), jnp.float32)
     kp = jnp.asarray(RNG.normal(size=(N, b, hkv, d)), jnp.float32)
     vp = jnp.asarray(RNG.normal(size=(N, b, hkv, d)), jnp.float32)
     bt = jnp.asarray(np.stack([RNG.choice(N, mb, replace=False)
                                for _ in range(B)]).astype(np.int32))
     sl = jnp.full((B,), mb * b, jnp.int32)
-    for backend in ("jnp", "pallas"):
-        us = timed(ops.paged_decode_attention, q, kp, vp, bt, sl,
-                   backend=backend)
-        rows.append((f"kernels/paged_attention/{backend}", us, ""))
     qw = jnp.asarray(RNG.normal(size=(B, 4, hq, d)), jnp.float32)
-    for backend in ("jnp", "pallas"):
-        us = timed(ops.score_logits, qw, kp, bt, sl, backend=backend)
-        rows.append((f"kernels/paged_score/{backend}", us, ""))
-    for backend in ("jnp", "pallas"):
-        us = timed(ops.lightning_redundancy, kp, bt, sl, backend=backend)
-        rows.append((f"kernels/lightning_redundancy/{backend}", us, ""))
-    for backend in ("jnp", "pallas"):
-        us = timed(ops.flash_redundancy, kp, bt, sl, backend=backend)
-        rows.append((f"kernels/flash_redundancy/{backend}", us, ""))
     pool = jnp.asarray(RNG.normal(size=(N * b, hkv, d)), jnp.float32)
-    src = jnp.asarray(np.stack([np.sort(RNG.choice(N * b, 48, replace=False))
+    n_keep = 12 if smoke else 48           # 48 matches the historical rows
+    src = jnp.asarray(np.stack([np.sort(RNG.choice(N * b, n_keep,
+                                                   replace=False))
                                 for _ in range(hkv)]).astype(np.int32))
-    for backend in ("jnp", "pallas"):
-        us = timed(ops.compact_gather, pool, src, backend=backend)
-        rows.append((f"kernels/compact_gather/{backend}", us, ""))
-    return rows
+    cases = [
+        ("paged_attention", ops.paged_decode_attention, (q, kp, vp, bt, sl)),
+        ("paged_score", ops.score_logits, (qw, kp, bt, sl)),
+        ("lightning_redundancy", ops.lightning_redundancy, (kp, bt, sl)),
+        ("flash_redundancy", ops.flash_redundancy, (kp, bt, sl)),
+        ("compact_gather", ops.compact_gather, (pool, src)),
+    ]
+    out = []
+    for name, fn, args in cases:
+        for backend in BACKENDS:
+            us = timed(fn, *args, iters=iters, backend=backend)
+            out.append((name, backend, us))
+    return out
+
+
+def e2e_result(smoke=False):
+    """Serve a small batch on tiny-lm through the public facade with
+    ``kernel_backend="pallas-interpret"`` and check parity vs jnp."""
+    from repro.api import SamplingParams, Zipage
+
+    n_req, n_out = (2, 8) if smoke else (4, 24)
+    rng = np.random.default_rng(11)
+    prompts = [rng.integers(1, 64, size=int(rng.integers(4, 10))).tolist()
+               for _ in range(n_req)]
+    params = SamplingParams(max_new_tokens=n_out)
+    outs = {}
+    wall = {}
+    for backend in BACKENDS:
+        z = Zipage.from_config(
+            "tiny-lm", block_size=8, n_total_blocks=64, max_batch=4,
+            m_qslots=4, n_max=3, window=4, max_model_len=128,
+            prefill_rows=2, prefill_len=32, kernel_backend=backend)
+        t0 = time.monotonic()
+        outs[backend] = z.generate(prompts, params)
+        wall[backend] = time.monotonic() - t0
+    parity = all(
+        a.token_ids == b.token_ids
+        for a, b in zip(outs["jnp"], outs["pallas-interpret"]))
+    tokens = sum(o.n_tokens for o in outs["pallas-interpret"])
+    return {
+        "backend": "pallas-interpret",
+        "wall_s": round(wall["pallas-interpret"], 3),
+        "wall_s_jnp": round(wall["jnp"], 3),
+        "tokens": tokens,
+        "tokens_per_s": round(tokens / wall["pallas-interpret"], 2),
+        "parity": parity,
+    }
+
+
+def run():
+    """benchmarks.run entry point — legacy CSV rows."""
+    return [(f"kernels/{name}/{backend}", us, "")
+            for name, backend, us in kernel_results()]
+
+
+def main(argv=None):
+    ap = argparse.ArgumentParser(description=__doc__.splitlines()[0])
+    ap.add_argument("--smoke", action="store_true",
+                    help="tiny shapes / single iteration (CI bench-smoke)")
+    ap.add_argument("--out", default=None, metavar="FILE.json",
+                    help="write the JSON report here (default: stdout)")
+    ap.add_argument("--no-e2e", action="store_true",
+                    help="skip the end-to-end Zipage.generate() run")
+    args = ap.parse_args(argv)
+
+    report = {
+        "schema": "zipage-bench-kernels/v1",
+        "jax": jax.__version__,
+        "platform": jax.default_backend(),
+        "smoke": args.smoke,
+        "results": [
+            {"name": name, "backend": backend,
+             "us_per_call": round(us, 1)}
+            for name, backend, us in kernel_results(smoke=args.smoke)
+        ],
+    }
+    if not args.no_e2e:
+        report["e2e"] = e2e_result(smoke=args.smoke)
+        if not report["e2e"]["parity"]:
+            print("ERROR: jnp vs pallas-interpret end-to-end mismatch",
+                  file=sys.stderr)
+    text = json.dumps(report, indent=2)
+    if args.out:
+        with open(args.out, "w") as f:
+            f.write(text + "\n")
+        print(f"wrote {args.out}", file=sys.stderr)
+    else:
+        print(text)
+    return 0 if args.no_e2e or report["e2e"]["parity"] else 1
+
+
+if __name__ == "__main__":
+    sys.exit(main())

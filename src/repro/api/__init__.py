@@ -9,8 +9,9 @@ Stable surface — examples, benchmarks and launchers import from here only:
 
 See docs/API.md for the full tour (streaming, abort, config split).
 """
-from repro.api.config import (CacheConfig, ModelRunnerConfig,  # noqa: F401
-                              SchedulerConfig, build_engine_options)
+from repro.api.config import (KERNEL_BACKENDS, CacheConfig,  # noqa: F401
+                              ModelRunnerConfig, SchedulerConfig,
+                              build_engine_options)
 from repro.api.outputs import (CompletionChunk, CompressionMetrics,  # noqa: F401
                                FinishReason, RequestMetrics, RequestOutput)
 from repro.api.params import SamplingParams  # noqa: F401
@@ -20,5 +21,5 @@ __all__ = [
     "Zipage", "SamplingParams", "RequestOutput", "CompletionChunk",
     "RequestMetrics", "CompressionMetrics", "FinishReason",
     "CacheConfig", "SchedulerConfig", "ModelRunnerConfig",
-    "build_engine_options",
+    "build_engine_options", "KERNEL_BACKENDS",
 ]

@@ -20,6 +20,7 @@ from typing import Optional, Tuple
 
 from repro.core.compression import CompressOptions
 from repro.core.engine import EngineOptions
+from repro.kernels import ops as _kernel_ops
 
 
 @dataclasses.dataclass(frozen=True)
@@ -43,6 +44,12 @@ class SchedulerConfig:
     async_compression: bool = True
 
 
+#: kernel backends accepted by ``ModelRunnerConfig.kernel_backend``:
+#: everything the kernel dispatch layer resolves, plus "chunked"
+#: (decode attention only)
+KERNEL_BACKENDS = _kernel_ops.BACKENDS + ("chunked",)
+
+
 @dataclasses.dataclass(frozen=True)
 class ModelRunnerConfig:
     """Fixed device-step shapes and numerics."""
@@ -51,6 +58,11 @@ class ModelRunnerConfig:
     dtype: str = "float32"
     layer_stride: int = 0            # 0 => all layers in one compress call
     measure_phases: bool = False     # block per phase for timing benches
+    # kernel dispatch (repro.kernels.ops / docs/KERNELS.md): "auto" resolves
+    # to pallas-tpu on TPU hosts and the jnp reference elsewhere;
+    # "pallas-interpret" forces the Pallas kernels through the interpreter
+    # (CPU correctness path — slow, never auto-selected)
+    kernel_backend: str = "auto"
 
 
 _CONFIG_TYPES = (CacheConfig, SchedulerConfig, ModelRunnerConfig)
@@ -87,6 +99,10 @@ def route_overrides(cache: Optional[CacheConfig] = None,
 
 def build_engine_options(cache: CacheConfig, scheduler: SchedulerConfig,
                          runner: ModelRunnerConfig) -> EngineOptions:
+    if runner.kernel_backend not in KERNEL_BACKENDS:
+        raise ValueError(
+            f"unknown kernel_backend {runner.kernel_backend!r}; expected "
+            f"one of {KERNEL_BACKENDS}")
     compress = cache.compress
     if compress is None:
         compress = CompressOptions(window=cache.window)
@@ -111,4 +127,5 @@ def build_engine_options(cache: CacheConfig, scheduler: SchedulerConfig,
         prefill_len=runner.prefill_len,
         dtype=runner.dtype,
         layer_stride=runner.layer_stride,
-        measure_phases=runner.measure_phases)
+        measure_phases=runner.measure_phases,
+        kernel_backend=runner.kernel_backend)

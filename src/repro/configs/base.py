@@ -9,8 +9,8 @@ config used by CPU smoke tests; the full config is only ever traced abstractly
 from __future__ import annotations
 
 import dataclasses
-from dataclasses import dataclass, field
-from typing import Optional, Tuple
+from dataclasses import dataclass
+from typing import Tuple
 
 # Layer mixer kinds appearing in ``block_pattern``.
 MIX_ATTN = "attn"

@@ -4,7 +4,7 @@ device steps but never runs on device."""
 from __future__ import annotations
 
 from collections import OrderedDict
-from typing import Dict, List, Optional, Sequence, Tuple
+from typing import Dict, List, Sequence, Tuple
 
 
 class OutOfBlocks(Exception):

@@ -29,7 +29,12 @@ class CompressOptions:
     p_thresh: float = 0.8            # similarity zero-out threshold
     pooling: str = "first"           # none | first | always
     pool_kernel: int = 7
-    backend: str = "jnp"             # jnp | pallas (repro.kernels.ops)
+    # kernel backend (repro.kernels.ops.resolve_backend):
+    # auto | jnp | pallas-interpret | pallas-tpu (+ deprecated alias
+    # "pallas"). "auto" picks pallas-tpu on TPU hosts, jnp elsewhere;
+    # the engine substitutes its ModelRunnerConfig.kernel_backend here
+    # unless this field was set explicitly.
+    backend: str = "auto"
 
 
 def _score_one(cfg, opts, q_win, entries, fscore, valid, seq_len, hist_len,
@@ -103,19 +108,21 @@ def build_compress_fn(cfg, *, block_size, max_blocks, budget_blocks,
       seq_lens:  (n,) valid entries (= n_blocks·b, last block full)
       hist_lens: (n,) entries carrying global-score history (0 first time)
     """
+    from repro.kernels import ops as kops
+
     b = block_size
     T = max_blocks * b
     k_keep = budget_blocks * b
     is_mla = cfg.attn_type == "mla"
 
-    use_pallas = opts.backend == "pallas" and not is_mla
+    backend = kops.resolve_backend(opts.backend)
+    use_pallas = backend.startswith("pallas") and not is_mla
 
     def one_layer(pool_slices, qwin_l, req):
         src_bt, dest_bt, qslots, seq_lens, hist_lens = req
 
         pre_s = pre_r = None
         if use_pallas:
-            from repro.kernels import ops as kops
             w = qwin_l.shape[1]
             rings = qwin_l[jnp.maximum(qslots, 0)]        # (n, w, hq, dq)
             order = (seq_lens[:, None] - w + jnp.arange(w)[None]) % w
@@ -123,16 +130,16 @@ def build_compress_fn(cfg, *, block_size, max_blocks, budget_blocks,
                 rings, order[:, :, None, None], 1)
             btc = jnp.maximum(src_bt, 0).astype(jnp.int32)
             logits = kops.score_logits(q_wins, pool_slices["k"], btc,
-                                       seq_lens, backend="pallas")
+                                       seq_lens, backend=backend)
             pre_s = kops.attention_scores_from_logits(logits, seq_lens)
             if opts.redundancy == "lightning":
                 pre_r = kops.lightning_redundancy(
                     pool_slices["k"], btc, seq_lens,
-                    p_thresh=opts.p_thresh, backend="pallas")
+                    p_thresh=opts.p_thresh, backend=backend)
             elif opts.redundancy == "flash":
                 pre_r = kops.flash_redundancy(
                     pool_slices["k"], btc, seq_lens,
-                    p_thresh=opts.p_thresh, backend="pallas")
+                    p_thresh=opts.p_thresh, backend=backend)
             else:
                 pre_r = jnp.zeros_like(pre_s)
 

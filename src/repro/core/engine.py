@@ -63,10 +63,22 @@ class EngineOptions:
     dtype: str = "float32"
     layer_stride: int = 0            # 0 => all layers in one compress call
     measure_phases: bool = False     # block per phase for timing benches
+    # engine-wide kernel backend (repro.kernels.ops): auto | jnp |
+    # pallas-interpret | pallas-tpu, plus "chunked" (decode attention only).
+    # Drives ServeSpec.attn_backend and — when compress.backend is left at
+    # "auto" — the compression kernels too.
+    kernel_backend: str = "auto"
 
 
 class ZipageEngine:
     def __init__(self, cfg: ArchConfig, params, opts: EngineOptions):
+        # compression inherits the engine-wide kernel backend unless its
+        # CompressOptions.backend was configured away from "auto"
+        # ("chunked" is decode-attention-only and does not propagate)
+        if opts.compress.backend == "auto" \
+                and opts.kernel_backend not in ("auto", "chunked"):
+            opts = dataclasses.replace(opts, compress=dataclasses.replace(
+                opts.compress, backend=opts.kernel_backend))
         self.cfg = cfg
         self.opts = opts
         self.params = params
@@ -81,7 +93,8 @@ class ZipageEngine:
             n_slots=opts.max_batch, block_size=b, max_blocks=self.max_blocks,
             n_total_blocks=opts.n_total_blocks, m_qslots=opts.m_qslots,
             window=opts.window, prefill_rows=opts.prefill_rows,
-            prefill_len=opts.prefill_len, dtype=opts.dtype)
+            prefill_len=opts.prefill_len, dtype=opts.dtype,
+            attn_backend=opts.kernel_backend)
         prefix_ok = (opts.prefix_caching and not cfg.attention_free
                      and not cfg.local_window and not cfg.is_enc_dec)
         self.bm = BlockManager(opts.n_total_blocks, b,

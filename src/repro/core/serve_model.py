@@ -19,8 +19,6 @@ State layout (all leading dims static):
 from __future__ import annotations
 
 import dataclasses
-import functools
-from typing import Optional
 
 import jax
 import jax.numpy as jnp
@@ -29,7 +27,7 @@ import numpy as np
 from repro.configs.base import ArchConfig
 from repro.models import layers as ML
 from repro.models import lm
-from repro.models.common import apply_norm, apply_rope, rms_head_norm, \
+from repro.models.common import apply_norm, apply_rope, \
     chunked_causal_attention
 from repro.core import paged
 
@@ -45,7 +43,10 @@ class ServeSpec:
     prefill_rows: int = 4       # prefill bucket rows
     prefill_len: int = 256      # padded prefill length
     dtype: str = "bfloat16"
-    attn_backend: str = "jnp"   # jnp | chunked | pallas (decode attention)
+    # decode-attention backend: "chunked" (jnp chunked reference) or any
+    # repro.kernels.ops backend name — auto | jnp | pallas-interpret |
+    # pallas-tpu (+ deprecated alias "pallas"). Resolved once at trace time.
+    attn_backend: str = "auto"
     # KV-head replication for TP > h_kv (vLLM-style): pools store
     # h_kv * kv_replication head slots laid out repeat-consecutive
     # [kv0, kv0, ..., kv1, kv1, ...] so model-shard s's q-head group maps to
@@ -186,15 +187,17 @@ def _decode_attn(cfg, spec, p, x, carry, a_idx, write_pos, attend_len,
         pools = dict(pools,
                      k=_dyn_set(pools["k"], k_l, a_idx),
                      v=_dyn_set(pools["v"], v_l, a_idx))
-        if spec.attn_backend == "pallas":
-            from repro.kernels import ops as kops
-            o = kops.paged_decode_attention(q, k_l, v_l, bt, attend_len,
-                                            backend="pallas")
-        elif spec.attn_backend == "chunked":
+        if spec.attn_backend == "chunked":
             o = paged.paged_decode_attention_chunked(q, k_l, v_l, bt,
                                                      attend_len)
         else:
-            o = paged.paged_decode_attention(q, k_l, v_l, bt, attend_len)
+            from repro.kernels import ops as kops
+            backend = kops.resolve_backend(spec.attn_backend)
+            if backend.startswith("pallas"):
+                o = kops.paged_decode_attention(q, k_l, v_l, bt, attend_len,
+                                                backend=backend)
+            else:
+                o = paged.paged_decode_attention(q, k_l, v_l, bt, attend_len)
         o = o.reshape(B, cfg.num_heads * cfg.head_dim)
         q_entry = q
     # observation-window query write (ring at qring_pos) for slots w/ qslot

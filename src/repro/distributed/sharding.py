@@ -13,12 +13,9 @@ divisible dim sharded over the data axes.
 """
 from __future__ import annotations
 
-import re
-from typing import Optional
-
 import jax
 import numpy as np
-from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
+from jax.sharding import NamedSharding, PartitionSpec as P
 
 
 def _axis_size(mesh, name):

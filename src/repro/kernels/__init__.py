@@ -3,6 +3,9 @@
 lightning + flash redundancy (C.7 / Alg. 3), KV compaction (Alg. 4).
 
 Each kernel: <name>.py (pl.pallas_call + explicit BlockSpec VMEM tiling),
-ops.py (jit'd wrappers + backend dispatch), ref.py (pure-jnp oracles).
-Validated with interpret=True on CPU; TPU is the target.
+ops.py (jit'd wrappers + the versioned backend dispatch:
+auto | jnp | pallas-interpret | pallas-tpu), ref.py (pure-jnp oracles),
+pallas_compat.py (JAX/Pallas API-drift shim — kernels never touch pltpu
+attributes directly). Validated with pallas-interpret on CPU; TPU is the
+target. See docs/KERNELS.md.
 """

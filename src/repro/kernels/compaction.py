@@ -15,7 +15,8 @@ from __future__ import annotations
 import jax
 import jax.numpy as jnp
 from jax.experimental import pallas as pl
-from jax.experimental.pallas import tpu as pltpu
+
+from repro.kernels import pallas_compat
 
 
 def _kernel(src_slots, src_ref, o_ref):
@@ -32,18 +33,17 @@ def compact_gather(pool_flat, src_slots, *, interpret=True):
     k = src_slots.shape[1]
     src = jnp.asarray(src_slots, jnp.int32)
 
-    grid_spec = pltpu.PrefetchScalarGridSpec(
+    grid_spec = pallas_compat.prefetch_grid_spec(
         num_scalar_prefetch=1,
         grid=(h, k),
         in_specs=[pl.BlockSpec((1, 1, d),
                                lambda ih, j, src: (src[ih, j], ih, 0))],
         out_specs=pl.BlockSpec((1, 1, d), lambda ih, j, src: (j, ih, 0)),
     )
-    return pl.pallas_call(
+    return pallas_compat.pallas_call(
         _kernel,
         grid_spec=grid_spec,
         out_shape=jax.ShapeDtypeStruct((k, h, d), pool_flat.dtype),
-        compiler_params=pltpu.CompilerParams(
-            dimension_semantics=("parallel", "arbitrary")),
+        dimension_semantics=("parallel", "arbitrary"),
         interpret=interpret,
     )(src, pool_flat)

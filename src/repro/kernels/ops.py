@@ -1,8 +1,18 @@
-"""Jit'd wrappers + backend dispatch for the Pallas kernels.
+"""Jit'd wrappers + versioned backend dispatch for the Pallas kernels.
 
-``backend="pallas"`` routes through the TPU kernels (interpret=True on CPU);
-``backend="jnp"`` uses the pure-jnp references. The engine/compression layers
-call through these so the backend is one switch.
+Every op takes ``backend`` in {"auto", "jnp", "pallas-interpret",
+"pallas-tpu"} (plus the deprecated alias "pallas"). ``resolve_backend``
+canonicalises once per process:
+
+  * ``auto``             -> ``pallas-tpu`` on TPU hosts, ``jnp`` elsewhere
+                            (interpret mode is a correctness path, not a
+                            fast path — never auto-selected),
+  * ``pallas``           -> ``pallas-tpu`` on TPU, ``pallas-interpret`` on
+                            CPU (the historical ``set_interpret`` behavior),
+  * canonical names pass through unchanged.
+
+The engine/compression layers call through these so the backend is one
+switch (``ModelRunnerConfig.kernel_backend`` on the ``repro.api`` facade).
 """
 from __future__ import annotations
 
@@ -13,32 +23,66 @@ import jax.numpy as jnp
 
 from repro.kernels import compaction, paged_attention as pa, paged_score, \
     redundancy
-from repro.kernels import ref
+from repro.kernels import pallas_compat, ref
 from repro.core import paged as paged_ref
 
-_INTERPRET = True  # CPU container; real TPU would set False
+BACKENDS = ("auto", "jnp", "pallas-interpret", "pallas-tpu", "pallas")
+_CANONICAL = ("jnp", "pallas-interpret", "pallas-tpu")
 
 
-def set_interpret(flag: bool):
-    global _INTERPRET
-    _INTERPRET = flag
+@functools.lru_cache(maxsize=None)
+def resolve_backend(backend: str = "auto") -> str:
+    """Canonicalise a backend name for the current platform (cached: the
+    platform does not change within a process)."""
+    if backend is None or backend == "auto":
+        return "pallas-tpu" if pallas_compat.has_tpu() else "jnp"
+    if backend == "pallas":                    # deprecated alias
+        return "pallas-tpu" if pallas_compat.has_tpu() else "pallas-interpret"
+    if backend not in _CANONICAL:
+        raise ValueError(
+            f"unknown kernel backend {backend!r}; expected one of {BACKENDS}")
+    return backend
+
+
+def _is_pallas(backend: str) -> bool:
+    return backend.startswith("pallas")
+
+
+def _interpret(backend: str) -> bool:
+    return backend == "pallas-interpret"
+
+
+# ----------------------------------------------------------------------
+# dispatch wrappers: resolve once, then jit with the canonical name static
+
+
+def paged_decode_attention(q, k_pages, v_pages, block_tables, seq_lens,
+                           backend="auto"):
+    return _paged_decode_attention(q, k_pages, v_pages, block_tables,
+                                   seq_lens, backend=resolve_backend(backend))
 
 
 @functools.partial(jax.jit, static_argnames=("backend",))
-def paged_decode_attention(q, k_pages, v_pages, block_tables, seq_lens,
-                           backend="pallas"):
-    if backend == "pallas":
+def _paged_decode_attention(q, k_pages, v_pages, block_tables, seq_lens, *,
+                            backend):
+    if _is_pallas(backend):
         return pa.paged_attention(q, k_pages, v_pages, block_tables,
-                                  seq_lens, interpret=_INTERPRET)
+                                  seq_lens, interpret=_interpret(backend))
     return paged_ref.paged_decode_attention(q, k_pages, v_pages,
                                             block_tables, seq_lens)
 
 
+def score_logits(q_win, k_pages, block_tables, seq_lens, backend="auto"):
+    return _score_logits(q_win, k_pages, block_tables, seq_lens,
+                         backend=resolve_backend(backend))
+
+
 @functools.partial(jax.jit, static_argnames=("backend",))
-def score_logits(q_win, k_pages, block_tables, seq_lens, backend="pallas"):
-    if backend == "pallas":
-        return paged_score.paged_score_logits(q_win, k_pages, block_tables,
-                                              seq_lens, interpret=_INTERPRET)
+def _score_logits(q_win, k_pages, block_tables, seq_lens, *, backend):
+    if _is_pallas(backend):
+        return paged_score.paged_score_logits(
+            q_win, k_pages, block_tables, seq_lens,
+            interpret=_interpret(backend))
     return ref.paged_score_logits_ref(q_win, k_pages, block_tables, seq_lens)
 
 
@@ -52,31 +96,49 @@ def attention_scores_from_logits(logits, seq_lens):
     return p.max(axis=2).mean(axis=2).transpose(0, 2, 1)
 
 
-@functools.partial(jax.jit, static_argnames=("backend", "p_thresh"))
 def lightning_redundancy(k_pages, block_tables, seq_lens, p_thresh=0.8,
-                         backend="pallas"):
-    if backend == "pallas":
+                         backend="auto"):
+    return _lightning_redundancy(k_pages, block_tables, seq_lens,
+                                 p_thresh=p_thresh,
+                                 backend=resolve_backend(backend))
+
+
+@functools.partial(jax.jit, static_argnames=("backend", "p_thresh"))
+def _lightning_redundancy(k_pages, block_tables, seq_lens, *, p_thresh,
+                          backend):
+    if _is_pallas(backend):
         return redundancy.lightning_redundancy(
             k_pages, block_tables, seq_lens, p_thresh=p_thresh,
-            interpret=_INTERPRET)
+            interpret=_interpret(backend))
     return ref.lightning_redundancy_ref(k_pages, block_tables, seq_lens,
                                         p_thresh=p_thresh)
 
 
-@functools.partial(jax.jit, static_argnames=("backend", "p_thresh"))
 def flash_redundancy(k_pages, block_tables, seq_lens, p_thresh=0.8,
-                     backend="pallas"):
-    if backend == "pallas":
+                     backend="auto"):
+    return _flash_redundancy(k_pages, block_tables, seq_lens,
+                             p_thresh=p_thresh,
+                             backend=resolve_backend(backend))
+
+
+@functools.partial(jax.jit, static_argnames=("backend", "p_thresh"))
+def _flash_redundancy(k_pages, block_tables, seq_lens, *, p_thresh, backend):
+    if _is_pallas(backend):
         return redundancy.flash_redundancy(
             k_pages, block_tables, seq_lens, p_thresh=p_thresh,
-            interpret=_INTERPRET)
+            interpret=_interpret(backend))
     return ref.flash_redundancy_ref(k_pages, block_tables, seq_lens,
                                     p_thresh=p_thresh)
 
 
+def compact_gather(pool_flat, src_slots, backend="auto"):
+    return _compact_gather(pool_flat, src_slots,
+                           backend=resolve_backend(backend))
+
+
 @functools.partial(jax.jit, static_argnames=("backend",))
-def compact_gather(pool_flat, src_slots, backend="pallas"):
-    if backend == "pallas":
+def _compact_gather(pool_flat, src_slots, *, backend):
+    if _is_pallas(backend):
         return compaction.compact_gather(pool_flat, src_slots,
-                                         interpret=_INTERPRET)
+                                         interpret=_interpret(backend))
     return ref.compact_gather_ref(pool_flat, src_slots)

@@ -17,7 +17,8 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 from jax.experimental import pallas as pl
-from jax.experimental.pallas import tpu as pltpu
+
+from repro.kernels import pallas_compat
 
 NEG_INF = -1e30
 
@@ -75,7 +76,7 @@ def paged_attention(q, k_pages, v_pages, block_tables, seq_lens, *,
     qr = q.reshape(B, hkv, g, d)
     bt = jnp.maximum(block_tables, 0).astype(jnp.int32)
 
-    grid_spec = pltpu.PrefetchScalarGridSpec(
+    grid_spec = pallas_compat.prefetch_grid_spec(
         num_scalar_prefetch=2,
         grid=(B, hkv, mb),
         in_specs=[
@@ -88,17 +89,16 @@ def paged_attention(q, k_pages, v_pages, block_tables, seq_lens, *,
         out_specs=pl.BlockSpec((1, 1, g, d),
                                lambda ib, ih, i, bt, sl: (ib, ih, 0, 0)),
         scratch_shapes=[
-            pltpu.VMEM((g, 1), jnp.float32),
-            pltpu.VMEM((g, 1), jnp.float32),
-            pltpu.VMEM((g, d), jnp.float32),
+            pallas_compat.vmem_scratch((g, 1), jnp.float32),
+            pallas_compat.vmem_scratch((g, 1), jnp.float32),
+            pallas_compat.vmem_scratch((g, d), jnp.float32),
         ],
     )
-    out = pl.pallas_call(
+    out = pallas_compat.pallas_call(
         functools.partial(_kernel, block_size=b, max_blocks=mb, scale=scale),
         grid_spec=grid_spec,
         out_shape=jax.ShapeDtypeStruct((B, hkv, g, d), q.dtype),
-        compiler_params=pltpu.CompilerParams(
-            dimension_semantics=("parallel", "parallel", "arbitrary")),
+        dimension_semantics=("parallel", "parallel", "arbitrary"),
         interpret=interpret,
     )(bt, seq_lens, qr, k_pages, v_pages)
     return out.reshape(B, hq, d)

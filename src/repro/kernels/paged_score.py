@@ -16,7 +16,8 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 from jax.experimental import pallas as pl
-from jax.experimental.pallas import tpu as pltpu
+
+from repro.kernels import pallas_compat
 
 NEG_INF = -1e30
 
@@ -55,7 +56,7 @@ def paged_score_logits(q_win, k_pages, block_tables, seq_lens, *,
         .reshape(n, hkv, g * w, d)
     bt = jnp.maximum(block_tables, 0).astype(jnp.int32)
 
-    grid_spec = pltpu.PrefetchScalarGridSpec(
+    grid_spec = pallas_compat.prefetch_grid_spec(
         num_scalar_prefetch=2,
         grid=(n, hkv, mb),
         in_specs=[
@@ -67,12 +68,11 @@ def paged_score_logits(q_win, k_pages, block_tables, seq_lens, *,
         out_specs=pl.BlockSpec((1, 1, g * w, b),
                                lambda ib, ih, i, bt, sl: (ib, ih, 0, i)),
     )
-    out = pl.pallas_call(
+    out = pallas_compat.pallas_call(
         functools.partial(_kernel, block_size=b, scale=scale, window=w),
         grid_spec=grid_spec,
         out_shape=jax.ShapeDtypeStruct((n, hkv, g * w, mb * b), jnp.float32),
-        compiler_params=pltpu.CompilerParams(
-            dimension_semantics=("parallel", "parallel", "arbitrary")),
+        dimension_semantics=("parallel", "parallel", "arbitrary"),
         interpret=interpret,
     )(bt, seq_lens, qr, k_pages)
     return out.reshape(n, hkv, g, w, mb * b)

@@ -1,0 +1,132 @@
+"""Feature-detection shim over JAX/Pallas API drift.
+
+The Pallas TPU surface has been renamed across JAX releases:
+
+  * ``pltpu.TPUCompilerParams`` (<= 0.4.x) became ``pltpu.CompilerParams``
+    (newer releases keep one, the other, or both with a deprecation),
+  * ``pltpu.PrefetchScalarGridSpec`` has moved module homes,
+  * VMEM scratch specs are ``pltpu.VMEM`` or ``pltpu.MemorySpace.VMEM``.
+
+Every kernel in this package goes through these helpers instead of touching
+``pltpu`` attributes directly, so the same source imports and runs on both
+the pinned-minimum and the latest JAX. Resolution happens at call time
+against the module object passed in (defaulting to the real ``pltpu``), so
+tests can exercise both layouts by passing a fake module.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+
+def compiler_params(dimension_semantics, *, mod=None):
+    """Build the TPU compiler-params object under whichever name this JAX
+    exposes; returns None (caller omits the argument) if neither exists."""
+    m = mod if mod is not None else pltpu
+    cls = getattr(m, "CompilerParams", None) \
+        or getattr(m, "TPUCompilerParams", None)
+    if cls is None:
+        return None
+    return cls(dimension_semantics=tuple(dimension_semantics))
+
+
+def prefetch_grid_spec(*, num_scalar_prefetch, grid, in_specs, out_specs,
+                       scratch_shapes=(), mod=None):
+    """``PrefetchScalarGridSpec`` under whichever home it lives in."""
+    m = mod if mod is not None else pltpu
+    cls = getattr(m, "PrefetchScalarGridSpec", None)
+    if cls is None:
+        raise NotImplementedError(
+            "this JAX exposes no PrefetchScalarGridSpec; the paged kernels "
+            "need scalar-prefetch BlockSpec index_maps — fall back to "
+            "backend='jnp' (repro.kernels.ops.resolve_backend)")
+    kwargs = {}
+    if scratch_shapes:
+        kwargs["scratch_shapes"] = list(scratch_shapes)
+    return cls(num_scalar_prefetch=num_scalar_prefetch, grid=grid,
+               in_specs=in_specs, out_specs=out_specs, **kwargs)
+
+
+def vmem_scratch(shape, dtype, *, mod=None):
+    """VMEM scratch-shape spec (``pltpu.VMEM`` or ``MemorySpace.VMEM``)."""
+    m = mod if mod is not None else pltpu
+    fn = getattr(m, "VMEM", None)
+    if fn is None:
+        space = getattr(m, "MemorySpace", None)
+        fn = getattr(space, "VMEM", None) if space is not None else None
+    if fn is None:
+        raise NotImplementedError(
+            "this JAX exposes no VMEM scratch spec under "
+            f"{getattr(m, '__name__', m)!r}")
+    return fn(shape, dtype)
+
+
+def pallas_call(kernel, *, grid_spec, out_shape, dimension_semantics=None,
+                interpret=True):
+    """``pl.pallas_call`` with compiler params attached when available.
+
+    In interpret mode ``dimension_semantics`` only documents intent; on a
+    real TPU it drives the Mosaic parallelisation, so we always forward it
+    when this JAX has a params class to carry it.
+    """
+    kwargs = {}
+    if dimension_semantics is not None:
+        cp = compiler_params(dimension_semantics)
+        if cp is not None:
+            kwargs["compiler_params"] = cp
+    return pl.pallas_call(kernel, grid_spec=grid_spec, out_shape=out_shape,
+                          interpret=interpret, **kwargs)
+
+
+@functools.lru_cache(maxsize=None)
+def has_tpu() -> bool:
+    return jax.default_backend() == "tpu"
+
+
+def shard_map(f, *, mesh, in_specs, out_specs, axis_names=None, check=True,
+              mod=None):
+    """``shard_map`` under whichever home and spelling this JAX gives it.
+
+    New JAX exposes top-level ``jax.shard_map(..., axis_names=...,
+    check_vma=...)``; <= 0.4.x has ``jax.experimental.shard_map.shard_map``
+    where the manual-axes set is expressed as its complement (``auto``) and
+    the replication check is spelled ``check_rep``. Mid-range releases mix
+    the two (top-level home, old spellings), so each kwarg is keyed on the
+    resolved function's *signature*, not its home. ``axis_names=None``
+    means every mesh axis is manual and ``check=True`` keeps the
+    replication/VMA check on (both match upstream defaults)."""
+    import inspect
+
+    m = mod if mod is not None else jax
+    fn = getattr(m, "shard_map", None)
+    if fn is None:
+        from jax.experimental.shard_map import shard_map as fn
+    params = inspect.signature(fn).parameters
+    has_varkw = any(p.kind is inspect.Parameter.VAR_KEYWORD
+                    for p in params.values())
+    kwargs = {}
+    if "check_vma" in params or has_varkw:
+        kwargs["check_vma"] = check
+    elif "check_rep" in params:
+        kwargs["check_rep"] = check
+    if axis_names is not None:
+        if "axis_names" in params or has_varkw:
+            kwargs["axis_names"] = frozenset(axis_names)
+        elif "auto" in params:
+            kwargs["auto"] = \
+                frozenset(mesh.axis_names) - frozenset(axis_names)
+    return fn(f, mesh=mesh, in_specs=in_specs, out_specs=out_specs,
+              **kwargs)
+
+
+def mesh_context(mesh, *, mod=None):
+    """Context manager making ``mesh`` ambient: ``jax.set_mesh`` (new) or
+    the ``Mesh`` object itself, which is a context manager in old JAX."""
+    m = mod if mod is not None else jax
+    set_mesh = getattr(m, "set_mesh", None)
+    if set_mesh is not None:
+        return set_mesh(mesh)
+    return mesh

@@ -16,9 +16,9 @@ import functools
 
 import jax
 import jax.numpy as jnp
-import numpy as np
 from jax.experimental import pallas as pl
-from jax.experimental.pallas import tpu as pltpu
+
+from repro.kernels import pallas_compat
 
 
 def _zero_last_above(c, p_thresh, already=None):
@@ -66,7 +66,7 @@ def lightning_redundancy(k_pages, block_tables, seq_lens, *, p_thresh=0.8,
     N, b, h, d = k_pages.shape
     n, mb = block_tables.shape
     bt = jnp.maximum(block_tables, 0).astype(jnp.int32)
-    grid_spec = pltpu.PrefetchScalarGridSpec(
+    grid_spec = pallas_compat.prefetch_grid_spec(
         num_scalar_prefetch=2,
         grid=(n, h, mb),
         in_specs=[pl.BlockSpec((1, b, 1, d),
@@ -74,12 +74,11 @@ def lightning_redundancy(k_pages, block_tables, seq_lens, *, p_thresh=0.8,
         out_specs=pl.BlockSpec((1, 1, b),
                                lambda ib, ih, i, bt, sl: (ib, ih, i)),
     )
-    out = pl.pallas_call(
+    out = pallas_compat.pallas_call(
         functools.partial(_lightning_kernel, block_size=b, p_thresh=p_thresh),
         grid_spec=grid_spec,
         out_shape=jax.ShapeDtypeStruct((n, h, mb * b), jnp.float32),
-        compiler_params=pltpu.CompilerParams(
-            dimension_semantics=("parallel", "parallel", "arbitrary")),
+        dimension_semantics=("parallel", "parallel", "arbitrary"),
         interpret=interpret,
     )(bt, seq_lens, k_pages)
     return out.transpose(0, 2, 1)                                # (n, T, h)
@@ -137,7 +136,7 @@ def flash_redundancy(k_pages, block_tables, seq_lens, *, p_thresh=0.8,
     bt = jnp.maximum(block_tables, 0).astype(jnp.int32)
     gathered = k_pages[bt]                                       # (n, mb, b, h, d)
 
-    grid_spec = pltpu.PrefetchScalarGridSpec(
+    grid_spec = pallas_compat.prefetch_grid_spec(
         num_scalar_prefetch=2,
         grid=(n, h, mb),
         in_specs=[
@@ -154,12 +153,11 @@ def flash_redundancy(k_pages, block_tables, seq_lens, *, p_thresh=0.8,
         _flash_kernel(bt_ref, sl_ref, km_ref, kall_ref, o_ref,
                       block_size=b, max_blocks=mb, p_thresh=p_thresh)
 
-    outs = pl.pallas_call(
+    outs = pallas_compat.pallas_call(
         kernel,
         grid_spec=grid_spec,
         out_shape=jax.ShapeDtypeStruct((n, h, mb, b), jnp.float32),
-        compiler_params=pltpu.CompilerParams(
-            dimension_semantics=("parallel", "parallel", "arbitrary")),
+        dimension_semantics=("parallel", "parallel", "arbitrary"),
         interpret=interpret,
     )(bt, seq_lens, k_pages, gathered)
     r = outs.reshape(n, h, mb * b)

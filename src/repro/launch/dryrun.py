@@ -18,7 +18,6 @@ Variants:
 """
 
 import argparse
-import dataclasses
 import json
 import subprocess
 import sys
@@ -30,12 +29,13 @@ import jax.numpy as jnp
 import numpy as np
 from jax.sharding import NamedSharding, PartitionSpec as P
 
-from repro.configs import SHAPES, all_arch_names, cell_applicable, get_config
+from repro.configs import SHAPES, cell_applicable, get_config
 from repro.configs.base import ShapeCell
 from repro.core import serve_model
 from repro.core.compression import CompressOptions, build_compress_fn
 from repro.distributed import roofline as rl
 from repro.distributed import sharding as shd
+from repro.kernels import pallas_compat
 from repro.launch.mesh import make_production_mesh
 from repro.models import lm
 from repro.training import optimizer as opt
@@ -199,7 +199,7 @@ def lower_train(cfg, cell, mesh):
     from repro.models.moe_ctx import moe_partitioning
     daxes = data_axes(mesh)
     dspec = daxes if len(daxes) > 1 else daxes[0]
-    with jax.set_mesh(mesh), \
+    with pallas_compat.mesh_context(mesh), \
             moe_partitioning(n_replicas(mesh),
                              P(dspec, "model", None, None)):
         lowered = jitted.lower(params_s, opt_s, batch_s)
@@ -244,9 +244,9 @@ def lower_serve(cfg, cell, mesh, variant):
                 ins["lengths"], ins["start_pos"]) + \
             tuple(ins[k] for k in extra)
 
-    smap = jax.shard_map(step, mesh=mesh, in_specs=in_specs,
-                         out_specs=out_specs,
-                         axis_names=frozenset(daxes), check_vma=False)
+    smap = pallas_compat.shard_map(step, mesh=mesh, in_specs=in_specs,
+                                   out_specs=out_specs,
+                                   axis_names=frozenset(daxes), check=False)
     st_sh = jax.tree.map(lambda s: NamedSharding(mesh, s), st_jit)
     arg_sh = [p_sh, st_sh] + [NamedSharding(mesh, s) for s in in_specs[2:]]
     jitted = jax.jit(smap, in_shardings=tuple(arg_sh), donate_argnums=(1,))
@@ -256,7 +256,7 @@ def lower_serve(cfg, cell, mesh, variant):
         nd = 3 if cell.kind == "decode" else 4     # (B,[S],hq,e)
         tok = moe_ctx.mla_q_spec.set(P(*([None] * (nd - 1) + ["model"])))
     try:
-        with jax.set_mesh(mesh):
+        with pallas_compat.mesh_context(mesh):
             lowered = jitted.lower(*args)
             compiled = lowered.compile()
     finally:
@@ -290,12 +290,12 @@ def lower_compress(cfg, cell, mesh):
     pool_p = jax.tree.map(lambda s: P(None, dspec), pools_s)
     qwin_p = P(None, dspec)
     req_p = (P(dspec), P(dspec), P(dspec), P(dspec), P(dspec))
-    smap = jax.shard_map(fn, mesh=mesh,
-                         in_specs=(pool_p, qwin_p, req_p),
-                         out_specs=(pool_p, P(dspec)),
-                         axis_names=frozenset(daxes), check_vma=False)
+    smap = pallas_compat.shard_map(fn, mesh=mesh,
+                                   in_specs=(pool_p, qwin_p, req_p),
+                                   out_specs=(pool_p, P(dspec)),
+                                   axis_names=frozenset(daxes), check=False)
     jitted = jax.jit(smap, donate_argnums=(0,))
-    with jax.set_mesh(mesh):
+    with pallas_compat.mesh_context(mesh):
         lowered = jitted.lower(pools_s, qwin_s, req_s)
         compiled = lowered.compile()
     return lowered, compiled

@@ -12,7 +12,7 @@ import jax.numpy as jnp
 import numpy as np
 
 from repro.models.common import (
-    apply_norm, apply_rope, chunked_causal_attention, dense_init, ffn_act_fn,
+    apply_rope, chunked_causal_attention, dense_init, ffn_act_fn,
     init_norm, is_gated, rms_head_norm, split_keys,
 )
 

@@ -11,13 +11,11 @@ The training/prefill forward lives here; paged decode lives in repro.core.
 from __future__ import annotations
 
 import functools
-from typing import Optional
 
 import jax
 import jax.numpy as jnp
-import numpy as np
 
-from repro.configs.base import ArchConfig, MIX_ATTN
+from repro.configs.base import ArchConfig
 from repro.models import layers as L
 from repro.models.common import apply_norm, dense_init, init_norm, split_keys
 

@@ -10,7 +10,6 @@ step, preserving convergence — 1-bit-Adam/EF-SGD lineage).
 """
 from __future__ import annotations
 
-import functools
 
 import jax
 import jax.numpy as jnp

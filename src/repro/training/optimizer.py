@@ -7,7 +7,6 @@ axes). Update math runs in fp32 regardless of param dtype.
 from __future__ import annotations
 
 import dataclasses
-from typing import NamedTuple
 
 import jax
 import jax.numpy as jnp

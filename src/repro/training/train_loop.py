@@ -4,7 +4,6 @@ jits this with in/out shardings from repro.distributed.sharding.
 """
 from __future__ import annotations
 
-import functools
 
 import jax
 import jax.numpy as jnp

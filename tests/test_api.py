@@ -234,6 +234,20 @@ def test_legacy_submit_shim():
     assert Z.num_free_blocks == N_BLOCKS
 
 
+def test_submit_shim_matches_generate():
+    """The deprecated ``submit()`` path warns exactly once and produces the
+    same tokens as the supported ``generate()`` path (both greedy)."""
+    ref, = Z.generate([P1], greedy(6))
+    with warnings.catch_warnings(record=True) as rec:
+        warnings.simplefilter("always")
+        rid = Z.engine.submit(P1, 6, eos_id=-1)
+    assert sum(issubclass(w.category, DeprecationWarning)
+               for w in rec) == 1
+    done = Z.engine.run(max_steps=Z.engine.step_count + 200)
+    assert done[rid].output == ref.token_ids
+    assert Z.num_free_blocks == N_BLOCKS
+
+
 def test_sampling_params_validation():
     with pytest.raises(ValueError):
         SamplingParams(max_new_tokens=0)

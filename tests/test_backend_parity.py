@@ -30,7 +30,7 @@ def test_compress_fn_backend_parity():
            jnp.asarray([0, 1], np.int32), jnp.asarray([20, 16], np.int32),
            jnp.asarray([bb * b, 0], np.int32))
     outs = {}
-    for backend in ("jnp", "pallas"):
+    for backend in ("jnp", "pallas-interpret"):
         opts = CompressOptions(window=w, redundancy="lightning",
                                pooling="first", backend=backend)
         fn = jax.jit(build_compress_fn(cfg, block_size=b, max_blocks=mb,
@@ -40,9 +40,9 @@ def test_compress_fn_backend_parity():
                          np.asarray(new_seq))
     for key in ("k", "v", "f"):
         np.testing.assert_allclose(outs["jnp"][0][key],
-                                   outs["pallas"][0][key],
+                                   outs["pallas-interpret"][0][key],
                                    rtol=1e-5, atol=1e-6)
-    np.testing.assert_array_equal(outs["jnp"][1], outs["pallas"][1])
+    np.testing.assert_array_equal(outs["jnp"][1], outs["pallas-interpret"][1])
 
 
 def test_compress_fn_backend_parity_flash():
@@ -61,7 +61,7 @@ def test_compress_fn_backend_parity_flash():
            jnp.asarray([0], np.int32), jnp.asarray([16], np.int32),
            jnp.asarray([0], np.int32))
     outs = {}
-    for backend in ("jnp", "pallas"):
+    for backend in ("jnp", "pallas-interpret"):
         opts = CompressOptions(window=w, redundancy="flash",
                                pooling="none", backend=backend)
         fn = jax.jit(build_compress_fn(cfg, block_size=b, max_blocks=mb,
@@ -69,5 +69,5 @@ def test_compress_fn_backend_parity_flash():
         new_pools, _ = fn(pools, qwin, req)
         outs[backend] = jax.tree.map(np.asarray, new_pools)
     for key in ("k", "v"):
-        np.testing.assert_allclose(outs["jnp"][key], outs["pallas"][key],
+        np.testing.assert_allclose(outs["jnp"][key], outs["pallas-interpret"][key],
                                    rtol=1e-5, atol=1e-6)

@@ -1,5 +1,4 @@
 """Block manager + memory planner tests (incl. hypothesis stateful-ish)."""
-import numpy as np
 import pytest
 from hypothesis_compat import given, settings, st
 

@@ -88,7 +88,8 @@ mesh222 = jax.make_mesh((2, 2, 2), ("pod", "data", "model"))
 stepc = build_train_step(CFG, adamw, vocab_chunk=16, pod_axis="pod")
 err0 = init_error_state(params)
 
-smap = jax.shard_map(
+from repro.kernels.pallas_compat import shard_map
+smap = shard_map(
     stepc, mesh=mesh222,
     in_specs=(jax.tree.map(lambda _: P(), params),
               jax.tree.map(lambda _: P(), opt_state),
@@ -98,7 +99,7 @@ smap = jax.shard_map(
                jax.tree.map(lambda _: P(), opt_state),
                jax.tree.map(lambda _: P(), err0),
                {"loss": P(), "grad_norm": P(), "lr": P()}),
-    axis_names=frozenset({"pod"}), check_vma=False)
+    check=False)   # full-manual: the data/model axes are unused inside
 jc = jax.jit(smap)
 pc, oc, ec, mc = jc(params, opt_state, err0, batch)
 # uncompressed reference on same batch
@@ -137,9 +138,9 @@ from repro.launch.dryrun import serve_pspecs  # reuse the spec builder
 st_p = serve_pspecs(CFG, state, ("data",), False)
 pspecs = (jax.tree.map(lambda _: P(), lm.param_specs(CFG)), st_p,
           P("data"), P("data"))
-smap_d = jax.shard_map(step_d, mesh=mesh2, in_specs=pspecs,
-                       out_specs=(P("data"), st_p),
-                       axis_names=frozenset({"data"}), check_vma=False)
+smap_d = shard_map(step_d, mesh=mesh2, in_specs=pspecs,
+                   out_specs=(P("data"), st_p),
+                   check=False)   # full-manual: "model" is unused inside
 logits_mesh, state_mesh = jax.jit(smap_d)(params, state, tokens, active)
 # reference: run each replica separately on half the state
 def half(tree, lo, hi, table):

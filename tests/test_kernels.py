@@ -1,11 +1,10 @@
 """Per-kernel allclose sweeps: Pallas (interpret=True) vs pure-jnp oracles,
 over shapes and dtypes."""
-import jax
 import jax.numpy as jnp
 import numpy as np
 import pytest
 
-from repro.kernels import ops, ref
+from repro.kernels import ops
 
 RNG = np.random.default_rng(7)
 
@@ -31,7 +30,7 @@ def test_paged_attention_kernel(B, hq, hkv, d, b, mb, dtype):
     kp, vp = make_pool(N, b, hkv, d, dtype), make_pool(N, b, hkv, d, dtype)
     bt = make_tables(B, mb, N)
     sl = RNG.integers(1, mb * b + 1, size=(B,)).astype(np.int32)
-    got = ops.paged_decode_attention(q, kp, vp, bt, sl, backend="pallas")
+    got = ops.paged_decode_attention(q, kp, vp, bt, sl, backend="pallas-interpret")
     want = ops.paged_decode_attention(q, kp, vp, bt, sl, backend="jnp")
     tol = 2e-2 if dtype == jnp.bfloat16 else 2e-5
     np.testing.assert_allclose(np.asarray(got, np.float32),
@@ -50,7 +49,7 @@ def test_paged_score_kernel(n, w, hq, hkv, d, b, mb, dtype):
     kp = make_pool(N, b, hkv, d, dtype)
     bt = make_tables(n, mb, N)
     sl = np.full((n,), mb * b, np.int32)
-    got = ops.score_logits(q, kp, bt, sl, backend="pallas")
+    got = ops.score_logits(q, kp, bt, sl, backend="pallas-interpret")
     want = ops.score_logits(q, kp, bt, sl, backend="jnp")
     tol = 5e-2 if dtype == jnp.bfloat16 else 2e-5
     g, wv = np.asarray(got, np.float32), np.asarray(want, np.float32)
@@ -75,7 +74,7 @@ def test_lightning_redundancy_kernel(n, h, d, b, mb, p_thresh):
     bt = make_tables(n, mb, N)
     sl = np.array([mb * b] + [max(b, mb * b - b)] * (n - 1), np.int32)
     got = ops.lightning_redundancy(kp, bt, sl, p_thresh=p_thresh,
-                                   backend="pallas")
+                                   backend="pallas-interpret")
     want = ops.lightning_redundancy(kp, bt, sl, p_thresh=p_thresh,
                                     backend="jnp")
     np.testing.assert_allclose(np.asarray(got), np.asarray(want),
@@ -90,7 +89,7 @@ def test_flash_redundancy_kernel_matches_full_oracle(n, h, d, b, mb):
     kp[2, 0, :, :] = kp[1, 2, :, :] * 0.9       # cross-block duplicate
     bt = make_tables(n, mb, N)
     sl = np.full((n,), mb * b, np.int32)
-    got = ops.flash_redundancy(kp, bt, sl, p_thresh=0.7, backend="pallas")
+    got = ops.flash_redundancy(kp, bt, sl, p_thresh=0.7, backend="pallas-interpret")
     want = ops.flash_redundancy(kp, bt, sl, p_thresh=0.7, backend="jnp")
     np.testing.assert_allclose(np.asarray(got), np.asarray(want),
                                rtol=2e-5, atol=2e-6)
@@ -102,7 +101,7 @@ def test_compact_gather_kernel(dtype):
     pool = RNG.normal(size=(S, h, d)).astype(dtype)
     src = np.stack([np.sort(RNG.choice(S, k, replace=False))
                     for _ in range(h)]).astype(np.int32)
-    got = ops.compact_gather(pool, src, backend="pallas")
+    got = ops.compact_gather(pool, src, backend="pallas-interpret")
     want = ops.compact_gather(pool, src, backend="jnp")
     np.testing.assert_array_equal(np.asarray(got, np.float32),
                                   np.asarray(want, np.float32))

@@ -1,8 +1,6 @@
 """Scoring-function unit tests vs independent numpy oracles."""
-import jax
 import jax.numpy as jnp
 import numpy as np
-import pytest
 
 from repro.core import scoring
 

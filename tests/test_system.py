@@ -7,7 +7,6 @@ import os
 
 import jax
 import jax.numpy as jnp
-import numpy as np
 
 from repro.configs import get_config
 from repro.core.compression import CompressOptions

@@ -12,8 +12,7 @@ from repro.configs import get_config
 from repro.models import lm
 from repro.training import checkpoint as ckpt
 from repro.training import optimizer as opt
-from repro.training.compress_grads import init_error_state, \
-    quantize_psum_dequant
+from repro.training.compress_grads import quantize_psum_dequant
 from repro.training.data import DataConfig, batch_at
 from repro.training.train_loop import build_train_step
 
@@ -122,9 +121,11 @@ def test_ef_int8_quantization_error_feedback():
         return quantize_psum_dequant(g, e, "pod")
 
     from jax.sharding import PartitionSpec as P
-    out, new_err = jax.jit(jax.shard_map(
+
+    from repro.kernels.pallas_compat import shard_map
+    out, new_err = jax.jit(shard_map(
         f, mesh=mesh, in_specs=(P(), P()), out_specs=(P(), P()),
-        check_vma=False))(g, e)
+        check=False))(g, e)
     out, new_err = np.asarray(out), np.asarray(new_err)
     np.testing.assert_allclose(out + new_err, np.asarray(g) + np.asarray(e),
                                rtol=1e-5, atol=1e-6)
