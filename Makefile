@@ -1,7 +1,8 @@
 PYTHON ?= python
 export PYTHONPATH := src$(if $(PYTHONPATH),:$(PYTHONPATH))
 
-.PHONY: test test-fast lint quickstart bench bench-kernels install-dev
+.PHONY: test test-fast lint docs-check quickstart bench bench-kernels \
+	bench-concurrency install-dev
 
 # tier-1 verify (ROADMAP.md). Local default is fail-fast; CI overrides
 # PYTEST_ARGS (e.g. --junitxml=...) and drops -x so junit reports are
@@ -14,9 +15,14 @@ test:
 lint:
 	$(PYTHON) -m ruff check src tests benchmarks examples
 
-# quick signal: facade + engine + block manager only
+# docs gate (run in CI): intra-repo markdown links resolve + every public
+# SchedulerConfig/CacheConfig field appears in README/docs
+docs-check:
+	$(PYTHON) tools/docs_check.py
+
+# quick signal: facade + engine + scheduler + block manager only
 test-fast:
-	$(PYTHON) -m pytest -q tests/test_api.py tests/test_engine.py tests/test_block_manager.py
+	$(PYTHON) -m pytest -q tests/test_api.py tests/test_engine.py tests/test_scheduler.py tests/test_block_manager.py
 
 quickstart:
 	$(PYTHON) examples/quickstart.py
@@ -28,6 +34,11 @@ bench:
 # uploads; run benchmarks.bench_kernels without --smoke for full shapes
 bench-kernels:
 	$(PYTHON) -m benchmarks.bench_kernels --smoke --out bench-kernels-smoke.json
+
+# end-to-end serving smoke (zipage vs nano-vLLM baseline) — CI uploads the
+# JSON as the per-PR concurrency trajectory artifact
+bench-concurrency:
+	$(PYTHON) -m benchmarks.bench_concurrency --smoke --out bench-concurrency-smoke.json
 
 install-dev:
 	pip install -r requirements-dev.txt

@@ -1,23 +1,109 @@
 """Paper Fig. 7 / App. E: real-time throughput, per-step time and the
-concurrency distribution, Zipage vs nano-vLLM, on the AMC-like workload."""
+concurrency distribution, Zipage vs nano-vLLM, on the AMC-like workload.
+
+Usable two ways:
+
+  * ``python -m benchmarks.run bench_concurrency`` — legacy CSV rows via
+    ``run()`` (name,us_per_step,derived);
+  * ``python -m benchmarks.bench_concurrency [--smoke] [--out FILE.json]``
+    — JSON for the per-PR concurrency trajectory (CI's bench-smoke
+    artifact), same envelope as ``bench_kernels.py``:
+
+      {"schema": "zipage-bench-concurrency/v1", "jax": ..., "platform": ...,
+       "smoke": bool, "results": [{"name", "tps", "tokens", "steps",
+       "tokens_per_step", "mean_concurrency", "p50_concurrency",
+       "max_concurrency", "frac_steps_conc_ge12", "tpot_ms", "block_util",
+       "compressions", "preemptions", "wall_s"}, ...],
+       "speedup_tps_zipage_vs_nano": float}
+
+``--smoke`` shrinks the request count so the job stays in CI budget.
+"""
+import argparse
+import json
+import sys
+
 import numpy as np
 
 from benchmarks.common import run_engine, workload
 
 
-def run():
-    rows = []
+def _measure(n_requests):
+    """[(name, result)] for Zipage vs the full-KV nano-vLLM baseline."""
     rng = np.random.default_rng(1)
-    reqs = workload("amc", 24, rng)
+    reqs = workload("amc", n_requests, rng)
+    out = []
     for name, ov in (("zipage", {}), ("nano_vllm", {"n_max": None})):
-        r = run_engine(reqs, **ov)
-        conc = np.array([m["n_running"] for m in r["engine"].metrics])
-        steps_hi = float((conc >= 12).mean())      # fraction in high band
+        out.append((name, run_engine(reqs, **ov)))
+    return out
+
+
+def _row(name, r):
+    conc = np.array([m["n_running"] for m in r["engine"].metrics])
+    return {
+        "name": name,
+        "tps": round(r["tps"], 2),
+        "tokens": r["tokens"],
+        "steps": r["steps"],
+        "tokens_per_step": round(r["tokens_per_step"], 2),
+        "mean_concurrency": round(float(conc.mean()), 2),
+        "p50_concurrency": float(np.median(conc)),
+        "max_concurrency": int(conc.max()),
+        "frac_steps_conc_ge12": round(float((conc >= 12).mean()), 3),
+        "tpot_ms": round(r["tpot_ms"], 3),
+        "block_util": round(r["block_util"], 3),
+        "compressions": r["compressions"],
+        "preemptions": int(sum(m.get("n_preempted", 0)
+                               for m in r["engine"].metrics)),
+        "wall_s": round(r["wall_s"], 3),
+    }
+
+
+def run():
+    """benchmarks.run entry point — legacy CSV rows."""
+    rows = []
+    for name, r in _measure(24):
         t_steps = np.array([m["t_total"] for m in r["engine"].metrics])
+        row = _row(name, r)
         rows.append((f"concurrency/{name}",
                      1e6 * float(t_steps.mean()),
-                     f"steps={r['steps']};frac_steps_conc_ge12="
-                     f"{steps_hi:.2f};p50_conc={np.median(conc):.0f};"
-                     f"max_conc={conc.max()};"
-                     f"tok_per_step={r['tokens_per_step']:.2f}"))
+                     f"steps={row['steps']};frac_steps_conc_ge12="
+                     f"{row['frac_steps_conc_ge12']:.2f};"
+                     f"p50_conc={row['p50_concurrency']:.0f};"
+                     f"max_conc={row['max_concurrency']};"
+                     f"tok_per_step={row['tokens_per_step']:.2f}"))
     return rows
+
+
+def main(argv=None):
+    import jax
+
+    ap = argparse.ArgumentParser(description=__doc__.splitlines()[0])
+    ap.add_argument("--smoke", action="store_true",
+                    help="small request count (CI bench-smoke)")
+    ap.add_argument("--out", default=None, metavar="FILE.json",
+                    help="write the JSON report here (default: stdout)")
+    args = ap.parse_args(argv)
+
+    results = {name: _row(name, r)
+               for name, r in _measure(8 if args.smoke else 24)}
+    report = {
+        "schema": "zipage-bench-concurrency/v1",
+        "jax": jax.__version__,
+        "platform": jax.default_backend(),
+        "smoke": args.smoke,
+        "results": list(results.values()),
+        "speedup_tps_zipage_vs_nano": round(
+            results["zipage"]["tps"] / results["nano_vllm"]["tps"], 3),
+    }
+    text = json.dumps(report, indent=2)
+    if args.out:
+        with open(args.out, "w") as f:
+            f.write(text + "\n")
+        print(f"wrote {args.out}", file=sys.stderr)
+    else:
+        print(text)
+    return 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())

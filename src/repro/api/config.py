@@ -37,11 +37,27 @@ class CacheConfig:
 
 @dataclasses.dataclass(frozen=True)
 class SchedulerConfig:
-    """Continuous-batching policy (paper §4.3/§4.5)."""
+    """The compression-aware scheduling strategy (paper §4.3/§4.5),
+    executed by ``repro.core.scheduler.Scheduler`` — see docs/SCHEDULER.md
+    for the full queue lifecycle and what each knob trades off."""
     max_batch: int = 16              # decode slots
     m_qslots: int = 8                # paper's M (query-slot pool)
     scheduling: str = "hybrid"       # hybrid | constrained
     async_compression: bool = True
+    # admission/preemption policy (repro.core.scheduler.POLICIES):
+    # fcfs | priority (Request.priority desc) | srpt (shortest remaining)
+    policy: str = "fcfs"
+    # victim-order policy for preemption; None => same as `policy`
+    preemption: Optional[str] = None
+    # shared prefill+decode token budget per step (continuous batching with
+    # chunked prefill); None => unbounded (prefill completes in-step)
+    token_budget: Optional[int] = None
+    # per-request prefill chunk cap per step; None => budget-limited only
+    max_prefill_chunk: Optional[int] = None
+    # compression-aware admission: fraction of the running batch's
+    # projected *post-compression* block growth that must stay free when
+    # admitting. 0.0 => the paper's greedy admit-then-preempt behavior.
+    admission_margin: float = 0.0
 
 
 #: kernel backends accepted by ``ModelRunnerConfig.kernel_backend``:
@@ -111,6 +127,9 @@ def build_engine_options(cache: CacheConfig, scheduler: SchedulerConfig,
             f"CacheConfig.window ({cache.window}) must match "
             f"compress.window ({compress.window}); set both, or pass only "
             "compress and window together")
+    # policy names, token_budget >= max_batch and admission_margin bounds
+    # are validated by repro.core.scheduler (Scheduler.__init__ /
+    # make_policy), which the engine constructs before any device work
     return EngineOptions(
         block_size=cache.block_size,
         n_total_blocks=cache.n_total_blocks,
@@ -121,6 +140,11 @@ def build_engine_options(cache: CacheConfig, scheduler: SchedulerConfig,
         scheduling=scheduler.scheduling,
         prefix_caching=cache.prefix_caching,
         async_compression=scheduler.async_compression,
+        policy=scheduler.policy,
+        preemption=scheduler.preemption,
+        token_budget=scheduler.token_budget,
+        max_prefill_chunk=scheduler.max_prefill_chunk,
+        admission_margin=scheduler.admission_margin,
         compress=compress,
         max_model_len=cache.max_model_len,
         prefill_rows=runner.prefill_rows,

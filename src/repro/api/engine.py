@@ -82,11 +82,14 @@ class Zipage:
     # request lifecycle
 
     def add_request(self, prompt: Sequence[int],
-                    params: Optional[SamplingParams] = None) -> int:
+                    params: Optional[SamplingParams] = None,
+                    priority: int = 0) -> int:
         """Enqueue a request; returns its request id immediately. Tokens
-        arrive through subsequent ``step()`` calls."""
+        arrive through subsequent ``step()`` calls. ``priority`` orders
+        admission (and inversely, preemption) under the "priority"
+        scheduler policy — higher runs first; other policies ignore it."""
         params = params or SamplingParams()
-        rid = self.engine.add_request(prompt, params)
+        rid = self.engine.add_request(prompt, params, priority=priority)
         self._requests[rid] = self.engine.waiting[-1]
         self._emitted[rid] = 0
         self._undrained.add(rid)
@@ -185,6 +188,21 @@ class Zipage:
     @property
     def metrics(self) -> List[dict]:
         return self.engine.metrics
+
+    @property
+    def scheduler_stats(self) -> Optional[dict]:
+        """Last step's scheduler telemetry (docs/SCHEDULER.md): policy,
+        admitted/preempted/blocked/finished counts, prefill and scheduled
+        token counts, token-budget utilization, free blocks and the
+        straggler-aware admission scale. None before the first step."""
+        if not self.engine.metrics:
+            return None
+        m = self.engine.metrics[-1]
+        return {k: m[k] for k in (
+            "policy", "n_admitted", "n_preempted", "n_blocked",
+            "n_finished", "n_prefill_tokens", "n_scheduled_tokens",
+            "token_budget", "budget_util", "free_blocks",
+            "admission_scale") if k in m}
 
     @property
     def step_count(self) -> int:

@@ -13,3 +13,6 @@ from repro.core.engine import EngineOptions, ZipageEngine  # noqa
 from repro.core.memory_planner import MemoryPlan, plan_memory  # noqa
 from repro.core.request import FinishReason, Request, State  # noqa
 from repro.core.sampling import SamplingParams  # noqa
+from repro.core.scheduler import (POLICIES, CompressionLaunch,  # noqa
+                                  PrefillChunk, Scheduler, SchedulerOutputs,
+                                  SchedulerParams, SchedulingPolicy)

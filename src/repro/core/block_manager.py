@@ -41,8 +41,16 @@ class BlockManager:
             return blk
         raise OutOfBlocks()
 
-    def can_allocate(self, n: int) -> bool:
-        return self.num_free >= n
+    def can_allocate(self, n: int, margin: int = 0) -> bool:
+        """True if ``n`` blocks can be handed out while still leaving
+        ``margin`` free. The scheduler's compression-aware admission passes
+        the projected post-compression growth of the running batch as the
+        margin (docs/SCHEDULER.md)."""
+        return self.num_free >= n + margin
+
+    @property
+    def utilization(self) -> float:
+        return 1.0 - self.num_free / self.num_blocks
 
     def allocate(self, n: int) -> List[int]:
         if not self.can_allocate(n):

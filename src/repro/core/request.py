@@ -31,6 +31,8 @@ class Request:
     arrival: float = 0.0
     sampling: SamplingParams = dataclasses.field(
         default_factory=SamplingParams)
+    priority: int = 0                  # higher = served first ("priority"
+    #                                    scheduler policy; FCFS ignores it)
 
     state: State = State.WAITING
     output: List[int] = dataclasses.field(default_factory=list)
@@ -48,6 +50,13 @@ class Request:
     preempt_count: int = 0
     win_count: int = 0                 # observation-window entries captured
 
+    # chunked-prefill progress (owned by repro.core.scheduler): tokens of
+    # ``full_prompt`` already written to the KV cache vs the admission-time
+    # target. Equal once prefill completes; a token-budget-limited step may
+    # leave a gap that later steps close.
+    n_prefilled: int = 0
+    prefill_target: int = 0
+
     # per-request compression metrics
     n_compressions: int = 0            # compression events undergone
     comp_blocks_freed: int = 0         # blocks released by those events
@@ -64,6 +73,21 @@ class Request:
     @property
     def n_blocks(self) -> int:
         return len(self.blocks)
+
+    @property
+    def prefill_pending(self) -> bool:
+        """True while admitted but not yet fully prefilled (chunked prefill
+        spread over multiple steps by the scheduler's token budget)."""
+        return self.n_prefilled < self.prefill_target
+
+    def remaining_work(self) -> int:
+        """Tokens still to process (prefill remainder + decode remainder);
+        the shortest-remaining ("srpt") policy key."""
+        if self.state == State.WAITING:
+            pre = len(self.prompt) + len(self.output)
+        else:
+            pre = max(0, self.prefill_target - self.n_prefilled)
+        return pre + max(0, self.max_new_tokens - len(self.output))
 
     def tokens_in_last_block(self, block_size: int) -> int:
         r = self.seq_len % block_size

@@ -1,0 +1,653 @@
+"""The compression-aware Scheduler: the paper's "comprehensive scheduling
+strategy" (§4.3–§4.5) as a standalone, pluggable subsystem.
+
+Pure host-side logic — no JAX imports. The scheduler owns the request
+queues (waiting / running / finished), the decode- and query-slot pools,
+and every admission / preemption / compression-planning decision; the
+engine (``repro.core.engine.ZipageEngine``) owns the device state and
+merely *executes* the :class:`SchedulerOutputs` plan each step produces.
+
+Per-step protocol (driven by ``ZipageEngine.step()``):
+
+    plan = scheduler.schedule()            # qslots, admission, prefill chunks
+    engine runs prefill from plan.prefill_chunks
+    scheduler.plan_compression(plan)       # detect + pick dest blocks (§4.4)
+    engine launches the compression kernel from plan.compress
+    scheduler.commit_compression(plan)     # release blocks, swap tables
+    active = scheduler.schedule_decode(plan)   # growth, blocking, preemption
+    engine decodes `active`
+    scheduler.end_step(plan)               # async rejoin + finish detection
+    scheduler.observe_latency(dt)          # straggler-aware admission scale
+
+The plan is refined in phases rather than produced whole because the
+observation-window counters that gate compression only land with the final
+prefill chunk, and finish detection depends on the tokens the device
+sampled — see docs/SCHEDULER.md for the full queue lifecycle.
+
+Pluggable policies (``SchedulerConfig.policy`` on the ``repro.api``
+facade): ``fcfs`` (default — byte-for-byte the pre-extraction engine
+behavior), ``priority`` (``Request.priority`` descending) and ``srpt``
+(shortest remaining work first). Preemption victim order is a policy too
+(``SchedulerConfig.preemption``; defaults to the admission policy's
+reverse).
+"""
+from __future__ import annotations
+
+import dataclasses
+import math
+import time
+from collections import deque
+from typing import Deque, Dict, List, Optional, Sequence
+
+from repro.core.block_manager import BlockManager
+from repro.core.request import Request, State
+
+# ----------------------------------------------------------------------
+# configuration
+
+
+@dataclasses.dataclass(frozen=True)
+class SchedulerParams:
+    """Everything the scheduler needs to decide, nothing the device needs.
+
+    Built by the engine from ``EngineOptions`` + model-derived flags; built
+    directly in tests (the point of the extraction: policy logic is unit-
+    testable without a model or JAX).
+    """
+    block_size: int = 16
+    max_batch: int = 16              # decode slots
+    m_qslots: int = 8                # paper's M (query-slot pool)
+    n_max: Optional[int] = 4         # block cap; None => full-KV baseline
+    window: int = 4                  # observation window w
+    scheduling: str = "hybrid"       # hybrid | constrained (§4.3)
+    async_compression: bool = True
+    prefill_rows: int = 4            # admission batch ceiling per step
+    # --- policy knobs (SchedulerConfig on the repro.api facade) ---
+    policy: str = "fcfs"             # fcfs | priority | srpt
+    preemption: Optional[str] = None  # victim-order policy; None => policy
+    token_budget: Optional[int] = None   # prefill+decode tokens per step
+    max_prefill_chunk: Optional[int] = None  # per-request chunk cap per step
+    admission_margin: float = 0.0    # fraction of projected growth reserved
+    # --- model/engine-derived flags ---
+    compression_enabled: bool = True
+    budget_blocks: int = 3           # n_max - 1 (compression destination)
+    prefix_ok: bool = True
+    attention_free: bool = False
+    ring_blocks: int = 0             # local-window ring size (0 = paged)
+
+
+@dataclasses.dataclass(frozen=True)
+class PrefillChunk:
+    """One request's prefill work this step: ``full_prompt[start:start+n]``.
+    ``is_final`` marks the chunk that completes the prompt — only then is a
+    first token sampled and the observation window considered primed."""
+    request: Request
+    start: int
+    n_tokens: int
+    is_final: bool
+
+
+@dataclasses.dataclass(frozen=True)
+class CompressionLaunch:
+    """A planned compression (§4.4): write the compressed KV into ``dest``,
+    keep ``reserved`` as the in-progress block, return ``release`` to the
+    pool once the kernel has consumed the sources."""
+    request: Request
+    dest: List[int]
+    reserved: int
+    release: List[int]
+
+
+@dataclasses.dataclass
+class SchedulerOutputs:
+    """The explicit per-step plan ``ZipageEngine.step()`` executes."""
+    step: int = 0
+    admitted: List[Request] = dataclasses.field(default_factory=list)
+    prefill_chunks: List[PrefillChunk] = dataclasses.field(
+        default_factory=list)
+    compress: List[CompressionLaunch] = dataclasses.field(
+        default_factory=list)
+    decode: List[Request] = dataclasses.field(default_factory=list)
+    preempted: List[Request] = dataclasses.field(default_factory=list)
+    finished: List[Request] = dataclasses.field(default_factory=list)
+    n_blocked: int = 0
+    token_budget: Optional[int] = None
+
+    @property
+    def n_prefill_tokens(self) -> int:
+        return sum(c.n_tokens for c in self.prefill_chunks)
+
+    @property
+    def n_scheduled_tokens(self) -> int:
+        return self.n_prefill_tokens + len(self.decode)
+
+
+# ----------------------------------------------------------------------
+# policies
+
+
+class SchedulingPolicy:
+    """Ordering hooks. ``admission_order`` ranks the waiting queue (admission
+    is strict head-of-line within that order: the first request that does
+    not fit stops the pass, preserving the paper's FCFS fairness argument);
+    ``victim_order`` ranks running requests most-preemptible first."""
+    name = "base"
+
+    def admission_order(self, waiting: Sequence[Request]) -> List[Request]:
+        raise NotImplementedError
+
+    def victim_order(self, running: Sequence[Request]) -> List[Request]:
+        raise NotImplementedError
+
+
+class FcfsPolicy(SchedulingPolicy):
+    """Arrival order in, LIFO out — exactly the pre-extraction engine."""
+    name = "fcfs"
+
+    def admission_order(self, waiting):
+        return list(waiting)
+
+    def victim_order(self, running):
+        return list(reversed(running))
+
+
+class PriorityPolicy(SchedulingPolicy):
+    """``Request.priority`` descending (ties: arrival order); victims are
+    the lowest-priority, most-recently-admitted requests."""
+    name = "priority"
+
+    def admission_order(self, waiting):
+        return sorted(waiting, key=lambda r: (-r.priority, r.arrival, r.rid))
+
+    def victim_order(self, running):
+        order = list(enumerate(running))
+        order.sort(key=lambda ir: (ir[1].priority, -ir[0]))
+        return [r for _i, r in order]
+
+
+class SrptPolicy(SchedulingPolicy):
+    """Shortest remaining work first (prefill remainder + decode remainder);
+    victims are the longest-remaining requests. Minimises mean latency on
+    reasoning workloads with known generation caps."""
+    name = "srpt"
+
+    def admission_order(self, waiting):
+        return sorted(waiting,
+                      key=lambda r: (r.remaining_work(), r.arrival, r.rid))
+
+    def victim_order(self, running):
+        order = list(enumerate(running))
+        order.sort(key=lambda ir: (-ir[1].remaining_work(), -ir[0]))
+        return [r for _i, r in order]
+
+
+POLICIES = {p.name: p for p in (FcfsPolicy(), PriorityPolicy(),
+                                SrptPolicy())}
+
+
+def make_policy(name: str) -> SchedulingPolicy:
+    try:
+        return POLICIES[name]
+    except KeyError:
+        raise ValueError(f"unknown scheduler policy {name!r}; expected one "
+                         f"of {tuple(POLICIES)}") from None
+
+
+# ----------------------------------------------------------------------
+
+
+class Scheduler:
+    """Owns the queues and every scheduling decision; see module docstring
+    for the per-step protocol."""
+
+    def __init__(self, params: SchedulerParams, bm: BlockManager):
+        if params.token_budget is not None \
+                and params.token_budget < params.max_batch:
+            raise ValueError(
+                f"token_budget ({params.token_budget}) must be >= max_batch "
+                f"({params.max_batch}) so every running request can decode "
+                "each step")
+        if params.admission_margin < 0:
+            raise ValueError("admission_margin must be >= 0")
+        self.p = params
+        self.bm = bm
+        self.policy = make_policy(params.policy)
+        self.preempt_policy = make_policy(params.preemption
+                                          or params.policy)
+        self.waiting: Deque[Request] = deque()
+        self.running: List[Request] = []      # admission order
+        self.finished: Dict[int, Request] = {}
+        self.free_slots = list(range(params.max_batch - 1, -1, -1))
+        self.free_qslots = list(range(params.m_qslots - 1, -1, -1))
+        # straggler-aware admission: EWMA of step latency vs baseline
+        self.ewma: Optional[float] = None
+        self.admission_scale = 1.0
+
+    # ------------------------------------------------------------------
+    # queue entry points
+
+    def add_request(self, r: Request) -> None:
+        self.waiting.append(r)
+
+    def has_work(self) -> bool:
+        return bool(self.waiting or self.running)
+
+    def abort(self, rid: int) -> Optional[Request]:
+        """Remove a waiting/running request, return its blocks to the pool
+        and hand it back for finish bookkeeping (None if unknown)."""
+        for r in list(self.waiting):
+            if r.rid == rid:
+                self.waiting.remove(r)
+                return r
+        for r in self.running:
+            if r.rid == rid:
+                self._release_slots(r)
+                self.running.remove(r)
+                return r
+        return None
+
+    # ------------------------------------------------------------------
+    # shared helpers
+
+    def _needed_blocks(self, n_tokens: int) -> int:
+        if self.p.attention_free:
+            return 0
+        if self.p.ring_blocks:
+            return self.p.ring_blocks
+        return -(-n_tokens // self.p.block_size)
+
+    def _projected_blocks(self, n_tokens: int) -> int:
+        """Steady-state footprint of ``n_tokens``: with compression on, the
+        block cap bounds it — the paper's lever for admission (§4.3)."""
+        raw = self._needed_blocks(n_tokens)
+        if self.p.compression_enabled and self.p.n_max is not None:
+            return min(raw, self.p.n_max)
+        return raw
+
+    def projected_growth(self) -> int:
+        """Blocks the running batch may still demand, under *post-
+        compression* projections: each request's final footprint is capped
+        at ``n_max`` once it compresses, so with compression on this stays
+        small no matter how long the generations run."""
+        total = 0
+        for r in self.running:
+            final_len = len(r.prompt) + len(r.output) \
+                + max(0, r.max_new_tokens - len(r.output))
+            total += max(0, self._projected_blocks(final_len) - r.n_blocks)
+        return total
+
+    def _release_slots(self, r: Request) -> None:
+        """Return r's blocks, decode slot and query slot to their pools
+        (shared by preempt/finish/abort)."""
+        self.bm.release(r.blocks)
+        r.blocks = []
+        if r.slot >= 0:
+            self.free_slots.append(r.slot)
+        if r.qslot >= 0:
+            self.free_qslots.append(r.qslot)
+        r.slot = r.qslot = -1
+
+    def _preempt(self, r: Request, outs: Optional[SchedulerOutputs]) -> None:
+        self._release_slots(r)
+        r.compressed = False
+        r.seq_len = r.position = 0
+        r.n_cached = 0
+        r.win_count = 0
+        r.n_prefilled = r.prefill_target = 0
+        r.preempt_count += 1
+        r.state = State.WAITING
+        self.running.remove(r)
+        self.waiting.appendleft(r)       # front of waiting queue (§3)
+        if outs is not None:
+            outs.preempted.append(r)
+
+    def _find_victim(self, requester: Request,
+                     exclude: frozenset = frozenset()) -> Optional[Request]:
+        """§4.3/§4.4 victim tiers — slotless first under hybrid scheduling,
+        then uncompressed under prefix caching — ordered within each tier
+        by the preemption policy. ``exclude`` holds requests that must not
+        be preempted (e.g. peers already planned into this step's
+        compression set, whose block lists a launch still references)."""
+        order = self.preempt_policy.victim_order(self.running)
+        if self.p.scheduling == "hybrid":
+            for r in order:
+                if r is requester or r.rid in exclude \
+                        or r.state == State.FINISHED:
+                    continue
+                if r.qslot < 0:
+                    return r
+        if self.p.prefix_ok:
+            for r in order:
+                if r is requester or r.rid in exclude \
+                        or r.state == State.FINISHED:
+                    continue
+                if not r.compressed:
+                    return r
+        return None
+
+    def _preempt_for_blocks(self, n_needed: int, requester: Request,
+                            outs: Optional[SchedulerOutputs],
+                            exclude: frozenset = frozenset()) -> bool:
+        """Free blocks via preemption per §4.3/§4.4 rules. Returns success."""
+        while not self.bm.can_allocate(n_needed):
+            victim = self._find_victim(requester, exclude)
+            if victim is None:
+                return False
+            self._preempt(victim, outs)
+        return True
+
+    def _can_decode_slotless(self, r: Request) -> bool:
+        """Hybrid rule: decode without a qslot while < N_max blocks or
+        < b - w tokens in the last block."""
+        b, w = self.p.block_size, self.p.window
+        return (r.n_blocks < self.p.n_max
+                or r.tokens_in_last_block(b) < b - w)
+
+    def _assign_qslots(self) -> None:
+        """Paper §4.3 rule 3: free query slots go to the foremost running
+        requests lacking one (only first M are eligible)."""
+        if not self.p.compression_enabled:
+            return
+        for i, r in enumerate(self.running):
+            if not self.free_qslots:
+                break
+            if i >= self.p.m_qslots:
+                break
+            if r.qslot < 0 and r.state != State.FINISHED:
+                r.qslot = self.free_qslots.pop()
+                if r.state == State.BLOCKED:
+                    r.state = State.RUNNING
+
+    # ------------------------------------------------------------------
+    # phase 1: admission + prefill-chunk planning
+
+    def schedule(self, step: int = 0) -> SchedulerOutputs:
+        outs = SchedulerOutputs(step=step,
+                                token_budget=self.p.token_budget)
+        self._assign_qslots()
+        # token budget shared across prefill + decode (continuous batching):
+        # every decodable running request is reserved one token up front,
+        # prefill chunks split what remains.
+        if self.p.token_budget is None:
+            prefill_avail = math.inf
+        else:
+            n_decode_est = sum(1 for r in self.running
+                               if r.state != State.FINISHED
+                               and not r.prefill_pending and not r.done())
+            prefill_avail = max(0, self.p.token_budget - n_decode_est)
+        max_chunk = self.p.max_prefill_chunk or math.inf
+        # carried-over partial prefills (token-budget mode) come first, in
+        # admission order — they already hold slots and blocks.
+        for r in self.running:
+            if not r.prefill_pending:
+                continue
+            prefill_avail = self._plan_chunk(outs, r, prefill_avail,
+                                             max_chunk)
+        self._admit(outs, prefill_avail, max_chunk)
+        return outs
+
+    def _plan_chunk(self, outs: SchedulerOutputs, r: Request,
+                    prefill_avail, max_chunk):
+        """Plan one request's prefill chunk for this step. A final chunk
+        reserves one extra budget token: the request decodes in the same
+        step once its prompt completes, and that decode shares the
+        budget."""
+        rem = r.prefill_target - r.n_prefilled
+        cap = min(rem, max_chunk)
+        if cap >= rem and prefill_avail >= rem + 1:
+            outs.prefill_chunks.append(PrefillChunk(r, r.n_prefilled, rem,
+                                                    is_final=True))
+            return prefill_avail - (rem + 1)
+        # a non-final chunk must leave >=1 prompt token for the final one —
+        # only final chunks sample the first token
+        take = int(min(cap, max(0, prefill_avail), rem - 1))
+        if take > 0:
+            outs.prefill_chunks.append(PrefillChunk(r, r.n_prefilled, take,
+                                                    is_final=False))
+            return prefill_avail - take
+        return prefill_avail
+
+    def _admit(self, outs: SchedulerOutputs, prefill_avail, max_chunk):
+        limit = max(1, int(self.p.prefill_rows * self.admission_scale))
+        for r in self.policy.admission_order(self.waiting):
+            if len(outs.admitted) >= limit or not self.free_slots:
+                break
+            if self.p.scheduling == "constrained" \
+                    and self.p.compression_enabled and not self.free_qslots:
+                break
+            prompt = r.full_prompt
+            if prefill_avail < 1:
+                break                    # no token budget left this step
+            if self.p.prefix_ok:
+                shared, n_cached, chain = self.bm.lookup_prefix(prompt)
+            else:
+                shared, n_cached, chain = [], 0, []
+            n_new = self._needed_blocks(len(prompt)) - len(shared)
+            # compression-aware admission: beyond the prompt's own blocks,
+            # require `admission_margin` of the batch's projected *post-
+            # compression* growth to stay free. margin 0.0 (default) is the
+            # paper's greedy admit-then-preempt behavior.
+            margin = 0
+            if self.p.admission_margin > 0:
+                # final length counts max_new_tokens from the *original*
+                # prompt — full_prompt already contains any tokens a
+                # preempted request generated, and max_new_tokens caps the
+                # total output
+                final_len = len(r.prompt) + r.max_new_tokens
+                own_growth = max(
+                    0,
+                    self._projected_blocks(final_len)
+                    - self._needed_blocks(len(prompt)))
+                margin = math.ceil(self.p.admission_margin
+                                   * (self.projected_growth() + own_growth))
+            if not self.bm.can_allocate(n_new, margin=margin):
+                # roll back the prefix refs and stop admitting (strict
+                # head-of-line within the policy order)
+                if shared:
+                    self.bm.release(shared)
+                break
+            new_blocks = self.bm.allocate(n_new) if n_new else []
+            r.blocks = shared + new_blocks
+            r.n_cached, r.chain, r.n_shared = n_cached, chain, len(shared)
+            if self.p.prefix_ok and chain:
+                self.bm.register_prefix(r.blocks, chain, len(shared))
+            r.slot = self.free_slots.pop()
+            if self.p.compression_enabled and self.free_qslots \
+                    and len(self.running) < self.p.m_qslots:
+                r.qslot = self.free_qslots.pop()
+            ring = self.p.ring_blocks
+            r.seq_len = (min(len(prompt), ring) if ring
+                         else (0 if self.p.attention_free else len(prompt)))
+            r.position = len(prompt)
+            r.state = State.RUNNING
+            r.n_prefilled = r.n_cached
+            r.prefill_target = len(prompt)
+            self.waiting.remove(r)
+            self.running.append(r)
+            outs.admitted.append(r)
+            # a zero-token final chunk still flows through prefill so the
+            # first token is sampled (full prefix-cache hit)
+            prefill_avail = self._plan_chunk(outs, r, prefill_avail,
+                                             max_chunk)
+        return prefill_avail
+
+    # ------------------------------------------------------------------
+    # phase 2: compression planning (after prefill — window counters land
+    # with the final chunk)
+
+    def plan_compression(self, outs: SchedulerOutputs) -> None:
+        if not self.p.compression_enabled:
+            return
+        b = self.p.block_size
+        ready = [r for r in self.running
+                 if r.state in (State.RUNNING, State.BLOCKED)
+                 and not r.prefill_pending
+                 and r.qslot >= 0
+                 and r.n_blocks >= self.p.n_max
+                 and r.seq_len == r.n_blocks * b
+                 and r.win_count >= self.p.window]
+        nb = self.p.budget_blocks
+        # compression-ready peers are off-limits for preemption here: an
+        # earlier launch in this set still references their block lists,
+        # and preempting a later one would empty the blocks this very loop
+        # is about to slice
+        no_preempt = frozenset(r.rid for r in ready)
+        for r in ready:
+            shared_idx = [i for i, blk in enumerate(r.blocks)
+                          if self.bm.is_shared(blk)]
+            n_prefix = len(shared_idx)
+            need = 0
+            if n_prefix:
+                need = min(n_prefix, nb)
+                if self.bm.is_shared(r.blocks[min(nb, r.n_blocks - 1)]):
+                    need += 1                      # reserved must be fresh too
+            if need and not self.bm.can_allocate(need):
+                if not self._preempt_for_blocks(need, r, outs,
+                                                exclude=no_preempt):
+                    r.state = State.BLOCKED        # retry next step
+                    continue
+            if n_prefix == 0:
+                dest = r.blocks[:nb]
+                reserved = r.blocks[nb]
+                release = r.blocks[nb + 1:]
+            else:
+                fresh = self.bm.allocate(min(n_prefix, nb))
+                dest = fresh + r.blocks[n_prefix:][:nb - len(fresh)]
+                if self.bm.is_shared(r.blocks[min(nb, r.n_blocks - 1)]):
+                    reserved = self.bm.allocate(1)[0]
+                    keep = set(dest) | {reserved}
+                    release = [blk for blk in r.blocks if blk not in keep]
+                else:
+                    reserved = r.blocks[nb] if len(r.blocks) > nb else \
+                        self.bm.allocate(1)[0]
+                    keep = set(dest) | {reserved}
+                    release = [blk for blk in r.blocks if blk not in keep]
+            outs.compress.append(CompressionLaunch(r, dest, reserved,
+                                                   release))
+
+    def commit_compression(self, outs: SchedulerOutputs) -> None:
+        """Deterministic host bookkeeping once the kernel is launched:
+        release the source blocks, swap in the compressed table, and (in
+        async mode) park the request for this step's decode (§4.5)."""
+        k = self.p.budget_blocks * self.p.block_size
+        for c in outs.compress:
+            r = c.request
+            shared_released = [blk for blk in c.release
+                               if self.bm.ref[blk] > 1]
+            self.bm.release(c.release)
+            r.n_compressions += 1
+            r.comp_blocks_freed += len(c.release) - len(shared_released)
+            r.blocks = list(c.dest) + [c.reserved]
+            r.seq_len = k
+            r.compressed = True
+            r.n_shared = 0
+            if self.p.async_compression:
+                r.state = State.COMPRESSING     # sits out this decode step
+
+    # ------------------------------------------------------------------
+    # phase 3: decode planning
+
+    def schedule_decode(self, outs: SchedulerOutputs) -> List[Request]:
+        """Ensure every decodable request has room for one token; apply
+        blocking/preemption rules. Fills ``outs.decode``."""
+        b = self.p.block_size
+        active = []
+        for r in list(self.running):
+            if r.state == State.COMPRESSING:
+                continue
+            if r.prefill_pending:
+                continue                 # chunked prefill still in flight
+            if r.done():
+                # already terminated (eos/stop on the prefill-sampled
+                # token); decoding again would bury the match under a
+                # second token before end_step sees it
+                continue
+            if r.state == State.BLOCKED:
+                r.state = State.RUNNING          # retry below
+            if r not in self.running:            # got preempted this step
+                continue
+            if self.p.attention_free:
+                active.append(r)
+                continue
+            if self.p.ring_blocks:
+                active.append(r)
+                continue
+            # hybrid slotless boundary rule
+            if (self.p.compression_enabled and r.qslot < 0
+                    and not self._can_decode_slotless(r)):
+                r.state = State.BLOCKED
+                continue
+            if r.seq_len == r.n_blocks * b:      # last block full
+                if (self.p.compression_enabled and r.qslot >= 0
+                        and r.n_blocks >= self.p.n_max
+                        and r.win_count >= self.p.window):
+                    # compression will handle it (was detected this step or
+                    # will be next step); skip decode if it somehow races
+                    r.state = State.BLOCKED
+                    continue
+                ok = self.bm.can_allocate(1) or \
+                    self._preempt_for_blocks(1, r, outs)
+                if not ok or r not in self.running:
+                    if r in self.running:
+                        r.state = State.BLOCKED
+                    continue
+                blk = self.bm.allocate(1)[0]
+                r.blocks.append(blk)
+            active.append(r)
+        outs.decode = [r for r in active if r in self.running]
+        return outs.decode
+
+    # ------------------------------------------------------------------
+    # phase 4: step epilogue
+
+    def end_step(self, outs: SchedulerOutputs) -> List[Request]:
+        """Async-compressed requests rejoin; finished requests release their
+        resources. Returns (and records) the newly finished."""
+        for r in self.running:
+            if r.state == State.COMPRESSING:
+                r.state = State.RUNNING
+        for r in list(self.running):
+            if r.state == State.COMPRESSING or r.prefill_pending:
+                continue
+            reason = r.check_finish()
+            if reason is None:
+                continue
+            r.finish_reason = reason
+            r.truncate_stop()
+            self._release_slots(r)
+            r.state = State.FINISHED
+            r.t_finish = time.monotonic()
+            self.running.remove(r)
+            self.finished[r.rid] = r
+            outs.finished.append(r)
+        outs.n_blocked = sum(1 for r in self.running
+                             if r.state == State.BLOCKED)
+        return outs.finished
+
+    def observe_latency(self, dt: float) -> None:
+        """Straggler-aware admission: back off when step latency inflates."""
+        self.ewma = dt if self.ewma is None else 0.9 * self.ewma + 0.1 * dt
+        if self.ewma > 0 and dt > 3.0 * self.ewma:
+            self.admission_scale = max(0.25, self.admission_scale * 0.5)
+        else:
+            self.admission_scale = min(1.0, self.admission_scale * 1.1)
+
+    # ------------------------------------------------------------------
+    def stats(self, outs: SchedulerOutputs) -> dict:
+        """Per-step telemetry merged into the engine's metrics entries and
+        surfaced as ``Zipage.scheduler_stats`` (docs/SCHEDULER.md)."""
+        scheduled = outs.n_scheduled_tokens
+        return {
+            "policy": self.policy.name,
+            "n_admitted": len(outs.admitted),
+            "n_preempted": len(outs.preempted),
+            "n_blocked": outs.n_blocked,
+            "n_finished": len(outs.finished),
+            "n_prefill_tokens": outs.n_prefill_tokens,
+            "n_scheduled_tokens": scheduled,
+            "token_budget": outs.token_budget,
+            "budget_util": (scheduled / outs.token_budget
+                            if outs.token_budget else None),
+            "free_blocks": self.bm.num_free,
+            "admission_scale": self.admission_scale,
+        }

@@ -1,32 +1,13 @@
-"""Zipage: the Compressed-PagedAttention serving engine (paper §4).
+"""FROZEN pre-refactor copy of ``repro.core.engine.ZipageEngine`` (PR 2 state).
 
-The engine is the *execution* half of the serving stack: it owns the
-device state, the jitted prefill/decode/compress steps and the host
-mirrors that feed them. Every scheduling decision — admission, chunked-
-prefill token budgeting, compression planning, preemption, finish
-bookkeeping — lives in the standalone ``repro.core.scheduler.Scheduler``
-subsystem (docs/SCHEDULER.md); ``step()`` merely executes the
-:class:`~repro.core.scheduler.SchedulerOutputs` plan it produces:
-
-  * continuous batching over fixed decode slots with a shared
-    prefill+decode token budget,
-  * Compressed PagedAttention with per-request block cap N_max (§4.1/4.2),
-  * constrained + hybrid scheduling with query-slot accounting (§4.3),
-  * block-level prefix caching with compression into target blocks (§4.4),
-  * asynchronous compression: compressing requests sit out one decode step
-    and rejoin; decode of the rest is dispatched without waiting (§4.5),
-  * preemption (recompute mode) with pluggable victim order, pluggable
-    admission policies (FCFS / priority / shortest-remaining), and
-    compression-aware admission margins,
-  * per-request sampling (``SamplingParams``: temperature/top-k/top-p with
-    per-request PRNG streams, stop sequences, eos sets, logprobs),
-  * mid-flight cancellation (``abort``) returning blocks to the pool,
-  * snapshot/restore fault tolerance.
-
-This is the internal layer; the public surface is ``repro.api.Zipage``.
-
-Setting ``n_max=None`` disables compression entirely, which *is* the
-nano-vLLM baseline of the paper's comparisons (plain PagedAttention).
+Used ONLY by the old-vs-new scheduler parity test
+(tests/test_scheduler.py::test_fcfs_parity_with_legacy_engine): the
+extracted ``repro.core.scheduler.Scheduler`` with the default FCFS policy
+must reproduce this engine's token streams exactly on a mixed concurrent
+workload. Do not modify the scheduling logic here; if a future PR changes
+shared building blocks (serve_model/BlockManager/compression) in ways that
+break this copy, re-freeze it against the then-current engine and re-record
+parity. Not part of the public surface.
 """
 from __future__ import annotations
 
@@ -46,8 +27,6 @@ from repro.core.block_manager import BlockManager
 from repro.core.compression import CompressOptions, build_compress_fn
 from repro.core.request import FinishReason, Request, State
 from repro.core.sampling import SamplingParams, sample_batch
-from repro.core.scheduler import (PrefillChunk, Scheduler, SchedulerOutputs,
-                                  SchedulerParams)
 
 
 @dataclasses.dataclass(frozen=True)
@@ -66,13 +45,6 @@ class EngineOptions:
     max_model_len: int = 512
     prefill_rows: int = 4
     prefill_len: int = 128
-    # scheduler policy knobs (repro.core.scheduler / docs/SCHEDULER.md);
-    # surfaced as SchedulerConfig on the repro.api facade
-    policy: str = "fcfs"             # fcfs | priority | srpt
-    preemption: Optional[str] = None  # victim-order policy; None => policy
-    token_budget: Optional[int] = None   # prefill+decode tokens per step
-    max_prefill_chunk: Optional[int] = None  # per-request chunk cap per step
-    admission_margin: float = 0.0    # fraction of projected growth reserved
     # Deprecated: engine-global sampling knobs, kept as defaults for the
     # legacy ``submit()`` path only. New code passes a per-request
     # ``SamplingParams`` via ``add_request()`` / the ``repro.api`` facade.
@@ -88,7 +60,7 @@ class EngineOptions:
     kernel_backend: str = "auto"
 
 
-class ZipageEngine:
+class LegacyZipageEngine:
     def __init__(self, cfg: ArchConfig, params, opts: EngineOptions):
         # compression inherits the engine-wide kernel backend unless its
         # CompressOptions.backend was configured away from "auto"
@@ -115,95 +87,43 @@ class ZipageEngine:
             attn_backend=opts.kernel_backend)
         prefix_ok = (opts.prefix_caching and not cfg.attention_free
                      and not cfg.local_window and not cfg.is_enc_dec)
+        self.bm = BlockManager(opts.n_total_blocks, b,
+                               enable_prefix_cache=prefix_ok)
         self.prefix_ok = prefix_ok
-        self._ring = (self.spec.ring_blocks(cfg) if cfg.local_window else 0)
-        # the scheduling subsystem: owns queues, slot pools and the block
-        # manager; every policy decision happens in there
-        self.scheduler = Scheduler(
-            SchedulerParams(
-                block_size=b, max_batch=opts.max_batch,
-                m_qslots=opts.m_qslots, n_max=opts.n_max,
-                window=opts.window, scheduling=opts.scheduling,
-                async_compression=opts.async_compression,
-                prefill_rows=opts.prefill_rows,
-                policy=opts.policy, preemption=opts.preemption,
-                token_budget=opts.token_budget,
-                max_prefill_chunk=opts.max_prefill_chunk,
-                admission_margin=opts.admission_margin,
-                compression_enabled=self.compression_enabled,
-                budget_blocks=self.budget_blocks,
-                prefix_ok=prefix_ok, attention_free=cfg.attention_free,
-                ring_blocks=self._ring),
-            BlockManager(opts.n_total_blocks, b,
-                         enable_prefix_cache=prefix_ok))
         self.state = serve_model.make_state(cfg, self.spec)
         self._decode = jax.jit(serve_model.build_decode_step(cfg, self.spec),
                                donate_argnums=(1,))
         self._prefill = jax.jit(serve_model.build_prefill_step(cfg, self.spec),
                                 donate_argnums=(1,))
         self._compress_fns: Dict[int, callable] = {}
-        # host mirrors of the device tables (rebuilt from scheduler state
-        # before each push)
+        # host mirrors (authoritative for scheduling)
         self.host_bt = np.full((opts.max_batch, self.max_blocks), -1, np.int32)
         self.host_seq = np.zeros((opts.max_batch,), np.int32)
         self.host_pos = np.zeros((opts.max_batch,), np.int32)
         self.host_qslot = np.full((opts.max_batch,), -1, np.int32)
         self.tokens_next = np.zeros((opts.max_batch,), np.int32)
 
+        self.waiting: deque = deque()
+        self.running: List[Request] = []     # FCFS order
+        self.finished: Dict[int, Request] = {}
+        self.free_slots = list(range(opts.max_batch - 1, -1, -1))
+        self.free_qslots = list(range(opts.m_qslots - 1, -1, -1))
         self._rid = 0
         self._rng = np.random.default_rng(opts.seed)
         self._sampler = jax.jit(sample_batch)
         self.metrics: List[dict] = []
         self.step_count = 0
-
-    # ------------------------------------------------------------------
-    # scheduler views (the queues live in the scheduler; these keep the
-    # engine's historical surface for tests, the facade and embedders)
-
-    @property
-    def bm(self) -> BlockManager:
-        return self.scheduler.bm
-
-    @property
-    def waiting(self):
-        return self.scheduler.waiting
-
-    @property
-    def running(self) -> List[Request]:
-        return self.scheduler.running
-
-    @property
-    def finished(self) -> Dict[int, Request]:
-        return self.scheduler.finished
-
-    @property
-    def free_slots(self) -> List[int]:
-        return self.scheduler.free_slots
-
-    @property
-    def free_qslots(self) -> List[int]:
-        return self.scheduler.free_qslots
-
-    @property
-    def admission_scale(self) -> float:
-        return self.scheduler.admission_scale
-
-    @property
-    def _ewma(self):
-        return self.scheduler.ewma
-
-    @_ewma.setter
-    def _ewma(self, value):
-        self.scheduler.ewma = value
+        self._ring = (self.spec.ring_blocks(cfg) if cfg.local_window else 0)
+        # straggler-aware admission: EWMA of step latency vs baseline
+        self._ewma = None
+        self.admission_scale = 1.0
 
     # ------------------------------------------------------------------
     def add_request(self, prompt,
-                    sampling: Optional[SamplingParams] = None,
-                    priority: int = 0) -> int:
+                    sampling: Optional[SamplingParams] = None) -> int:
         """Enqueue a request with per-request ``SamplingParams``. This is
         the primary entry point (the ``repro.api.Zipage`` facade calls it);
-        ``submit()`` remains as a deprecated shim. ``priority`` matters
-        only under the "priority" scheduler policy (higher = first)."""
+        ``submit()`` remains as a deprecated shim."""
         if sampling is None:
             sampling = SamplingParams(temperature=self.opts.temperature,
                                       seed=self._default_seed())
@@ -211,10 +131,10 @@ class ZipageEngine:
             <= self.opts.max_model_len, "request exceeds max_model_len"
         rid = self._rid
         self._rid += 1
-        self.scheduler.add_request(Request(
+        self.waiting.append(Request(
             rid=rid, prompt=list(map(int, prompt)),
             max_new_tokens=sampling.max_new_tokens, sampling=sampling,
-            priority=priority, arrival=time.monotonic()))
+            arrival=time.monotonic()))
         return rid
 
     def _default_seed(self) -> int:
@@ -243,36 +163,157 @@ class ZipageEngine:
         the running batch, return its blocks to the pool, and record it as
         finished with reason ``"abort"``. Returns False if the rid is
         unknown or already finished."""
-        r = self.scheduler.abort(rid)
-        if r is None:
-            return False
+        for r in list(self.waiting):
+            if r.rid == rid:
+                self.waiting.remove(r)
+                break
+        else:
+            for r in self.running:
+                if r.rid == rid:
+                    self._release_slots(r)
+                    self.running.remove(r)
+                    break
+            else:
+                return False
         r.state = State.FINISHED
         r.finish_reason = FinishReason.ABORT
         r.t_finish = time.monotonic()
-        self.scheduler.finished[rid] = r
+        self.finished[rid] = r
         return True
 
     # ------------------------------------------------------------------
-    # plan execution: prefill
+    # scheduling helpers
 
-    def _run_prefill(self, chunks: Sequence[PrefillChunk]):
-        """Execute the planned prefill chunks. A chunk longer than the
-        device bucket S is fed in multiple rounds (the paged prefill step
-        is chunk-capable via start_pos — the same mechanism prefix-cache
-        hits use); only a request's *final* chunk samples its first
-        token."""
+    def _needed_blocks(self, n_tokens):
+        if self.cfg.attention_free:
+            return 0
+        if self._ring:
+            return self._ring
+        return -(-n_tokens // self.opts.block_size)
+
+    def _assign_qslots(self):
+        """Paper §4.3 rule 3: free query slots go to the foremost running
+        requests lacking one (only first M are eligible)."""
+        if not self.compression_enabled:
+            return
+        for i, r in enumerate(self.running):
+            if not self.free_qslots:
+                break
+            if i >= self.opts.m_qslots:
+                break
+            if r.qslot < 0 and r.state != State.FINISHED:
+                r.qslot = self.free_qslots.pop()
+                self.host_qslot[r.slot] = r.qslot
+                if r.state == State.BLOCKED:
+                    r.state = State.RUNNING
+
+    def _can_decode_slotless(self, r: Request) -> bool:
+        """Hybrid rule: decode without a qslot while < N_max blocks or
+        < b - w tokens in the last block."""
+        b, w = self.opts.block_size, self.opts.window
+        return (r.n_blocks < self.opts.n_max
+                or r.tokens_in_last_block(b) < b - w)
+
+    def _release_slots(self, r: Request):
+        """Return r's blocks, decode slot and query slot to their pools and
+        clear the host mirrors (shared by preempt/finish/abort)."""
+        self.bm.release(r.blocks)
+        r.blocks = []
+        if r.slot >= 0:
+            self.host_bt[r.slot] = -1
+            self.host_qslot[r.slot] = -1
+            self.free_slots.append(r.slot)
+        if r.qslot >= 0:
+            self.free_qslots.append(r.qslot)
+        r.slot = r.qslot = -1
+
+    def _preempt(self, r: Request):
+        self._release_slots(r)
+        r.compressed = False
+        r.seq_len = r.position = 0
+        r.n_cached = 0
+        r.win_count = 0
+        r.preempt_count += 1
+        r.state = State.WAITING
+        self.running.remove(r)
+        self.waiting.appendleft(r)       # front of waiting queue (§3)
+
+    def _preempt_for_blocks(self, n_needed, requester: Request) -> bool:
+        """Free blocks via preemption per §4.3/§4.4 rules. Returns success."""
+        while not self.bm.can_allocate(n_needed):
+            victim = None
+            if self.opts.scheduling == "hybrid":
+                for r in reversed(self.running):
+                    if r is requester or r.state == State.FINISHED:
+                        continue
+                    if r.qslot < 0:
+                        victim = r
+                        break
+            if victim is None and self.prefix_ok:
+                # §4.4: preempt the last *uncompressed* request
+                for r in reversed(self.running):
+                    if r is requester or r.state == State.FINISHED:
+                        continue
+                    if not r.compressed:
+                        victim = r
+                        break
+            if victim is None:
+                return False
+            self._preempt(victim)
+        return True
+
+    # ------------------------------------------------------------------
+    def _admit(self):
+        admitted = []
+        limit = max(1, int(self.opts.prefill_rows * self.admission_scale))
+        while (self.waiting and len(admitted) < limit and self.free_slots):
+            r = self.waiting[0]
+            if self.opts.scheduling == "constrained" \
+                    and self.compression_enabled and not self.free_qslots:
+                break
+            prompt = r.full_prompt
+            if self.prefix_ok:
+                shared, n_cached, chain = self.bm.lookup_prefix(prompt)
+            else:
+                shared, n_cached, chain = [], 0, []
+            n_new = self._needed_blocks(len(prompt)) - len(shared)
+            if not self.bm.can_allocate(n_new):
+                # roll back the prefix refs and stop admitting (FCFS)
+                if shared:
+                    self.bm.release(shared)
+                break
+            new_blocks = self.bm.allocate(n_new) if n_new else []
+            r.blocks = shared + new_blocks
+            r.n_cached, r.chain, r.n_shared = n_cached, chain, len(shared)
+            if self.prefix_ok and chain:
+                self.bm.register_prefix(r.blocks, chain, len(shared))
+            r.slot = self.free_slots.pop()
+            if self.compression_enabled and self.free_qslots \
+                    and len(self.running) < self.opts.m_qslots:
+                r.qslot = self.free_qslots.pop()
+            r.seq_len = (min(len(prompt), self._ring) if self._ring
+                         else (0 if self.cfg.attention_free else len(prompt)))
+            r.position = len(prompt)
+            r.state = State.RUNNING
+            self.host_bt[r.slot] = -1
+            self.host_bt[r.slot, :len(r.blocks)] = r.blocks
+            self.host_seq[r.slot] = r.seq_len
+            self.host_pos[r.slot] = r.position
+            self.host_qslot[r.slot] = r.qslot
+            self.waiting.popleft()
+            self.running.append(r)
+            admitted.append(r)
+        return admitted
+
+    def _run_prefill(self, admitted):
+        """Chunked prefill: suffixes longer than the prefill bucket are fed
+        in multiple rounds (the paged prefill step is chunk-capable via
+        start_pos — the same mechanism prefix-cache hits use)."""
         P, S = self.opts.prefill_rows, self.opts.prefill_len
-        remaining: Dict[int, List[int]] = {}
-        offset: Dict[int, int] = {}
-        final_chunk: Dict[int, bool] = {}
-        pending: List[Request] = []
-        for c in chunks:
-            r = c.request
-            remaining[r.rid] = list(r.full_prompt[c.start:c.start
-                                                  + c.n_tokens])
-            offset[r.rid] = c.start
-            final_chunk[r.rid] = c.is_final
-            pending.append(r)
+        remaining = {r.rid: list(r.full_prompt[r.n_cached:])
+                     for r in admitted}
+        offset = {r.rid: r.n_cached for r in admitted}
+        pending = list(admitted)
         while pending:
             batch = pending[:P]
             toks = np.zeros((P, S), np.int32)
@@ -293,8 +334,7 @@ class ZipageEngine:
                 start[i] = offset[r.rid]
                 remaining[r.rid] = remaining[r.rid][len(chunk):]
                 offset[r.rid] += len(chunk)
-                r.n_prefilled = offset[r.rid]
-                if not remaining[r.rid] and final_chunk[r.rid]:
+                if not remaining[r.rid]:
                     final.append((i, r, len(chunk)))
             self._push_host_state()
             logits, self.state = self._prefill(
@@ -315,8 +355,6 @@ class ZipageEngine:
             pending = still + pending[P:]
 
     # ------------------------------------------------------------------
-    # plan execution: compression
-
     def _compress_fn(self, n):
         if n not in self._compress_fns:
             fn = build_compress_fn(
@@ -326,12 +364,59 @@ class ZipageEngine:
             self._compress_fns[n] = jax.jit(fn)
         return self._compress_fns[n]
 
-    def _launch_compression(self, outs: SchedulerOutputs):
-        """Dispatch the compression kernel over the planned launches, then
-        let the scheduler commit the (deterministic) host bookkeeping."""
-        planned = outs.compress
+    def _detect_compression(self):
+        if not self.compression_enabled:
+            return []
+        b = self.opts.block_size
+        out = []
+        for r in self.running:
+            if (r.state in (State.RUNNING, State.BLOCKED) and r.qslot >= 0
+                    and r.n_blocks >= self.opts.n_max
+                    and r.seq_len == r.n_blocks * b
+                    and r.win_count >= self.opts.window):
+                out.append(r)
+        return out
+
+    def _plan_compression(self, comp):
+        """Choose destination blocks (§4.4) and handle allocation pressure.
+        Returns list of (request, dest_blocks, reserved_block, to_release)."""
+        planned = []
+        nb = self.budget_blocks
+        for r in comp:
+            shared_idx = [i for i, blk in enumerate(r.blocks)
+                          if self.bm.is_shared(blk)]
+            n_prefix = len(shared_idx)
+            need = 0
+            if n_prefix:
+                need = min(n_prefix, nb)
+                if self.bm.is_shared(r.blocks[min(nb, r.n_blocks - 1)]):
+                    need += 1                      # reserved must be fresh too
+            if need and not self.bm.can_allocate(need):
+                if not self._preempt_for_blocks(need, r):
+                    r.state = State.BLOCKED        # retry next step
+                    continue
+            if n_prefix == 0:
+                dest = r.blocks[:nb]
+                reserved = r.blocks[nb]
+                release = r.blocks[nb + 1:]
+            else:
+                fresh = self.bm.allocate(min(n_prefix, nb))
+                dest = fresh + r.blocks[n_prefix:][:nb - len(fresh)]
+                if self.bm.is_shared(r.blocks[min(nb, r.n_blocks - 1)]):
+                    reserved = self.bm.allocate(1)[0]
+                    keep = set(dest) | {reserved}
+                    release = [blk for blk in r.blocks if blk not in keep]
+                else:
+                    reserved = r.blocks[nb] if len(r.blocks) > nb else \
+                        self.bm.allocate(1)[0]
+                    keep = set(dest) | {reserved}
+                    release = [blk for blk in r.blocks if blk not in keep]
+            planned.append((r, dest, reserved, release))
+        return planned
+
+    def _launch_compression(self, planned):
         if not planned:
-            return
+            return None
         n = 1
         while n < len(planned):
             n *= 2
@@ -340,10 +425,9 @@ class ZipageEngine:
         qslots = np.full((n,), -1, np.int32)
         seq_lens = np.zeros((n,), np.int32)
         hist = np.zeros((n,), np.int32)
-        for i, c in enumerate(planned):
-            r = c.request
+        for i, (r, dest, _res, _rel) in enumerate(planned):
             src_bt[i, :r.n_blocks] = r.blocks
-            dest_bt[i] = c.dest
+            dest_bt[i] = dest
             qslots[i] = r.qslot
             seq_lens[i] = r.seq_len
             hist[i] = self.budget_blocks * self.opts.block_size \
@@ -353,25 +437,74 @@ class ZipageEngine:
                jnp.asarray(seq_lens), jnp.asarray(hist))
         new_pools, _ = self._compress_fn(n)(pools, self.state["qwin"], req)
         self.state["pools"] = new_pools
-        self.scheduler.commit_compression(outs)
-        if self.opts.measure_phases or not self.opts.async_compression:
-            jax.block_until_ready(self.state["pools"])
+        # host bookkeeping is deterministic — apply immediately
+        k = self.budget_blocks * self.opts.block_size
+        for r, dest, reserved, release in planned:
+            shared_released = [blk for blk in release if self.bm.ref[blk] > 1]
+            self.bm.release(release)
+            r.n_compressions += 1
+            r.comp_blocks_freed += len(release) - len(shared_released)
+            r.blocks = list(dest) + [reserved]
+            r.seq_len = k
+            r.compressed = True
+            r.n_shared = 0
+            self.host_bt[r.slot] = -1
+            self.host_bt[r.slot, :len(r.blocks)] = r.blocks
+            self.host_seq[r.slot] = r.seq_len
+            if self.opts.async_compression:
+                r.state = State.COMPRESSING     # sits out this decode step
+        return new_pools
 
     # ------------------------------------------------------------------
-    # plan execution: decode
+    def _prepare_decode(self):
+        """Ensure every decodable request has room for one token; apply
+        blocking/preemption rules. Returns the active list."""
+        b = self.opts.block_size
+        active = []
+        for r in list(self.running):
+            if r.state == State.COMPRESSING:
+                continue
+            if r.done():
+                # already terminated (eos/stop on the prefill-sampled
+                # token); decoding again would bury the match under a
+                # second token before _finish sees it
+                continue
+            if r.state == State.BLOCKED:
+                r.state = State.RUNNING          # retry below
+            if r not in self.running:            # got preempted this step
+                continue
+            if self.cfg.attention_free:
+                active.append(r)
+                continue
+            if self._ring:
+                active.append(r)
+                continue
+            # hybrid slotless boundary rule
+            if (self.compression_enabled and r.qslot < 0
+                    and not self._can_decode_slotless(r)):
+                r.state = State.BLOCKED
+                continue
+            if r.seq_len == r.n_blocks * b:      # last block full
+                if (self.compression_enabled and r.qslot >= 0
+                        and r.n_blocks >= self.opts.n_max
+                        and r.win_count >= self.opts.window):
+                    # compression will handle it (was detected this step or
+                    # will be next step); skip decode if it somehow races
+                    r.state = State.BLOCKED
+                    continue
+                ok = self.bm.can_allocate(1) or \
+                    self._preempt_for_blocks(1, r)
+                if not ok or r not in self.running:
+                    if r in self.running:
+                        r.state = State.BLOCKED
+                    continue
+                blk = self.bm.allocate(1)[0]
+                r.blocks.append(blk)
+                self.host_bt[r.slot, r.n_blocks - 1] = blk
+            active.append(r)
+        return [r for r in active if r in self.running]
 
     def _push_host_state(self):
-        """Rebuild the host mirrors from scheduler-owned request state and
-        push them to the device tables."""
-        self.host_bt.fill(-1)
-        self.host_qslot.fill(-1)
-        for r in self.scheduler.running:
-            if r.slot < 0:
-                continue
-            self.host_bt[r.slot, :r.n_blocks] = r.blocks
-            self.host_seq[r.slot] = r.seq_len
-            self.host_pos[r.slot] = r.position
-            self.host_qslot[r.slot] = r.qslot
         self.state["block_tables"] = jnp.asarray(self.host_bt)
         self.state["seq_lens"] = jnp.asarray(self.host_seq)
         self.state["positions"] = jnp.asarray(self.host_pos)
@@ -443,57 +576,81 @@ class ZipageEngine:
             self.host_seq[r.slot] = r.seq_len
             self.host_pos[r.slot] = r.position
 
+    def _finish(self):
+        for r in list(self.running):
+            if r.state != State.COMPRESSING \
+                    and (reason := r.check_finish()) is not None:
+                r.finish_reason = reason
+                r.truncate_stop()
+                self._release_slots(r)
+                r.state = State.FINISHED
+                r.t_finish = time.monotonic()
+                self.running.remove(r)
+                self.finished[r.rid] = r
+
     # ------------------------------------------------------------------
     def step(self):
-        """One serving step: ask the scheduler for a plan, execute it.
-        All admission/preemption/compression-planning decisions are the
-        scheduler's (repro.core.scheduler); this loop only sequences the
-        device work."""
         t0 = time.monotonic()
         self.step_count += 1
-        plan = self.scheduler.schedule(self.step_count)
+        self._assign_qslots()
+        admitted = self._admit()
         t_admit = time.monotonic()
-        if plan.prefill_chunks:
-            self._run_prefill(plan.prefill_chunks)
+        if admitted:
+            self._run_prefill(admitted)
             if self.opts.measure_phases:
                 jax.block_until_ready(self.state["pools"]
                                       if "pools" in self.state
                                       else self.state["rec"])
         t_prefill = time.monotonic()
-        self.scheduler.plan_compression(plan)
-        self._launch_compression(plan)
+        comp = self._detect_compression()
+        planned = self._plan_compression(comp) if comp else []
+        self._launch_compression(planned)
+        if planned and (self.opts.measure_phases
+                        or not self.opts.async_compression):
+            jax.block_until_ready(self.state["pools"])
+            if not self.opts.async_compression:
+                for r, *_ in planned:
+                    r.state = State.RUNNING      # decode this very step
         t_comp = time.monotonic()
-        active = self.scheduler.schedule_decode(plan)
+        active = self._prepare_decode()
         self._run_decode(active)
         if self.opts.measure_phases:
             jax.block_until_ready(self.state["pools"]
                                   if "pools" in self.state
                                   else self.state["rec"])
         t_dec = time.monotonic()
-        self.scheduler.end_step(plan)
+        # async-compressed requests rejoin next step
+        for r in self.running:
+            if r.state == State.COMPRESSING:
+                r.state = State.RUNNING
+        self._finish()
         used = self.opts.n_total_blocks - self.bm.num_free
-        entry = {
+        self.metrics.append({
             "step": self.step_count,
             "t_total": t_dec - t0,
             "t_prefill": t_prefill - t_admit,
             "t_compress": t_comp - t_prefill,
             "t_decode": t_dec - t_comp,
-            "n_running": len(self.scheduler.running),
-            "n_waiting": len(self.scheduler.waiting),
+            "n_running": len(self.running),
+            "n_waiting": len(self.waiting),
             "n_active": len(active),
-            "n_compressing": len(plan.compress),
-            "n_prefilled": len(plan.admitted),
+            "n_compressing": len(planned),
+            "n_prefilled": len(admitted),
             "block_util": used / self.opts.n_total_blocks,
-            "tokens": len(active) + len(plan.admitted),
-        }
-        entry.update(self.scheduler.stats(plan))
-        self.metrics.append(entry)
-        self.scheduler.observe_latency(t_dec - t0)
+            "tokens": len(active) + len(admitted),
+        })
+        # straggler-aware admission: back off when step latency inflates
+        dt = t_dec - t0
+        self._ewma = dt if self._ewma is None else 0.9 * self._ewma + 0.1 * dt
+        if self._ewma > 0 and dt > 3.0 * self._ewma:
+            self.admission_scale = max(0.25, self.admission_scale * 0.5)
+        else:
+            self.admission_scale = min(1.0, self.admission_scale * 1.1)
 
     def run(self, max_steps=10_000):
-        while self.scheduler.has_work() and self.step_count < max_steps:
+        while (self.waiting or self.running) and self.step_count < max_steps:
             self.step()
-        return {r.rid: r for r in self.scheduler.finished.values()}
+        return {r.rid: r for r in self.finished.values()}
 
     # ------------------------------------------------------------------
     # fault tolerance: full engine snapshot/restore
@@ -507,16 +664,14 @@ class ZipageEngine:
                 "bt": self.host_bt, "seq": self.host_seq,
                 "pos": self.host_pos, "qslot": self.host_qslot,
                 "tokens_next": self.tokens_next,
-                "free_slots": self.scheduler.free_slots,
-                "free_qslots": self.scheduler.free_qslots,
+                "free_slots": self.free_slots,
+                "free_qslots": self.free_qslots,
                 "rid": self._rid, "step": self.step_count,
-                "admission_scale": self.scheduler.admission_scale,
-                "ewma": self.scheduler.ewma,
             }),
             "requests": copy.deepcopy({
-                "waiting": list(self.scheduler.waiting),
-                "running": self.scheduler.running,
-                "finished": self.scheduler.finished,
+                "waiting": list(self.waiting),
+                "running": self.running,
+                "finished": self.finished,
             }),
             "bm": copy.deepcopy(self.bm),
         }
@@ -529,13 +684,10 @@ class ZipageEngine:
         self.host_bt, self.host_seq = h["bt"], h["seq"]
         self.host_pos, self.host_qslot = h["pos"], h["qslot"]
         self.tokens_next = h["tokens_next"]
-        sched = self.scheduler
-        sched.free_slots, sched.free_qslots = h["free_slots"], h["free_qslots"]
-        sched.admission_scale = h.get("admission_scale", 1.0)
-        sched.ewma = h.get("ewma")
+        self.free_slots, self.free_qslots = h["free_slots"], h["free_qslots"]
         self._rid, self.step_count = h["rid"], h["step"]
         r = copy.deepcopy(snap["requests"])
-        sched.waiting = deque(r["waiting"])
-        sched.running = r["running"]
-        sched.finished = r["finished"]
-        sched.bm = copy.deepcopy(snap["bm"])
+        self.waiting = deque(r["waiting"])
+        self.running = r["running"]
+        self.finished = r["finished"]
+        self.bm = copy.deepcopy(snap["bm"])

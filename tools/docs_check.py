@@ -1,0 +1,83 @@
+#!/usr/bin/env python
+"""Documentation consistency checks (``make docs-check``, run in CI).
+
+Two gates:
+
+  1. every intra-repo markdown link in README.md / ROADMAP.md / docs/*.md
+     resolves to an existing file (anchors are stripped; external URLs and
+     the OWNER/REPO badge placeholders are ignored);
+  2. every public field of ``SchedulerConfig`` and ``CacheConfig``
+     (repro.api.config) is mentioned by name somewhere in the docs, so
+     config knobs cannot silently drift out of the documentation again
+     (docs/API.md once described SchedulerConfig as a pass-through bag).
+
+Exits non-zero listing every violation. Stdlib + repro only.
+"""
+from __future__ import annotations
+
+import dataclasses
+import re
+import sys
+from pathlib import Path
+
+REPO = Path(__file__).resolve().parent.parent
+DOC_FILES = sorted([REPO / "README.md", REPO / "ROADMAP.md",
+                    *(REPO / "docs").glob("*.md")])
+
+LINK_RE = re.compile(r"\[[^\]]*\]\(([^)\s]+)\)")
+
+
+def check_links() -> list:
+    errors = []
+    for md in DOC_FILES:
+        if not md.exists():
+            errors.append(f"{md.relative_to(REPO)}: file missing")
+            continue
+        for n, line in enumerate(md.read_text().splitlines(), 1):
+            for target in LINK_RE.findall(line):
+                if target.startswith(("http://", "https://", "mailto:")):
+                    continue
+                path = target.split("#", 1)[0]
+                if not path:            # pure in-page anchor
+                    continue
+                resolved = (md.parent / path).resolve()
+                if not resolved.exists():
+                    errors.append(
+                        f"{md.relative_to(REPO)}:{n}: broken link "
+                        f"-> {target}")
+    return errors
+
+
+def check_config_fields() -> list:
+    sys.path.insert(0, str(REPO / "src"))
+    from repro.api.config import CacheConfig, SchedulerConfig
+
+    corpus = "\n".join(md.read_text() for md in DOC_FILES if md.exists())
+    errors = []
+    for cfg in (SchedulerConfig, CacheConfig):
+        for f in dataclasses.fields(cfg):
+            # fields are documented as `name` (markdown code spans)
+            if f"`{f.name}`" not in corpus:
+                errors.append(
+                    f"{cfg.__name__}.{f.name} is not documented in "
+                    "README.md / ROADMAP.md / docs/*.md "
+                    "(expected a `"f"{f.name}"r"` code span)")
+    return errors
+
+
+def main() -> int:
+    errors = check_links() + check_config_fields()
+    for e in errors:
+        print(f"docs-check: {e}", file=sys.stderr)
+    if errors:
+        print(f"docs-check: {len(errors)} problem(s)", file=sys.stderr)
+        return 1
+    n_links = sum(len(LINK_RE.findall(md.read_text()))
+                  for md in DOC_FILES if md.exists())
+    print(f"docs-check: OK ({len(DOC_FILES)} files, {n_links} links, "
+          "all SchedulerConfig/CacheConfig fields documented)")
+    return 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())
