@@ -2,7 +2,7 @@ PYTHON ?= python
 export PYTHONPATH := src$(if $(PYTHONPATH),:$(PYTHONPATH))
 
 .PHONY: test test-fast lint docs-check quickstart bench bench-kernels \
-	bench-concurrency install-dev
+	bench-concurrency bench-trend install-dev
 
 # tier-1 verify (ROADMAP.md). Local default is fail-fast; CI overrides
 # PYTEST_ARGS (e.g. --junitxml=...) and drops -x so junit reports are
@@ -39,6 +39,13 @@ bench-kernels:
 # JSON as the per-PR concurrency trajectory artifact
 bench-concurrency:
 	$(PYTHON) -m benchmarks.bench_concurrency --smoke --out bench-concurrency-smoke.json
+
+# accumulate bench-smoke artifacts (oldest first) into BENCH_TREND.md and
+# fail on a >25% decode-throughput regression vs the previous point. Drop
+# downloaded per-PR artifacts into bench-history/ to grow the trajectory.
+BENCH_TREND_FILES ?= $(sort $(wildcard bench-history/*concurrency*.json)) bench-concurrency-smoke.json
+bench-trend:
+	$(PYTHON) tools/bench_trend.py $(BENCH_TREND_FILES) --out BENCH_TREND.md
 
 install-dev:
 	pip install -r requirements-dev.txt

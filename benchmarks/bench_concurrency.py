@@ -9,14 +9,21 @@ Usable two ways:
     — JSON for the per-PR concurrency trajectory (CI's bench-smoke
     artifact), same envelope as ``bench_kernels.py``:
 
-      {"schema": "zipage-bench-concurrency/v1", "jax": ..., "platform": ...,
+      {"schema": "zipage-bench-concurrency/v2", "jax": ..., "platform": ...,
        "smoke": bool, "results": [{"name", "tps", "tokens", "steps",
        "tokens_per_step", "mean_concurrency", "p50_concurrency",
        "max_concurrency", "frac_steps_conc_ge12", "tpot_ms", "block_util",
-       "compressions", "preemptions", "wall_s"}, ...],
+       "compressions", "preemptions", "t_host_ms", "t_device_ms",
+       "mean_decode_horizon", "wall_s"}, ...],
        "speedup_tps_zipage_vs_nano": float}
 
+    v2 adds the per-step host/device time split (``t_host_ms`` is host
+    planning+bookkeeping, ``t_device_ms`` is blocked-on-device; means per
+    step) and the mean fused decode horizon (docs/PERF.md).
+
 ``--smoke`` shrinks the request count so the job stays in CI budget.
+``tools/bench_trend.py`` accumulates these JSONs across PRs and gates on
+decode-throughput regressions (``make bench-trend``).
 """
 import argparse
 import json
@@ -38,7 +45,10 @@ def _measure(n_requests):
 
 
 def _row(name, r):
-    conc = np.array([m["n_running"] for m in r["engine"].metrics])
+    metrics = r["engine"].metrics
+    conc = np.array([m["n_running"] for m in metrics])
+    horizons = [m["decode_horizon"] for m in metrics
+                if m.get("decode_horizon", 0) > 0]
     return {
         "name": name,
         "tps": round(r["tps"], 2),
@@ -53,7 +63,13 @@ def _row(name, r):
         "block_util": round(r["block_util"], 3),
         "compressions": r["compressions"],
         "preemptions": int(sum(m.get("n_preempted", 0)
-                               for m in r["engine"].metrics)),
+                               for m in metrics)),
+        "t_host_ms": round(1e3 * float(np.mean(
+            [m["t_host"] for m in metrics])), 3),
+        "t_device_ms": round(1e3 * float(np.mean(
+            [m["t_device"] for m in metrics])), 3),
+        "mean_decode_horizon": round(float(np.mean(horizons)), 2)
+        if horizons else 0.0,
         "wall_s": round(r["wall_s"], 3),
     }
 
@@ -87,7 +103,7 @@ def main(argv=None):
     results = {name: _row(name, r)
                for name, r in _measure(8 if args.smoke else 24)}
     report = {
-        "schema": "zipage-bench-concurrency/v1",
+        "schema": "zipage-bench-concurrency/v2",
         "jax": jax.__version__,
         "platform": jax.default_backend(),
         "smoke": args.smoke,

@@ -64,7 +64,10 @@ DEFAULT_ENGINE = dict(
     block_size=8, n_total_blocks=72, max_batch=32, m_qslots=16, n_max=4,
     window=4, scheduling="hybrid", prefix_caching=True,
     async_compression=True, max_model_len=512, prefill_rows=4,
-    prefill_len=64)
+    prefill_len=64,
+    # decode hot path (docs/PERF.md): fused on-device sampling + up to 8
+    # decode steps per dispatch within the scheduler's quiescent horizon
+    fuse_sampling=True, decode_steps=8)
 
 
 def run_engine(reqs, params=None, **overrides):

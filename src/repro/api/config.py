@@ -79,6 +79,14 @@ class ModelRunnerConfig:
     # "pallas-interpret" forces the Pallas kernels through the interpreter
     # (CPU correctness path — slow, never auto-selected)
     kernel_backend: str = "auto"
+    # decode hot path (docs/PERF.md): fuse_sampling runs the per-slot
+    # sampler inside the jitted decode step (tokens never leave the
+    # device between steps); decode_steps > 1 additionally runs up to
+    # that many decode+sample iterations per dispatch, bounded by the
+    # scheduler's quiescent horizon. decode_steps > 1 requires
+    # fuse_sampling; token streams are identical either way.
+    fuse_sampling: bool = True
+    decode_steps: int = 1
 
 
 _CONFIG_TYPES = (CacheConfig, SchedulerConfig, ModelRunnerConfig)
@@ -152,4 +160,6 @@ def build_engine_options(cache: CacheConfig, scheduler: SchedulerConfig,
         dtype=runner.dtype,
         layer_stride=runner.layer_stride,
         measure_phases=runner.measure_phases,
-        kernel_backend=runner.kernel_backend)
+        kernel_backend=runner.kernel_backend,
+        fuse_sampling=runner.fuse_sampling,
+        decode_steps=runner.decode_steps)

@@ -202,7 +202,8 @@ class Zipage:
             "policy", "n_admitted", "n_preempted", "n_blocked",
             "n_finished", "n_prefill_tokens", "n_scheduled_tokens",
             "token_budget", "budget_util", "free_blocks",
-            "admission_scale") if k in m}
+            "admission_scale", "t_host", "t_device",
+            "decode_horizon") if k in m}
 
     @property
     def step_count(self) -> int:

@@ -49,6 +49,59 @@ from repro.core.sampling import SamplingParams, sample_batch
 from repro.core.scheduler import (PrefillChunk, Scheduler, SchedulerOutputs,
                                   SchedulerParams)
 
+# compiled compression executables shared across engines with identical
+# (arch, serve-spec, compress-options, bucket) signatures, so warming the
+# n ∈ {1, 2, 4} buckets at engine init (ISSUE 4 satellite) costs one
+# compile per unique configuration per process, not one per engine
+_COMPRESS_CACHE: Dict[tuple, callable] = {}
+
+# fused decode+sample steps (docs/PERF.md), likewise shared per
+# (arch, serve-spec, chunk-length): the jit objects (and the XLA
+# executables they cache) are reused across engines, so warming at init
+# compiles each chunk length once per process
+_FUSED_CACHE: Dict[tuple, callable] = {}
+
+# prefill / unfused-decode jits shared per (kind, arch, serve-spec) — the
+# step builders are pure functions of (cfg, spec), so engines with the
+# same signature reuse one jit object instead of recompiling
+_STEP_CACHE: Dict[tuple, callable] = {}
+
+_SAMPLER = None      # module-wide jit of sampling.sample_batch
+
+
+def _cached_step(kind: str, cfg, spec):
+    key = (kind, cfg, spec)
+    fn = _STEP_CACHE.get(key)
+    if fn is None:
+        build = (serve_model.build_prefill_step if kind == "prefill"
+                 else serve_model.build_decode_step)
+        fn = jax.jit(build(cfg, spec), donate_argnums=(1,))
+        _STEP_CACHE[key] = fn
+    return fn
+
+
+def _sampler_jit():
+    global _SAMPLER
+    if _SAMPLER is None:
+        _SAMPLER = jax.jit(sample_batch)
+    return _SAMPLER
+
+
+def _fused_chunk_sizes(k: int) -> List[int]:
+    """Decompose a horizon into power-of-two dispatch lengths
+    (largest-first), so only O(log decode_steps) scan lengths are ever
+    compiled; a single big chunk is split in half so the token fetch for
+    chunk N can overlap chunk N+1's compute (pipelined fetch)."""
+    sizes = []
+    rem = k
+    while rem:
+        p = 1 << (rem.bit_length() - 1)
+        sizes.append(p)
+        rem -= p
+    if len(sizes) == 1 and k >= 4:
+        sizes = [k // 2, k // 2]
+    return sizes
+
 
 @dataclasses.dataclass(frozen=True)
 class EngineOptions:
@@ -73,6 +126,14 @@ class EngineOptions:
     token_budget: Optional[int] = None   # prefill+decode tokens per step
     max_prefill_chunk: Optional[int] = None  # per-request chunk cap per step
     admission_margin: float = 0.0    # fraction of projected growth reserved
+    # decode hot-path knobs (docs/PERF.md; ModelRunnerConfig on the facade):
+    # fuse_sampling runs the per-slot sampler inside the jitted decode step
+    # (no (B, V) logits materialisation, tokens stay on device);
+    # decode_steps > 1 additionally runs up to that many decode+sample
+    # iterations per dispatch (lax.scan) within the scheduler's
+    # quiescent_horizon(). decode_steps > 1 requires fuse_sampling.
+    fuse_sampling: bool = True
+    decode_steps: int = 1
     # Deprecated: engine-global sampling knobs, kept as defaults for the
     # legacy ``submit()`` path only. New code passes a per-request
     # ``SamplingParams`` via ``add_request()`` / the ``repro.api`` facade.
@@ -113,6 +174,8 @@ class ZipageEngine:
             window=opts.window, prefill_rows=opts.prefill_rows,
             prefill_len=opts.prefill_len, dtype=opts.dtype,
             attn_backend=opts.kernel_backend)
+        if opts.decode_steps > 1 and not opts.fuse_sampling:
+            raise ValueError("decode_steps > 1 requires fuse_sampling")
         prefix_ok = (opts.prefix_caching and not cfg.attention_free
                      and not cfg.local_window and not cfg.is_enc_dec)
         self.prefix_ok = prefix_ok
@@ -130,6 +193,7 @@ class ZipageEngine:
                 token_budget=opts.token_budget,
                 max_prefill_chunk=opts.max_prefill_chunk,
                 admission_margin=opts.admission_margin,
+                decode_steps=opts.decode_steps,
                 compression_enabled=self.compression_enabled,
                 budget_blocks=self.budget_blocks,
                 prefix_ok=prefix_ok, attention_free=cfg.attention_free,
@@ -137,11 +201,20 @@ class ZipageEngine:
             BlockManager(opts.n_total_blocks, b,
                          enable_prefix_cache=prefix_ok))
         self.state = serve_model.make_state(cfg, self.spec)
-        self._decode = jax.jit(serve_model.build_decode_step(cfg, self.spec),
-                               donate_argnums=(1,))
-        self._prefill = jax.jit(serve_model.build_prefill_step(cfg, self.spec),
-                                donate_argnums=(1,))
+        # fused-decode device state (docs/PERF.md): the next input token,
+        # the per-slot live mask and the per-slot PRNG counter live on
+        # device so consecutive fused dispatches chain without a host
+        # round-trip. Present in both modes so snapshots are
+        # mode-portable; the unfused path simply never reads them.
+        self.state["tokens_next"] = jnp.zeros((opts.max_batch,), jnp.int32)
+        self.state["active_mask"] = jnp.zeros((opts.max_batch,), bool)
+        self.state["sample_counters"] = jnp.zeros((opts.max_batch,),
+                                                  jnp.int32)
+        self._decode = _cached_step("decode", cfg, self.spec)
+        self._prefill = _cached_step("prefill", cfg, self.spec)
+        self._fused_fns: Dict[int, callable] = {}
         self._compress_fns: Dict[int, callable] = {}
+        self._comp_bufs: Dict[int, tuple] = {}
         # host mirrors of the device tables (rebuilt from scheduler state
         # before each push)
         self.host_bt = np.full((opts.max_batch, self.max_blocks), -1, np.int32)
@@ -149,12 +222,31 @@ class ZipageEngine:
         self.host_pos = np.zeros((opts.max_batch,), np.int32)
         self.host_qslot = np.full((opts.max_batch,), -1, np.int32)
         self.tokens_next = np.zeros((opts.max_batch,), np.int32)
+        # dirty tracking: device tables are re-pushed only when the
+        # scheduler's state version moved past what was last uploaded;
+        # sampling-state mirrors track what the fused path believes lives
+        # on device (None = unknown -> full push)
+        self._pushed_version = -1
+        self._tokens_dirty = True
+        self._dev_mask: Optional[np.ndarray] = None
+        self._dev_counters: Optional[np.ndarray] = None
+        self._samp_version = -1
+        self._samp_arrays = None
+        self._eos_width = 1
+        self._t_blocked = 0.0
+        self._step_decoded = 0
+        self._last_horizon = 0
 
         self._rid = 0
         self._rng = np.random.default_rng(opts.seed)
-        self._sampler = jax.jit(sample_batch)
+        self._sampler = _sampler_jit()
         self.metrics: List[dict] = []
         self.step_count = 0
+        if self.compression_enabled:
+            self._warm_compression()
+        if opts.fuse_sampling:
+            self._warm_fused()
+        self._warm_prefill()
 
     # ------------------------------------------------------------------
     # scheduler views (the queues live in the scheduler; these keep the
@@ -301,30 +393,79 @@ class ZipageEngine:
                 self.params, self.state, jnp.asarray(toks),
                 jnp.asarray(slot_ids), jnp.asarray(lengths),
                 jnp.asarray(start), **kw)
-            # only rows finishing their last chunk consume a sample
-            row_reqs: List[Optional[Request]] = [None] * P
-            for i, r, _n in final:
-                row_reqs[i] = r
-            tok, lp = self._sample_rows(logits, row_reqs)
-            for i, r, chunk_len in final:
-                self.tokens_next[r.slot] = tok[i]
-                self._record_token(r, tok[i], None if lp is None else lp[i])
-                if r.qslot >= 0:
-                    r.win_count = min(self.opts.window, chunk_len)
+            # only rows finishing their last chunk consume a sample; with
+            # no final rows this round, skip sampling entirely — no
+            # argmax dispatch, no host sync (ISSUE 4 satellite)
+            if final:
+                row_reqs: List[Optional[Request]] = [None] * P
+                for i, r, _n in final:
+                    row_reqs[i] = r
+                tok, lp = self._sample_rows(logits, row_reqs)
+                for i, r, chunk_len in final:
+                    self.tokens_next[r.slot] = tok[i]
+                    self._tokens_dirty = True
+                    self._record_token(r, tok[i],
+                                       None if lp is None else lp[i])
+                    if r.qslot >= 0:
+                        r.win_count = min(self.opts.window, chunk_len)
             still = [r for r in batch if remaining[r.rid]]
             pending = still + pending[P:]
 
     # ------------------------------------------------------------------
     # plan execution: compression
 
+    def _comp_buffers(self, n):
+        """Pre-allocated padded host buffers for a bucket-``n`` launch
+        (re-filled with defaults on reuse — cheap next to a realloc)."""
+        bufs = self._comp_bufs.get(n)
+        if bufs is None:
+            bufs = (np.full((n, self.max_blocks), -1, np.int32),
+                    np.full((n, self.budget_blocks), -1, np.int32),
+                    np.full((n,), -1, np.int32),
+                    np.zeros((n,), np.int32),
+                    np.zeros((n,), np.int32))
+            self._comp_bufs[n] = bufs
+        else:
+            src_bt, dest_bt, qslots, seq_lens, hist = bufs
+            src_bt.fill(-1)
+            dest_bt.fill(-1)
+            qslots.fill(-1)
+            seq_lens.fill(0)
+            hist.fill(0)
+        return bufs
+
     def _compress_fn(self, n):
-        if n not in self._compress_fns:
-            fn = build_compress_fn(
+        """Compiled compression executable for bucket size ``n``, shared
+        process-wide across engines with the same signature."""
+        fn = self._compress_fns.get(n)
+        if fn is not None:
+            return fn
+        key = (self.cfg, self.spec, self.opts.compress,
+               self.budget_blocks, n)
+        fn = _COMPRESS_CACHE.get(key)
+        if fn is None:
+            jitted = jax.jit(build_compress_fn(
                 self.cfg, block_size=self.opts.block_size,
                 max_blocks=self.max_blocks,
-                budget_blocks=self.budget_blocks, opts=self.opts.compress)
-            self._compress_fns[n] = jax.jit(fn)
-        return self._compress_fns[n]
+                budget_blocks=self.budget_blocks, opts=self.opts.compress))
+            try:
+                sds = lambda x: jax.ShapeDtypeStruct(x.shape, x.dtype)  # noqa: E731
+                req = tuple(sds(a) for a in self._comp_buffers(n))
+                fn = jitted.lower(jax.tree.map(sds, self.state["pools"]),
+                                  sds(self.state["qwin"]), req).compile()
+            except Exception:        # pragma: no cover - jax-version drift
+                fn = jitted          # fall back to compile-on-first-call
+            _COMPRESS_CACHE[key] = fn
+        self._compress_fns[n] = fn
+        return fn
+
+    def _warm_compression(self):
+        """Compile the n ∈ {1, 2, 4} compression buckets (and allocate
+        their padded host buffers) before serving starts, so the first
+        compression-bearing steps don't stall mid-serve on trace+compile."""
+        for n in (1, 2, 4):
+            if n <= max(1, self.opts.m_qslots):
+                self._compress_fn(n)
 
     def _launch_compression(self, outs: SchedulerOutputs):
         """Dispatch the compression kernel over the planned launches, then
@@ -335,11 +476,7 @@ class ZipageEngine:
         n = 1
         while n < len(planned):
             n *= 2
-        src_bt = np.full((n, self.max_blocks), -1, np.int32)
-        dest_bt = np.full((n, self.budget_blocks), -1, np.int32)
-        qslots = np.full((n,), -1, np.int32)
-        seq_lens = np.zeros((n,), np.int32)
-        hist = np.zeros((n,), np.int32)
+        src_bt, dest_bt, qslots, seq_lens, hist = self._comp_buffers(n)
         for i, c in enumerate(planned):
             r = c.request
             src_bt[i, :r.n_blocks] = r.blocks
@@ -355,14 +492,33 @@ class ZipageEngine:
         self.state["pools"] = new_pools
         self.scheduler.commit_compression(outs)
         if self.opts.measure_phases or not self.opts.async_compression:
-            jax.block_until_ready(self.state["pools"])
+            self._block_ready(self.state["pools"])
 
     # ------------------------------------------------------------------
     # plan execution: decode
 
-    def _push_host_state(self):
+    def _fetch(self, x):
+        """Device->host read; the wait is counted as blocked-on-device time
+        (the ``t_device`` share of the per-step metrics)."""
+        t = time.monotonic()
+        out = jax.device_get(x)
+        self._t_blocked += time.monotonic() - t
+        return out
+
+    def _block_ready(self, x):
+        t = time.monotonic()
+        jax.block_until_ready(x)
+        self._t_blocked += time.monotonic() - t
+
+    def _push_host_state(self, force: bool = False):
         """Rebuild the host mirrors from scheduler-owned request state and
-        push them to the device tables."""
+        push them to the device tables — but only when the scheduler's
+        state version moved past what was last uploaded. Decode itself
+        advances ``seq_lens``/``positions`` on device, so steady decode
+        streaks push nothing at all (docs/PERF.md)."""
+        v = self.scheduler.version
+        if not force and v == self._pushed_version:
+            return
         self.host_bt.fill(-1)
         self.host_qslot.fill(-1)
         for r in self.scheduler.running:
@@ -376,6 +532,7 @@ class ZipageEngine:
         self.state["seq_lens"] = jnp.asarray(self.host_seq)
         self.state["positions"] = jnp.asarray(self.host_pos)
         self.state["qslot"] = jnp.asarray(self.host_qslot)
+        self._pushed_version = v
 
     def _sample_rows(self, logits, reqs: Sequence[Optional[Request]]):
         """Sample one token per row; ``reqs[i]`` is the request occupying
@@ -388,7 +545,7 @@ class ZipageEngine:
         if not any(r is not None and (not r.sampling.is_greedy
                                       or r.sampling.logprobs)
                    for r in reqs):
-            return np.asarray(jnp.argmax(logits, -1)), None
+            return self._fetch(jnp.argmax(logits, -1)), None
         n = logits.shape[0]
         seeds = np.zeros((n,), np.uint32)
         counters = np.zeros((n,), np.int32)
@@ -407,7 +564,7 @@ class ZipageEngine:
         tok, lp = self._sampler(
             logits, jnp.asarray(seeds), jnp.asarray(counters),
             jnp.asarray(temps), jnp.asarray(top_k), jnp.asarray(top_p))
-        return np.asarray(tok), np.asarray(lp)
+        return self._fetch((tok, lp))
 
     @staticmethod
     def _record_token(r: Request, tok: int, lp) -> None:
@@ -416,6 +573,18 @@ class ZipageEngine:
             r.logprobs.append(float(lp))
         if r.t_first_token is None:
             r.t_first_token = time.monotonic()
+
+    def _advance_decoded(self, r: Request) -> None:
+        """Per-token host bookkeeping shared by the fused and unfused
+        decode paths (cache-length / position / window counters)."""
+        if r.qslot >= 0:
+            r.win_count = min(self.opts.window, r.win_count + 1)
+        r.seq_len = min(r.seq_len + 1, self._ring) if self._ring \
+            else (r.seq_len if self.cfg.attention_free else r.seq_len + 1)
+        r.position += 1
+        self.host_seq[r.slot] = r.seq_len
+        self.host_pos[r.slot] = r.position
+        self._step_decoded += 1
 
     def _run_decode(self, active):
         if not active:
@@ -435,13 +604,159 @@ class ZipageEngine:
             t = int(tok[r.slot])
             self.tokens_next[r.slot] = t
             self._record_token(r, t, None if lp is None else lp[r.slot])
-            if r.qslot >= 0:
-                r.win_count = min(self.opts.window, r.win_count + 1)
-            r.seq_len = min(r.seq_len + 1, self._ring) if self._ring \
-                else (r.seq_len if self.cfg.attention_free else r.seq_len + 1)
-            r.position += 1
-            self.host_seq[r.slot] = r.seq_len
-            self.host_pos[r.slot] = r.position
+            self._advance_decoded(r)
+
+    # ------------------------------------------------------------------
+    # plan execution: fused decode + multi-step horizon (docs/PERF.md)
+
+    def _sampling_tensors(self):
+        """Per-slot sampling tensors for the fused decode step (seeds,
+        temperatures, top-k/top-p, padded eos-id sets), rebuilt only when
+        the scheduler's slot assignments changed. The eos pad width only
+        ever grows, so the fused jit never re-traces on shrink."""
+        v = self.scheduler.version
+        if self._samp_arrays is not None and self._samp_version == v:
+            return self._samp_arrays
+        B = self.opts.max_batch
+        seeds = np.zeros((B,), np.uint32)
+        temps = np.zeros((B,), np.float32)
+        top_k = np.zeros((B,), np.int32)
+        top_p = np.ones((B,), np.float32)
+        e = self._eos_width
+        for r in self.scheduler.running:
+            if r.slot >= 0 and r.sampling.eos_ids:
+                e = max(e, len(r.sampling.eos_ids))
+        self._eos_width = 1 << (e - 1).bit_length()
+        eos = np.full((B, self._eos_width), -1, np.int32)
+        for r in self.scheduler.running:
+            if r.slot < 0:
+                continue
+            sp = r.sampling
+            seeds[r.slot] = np.uint32(sp.seed & 0xFFFFFFFF)
+            temps[r.slot] = sp.temperature
+            top_k[r.slot] = sp.top_k
+            top_p[r.slot] = sp.top_p
+            if sp.eos_ids:
+                eos[r.slot, :len(sp.eos_ids)] = sp.eos_ids
+        self._samp_arrays = tuple(
+            jnp.asarray(a) for a in (seeds, temps, top_k, top_p, eos))
+        self._samp_version = v
+        return self._samp_arrays
+
+    def _push_sampling_state(self, active):
+        """Sync the device-carried sampling state (live mask, PRNG
+        counters, next input tokens) with the host's view — pushing only
+        the pieces that actually diverged. During steady decode the device
+        advances all three itself, so nothing is uploaded."""
+        B = self.opts.max_batch
+        mask = np.zeros((B,), bool)
+        counters = np.zeros((B,), np.int32)
+        for r in active:
+            mask[r.slot] = True
+            counters[r.slot] = len(r.output)
+        if self._dev_mask is None \
+                or not np.array_equal(mask, self._dev_mask):
+            self.state["active_mask"] = jnp.asarray(mask)
+        if self._dev_counters is None \
+                or not np.array_equal(counters, self._dev_counters):
+            self.state["sample_counters"] = jnp.asarray(counters)
+        if self._tokens_dirty:
+            self.state["tokens_next"] = jnp.asarray(self.tokens_next)
+            self._tokens_dirty = False
+        self._dev_mask = mask
+        self._dev_counters = counters
+
+    def _fused_fn(self, k: int):
+        fn = self._fused_fns.get(k)
+        if fn is None:
+            key = (self.cfg, self.spec, k)
+            fn = _FUSED_CACHE.get(key)
+            if fn is None:
+                fn = jax.jit(serve_model.build_fused_decode_step(
+                    self.cfg, self.spec, k), donate_argnums=(1,))
+                _FUSED_CACHE[key] = fn
+            self._fused_fns[k] = fn
+        return fn
+
+    def _warm_fused(self):
+        """Compile every fused chunk length the configured ``decode_steps``
+        can produce, before serving starts. The warming calls run with an
+        all-false ``active_mask``, which makes them semantic no-ops on the
+        zeroed engine state (no KV writes, no counter movement) — they
+        exist purely to populate the jit caches."""
+        sizes = set()
+        for k in range(1, self.opts.decode_steps + 1):
+            sizes.update(_fused_chunk_sizes(k))
+        caps = jnp.zeros((self.opts.max_batch,), jnp.int32)
+        samp = self._sampling_tensors()
+        for k in sorted(sizes):
+            _t, _l, self.state = self._fused_fn(k)(
+                self.params, self.state, np.int32(0), caps, *samp)
+
+    def _warm_prefill(self):
+        """Compile the prefill step at init (padding-only rows: slot_ids
+        are all -1, so every write drops and the call is a no-op on the
+        zeroed state), keeping the first admission from stalling on
+        trace+compile mid-serve."""
+        P, S = self.opts.prefill_rows, self.opts.prefill_len
+        kw = {}
+        if self.cfg.is_enc_dec:
+            kw["frame_embeds"] = jnp.zeros(
+                (P, self.cfg.cross_seq_len, self.cfg.d_model), jnp.float32)
+        _logits, self.state = self._prefill(
+            self.params, self.state, jnp.zeros((P, S), jnp.int32),
+            jnp.full((P,), -1, jnp.int32), jnp.zeros((P,), jnp.int32),
+            jnp.zeros((P,), jnp.int32), **kw)
+
+    def _run_decode_fused(self, active, plan=None):
+        """Fused decode+sample over the scheduler's quiescent horizon: up
+        to K decode steps in O(log K) power-of-two dispatches, with each
+        chunk's token block fetched only after the next chunk is in
+        flight. That lets the host record chunk N's tokens while the
+        device is already computing chunk N+1 (the carried
+        ``active_mask`` keeps in-flight eos exact across chunks)."""
+        if not active:
+            return
+        K, caps = self.scheduler.quiescent_horizon(active, plan)
+        self._last_horizon = K
+        self._push_host_state()
+        self._push_sampling_state(active)
+        samp = self._sampling_tensors()
+        caps_arr = np.zeros((self.opts.max_batch,), np.int32)
+        for r, c in zip(active, caps):
+            caps_arr[r.slot] = c
+        caps_dev = jnp.asarray(caps_arr)
+        ks = _fused_chunk_sizes(K)
+        chunks = []
+        off = 0
+        for k in ks:
+            tok, lp, self.state = self._fused_fn(k)(
+                self.params, self.state, np.int32(off), caps_dev, *samp)
+            chunks.append((off, k, tok, lp))
+            off += k
+        halted: set = set()
+        for off, k, tok, lp in chunks:
+            tok, lp = self._fetch((tok, lp))
+            self._record_decode_block(active, off, k, tok, lp, caps, halted)
+
+    def _record_decode_block(self, active, off, k, tok, lp, caps, halted):
+        """Replay a fetched ``(k, B)`` token block into request state,
+        mirroring the device's in-scan gating exactly: each row consumes
+        tokens up to its cap, stopping early at its first eos hit."""
+        for idx, r in enumerate(active):
+            if r.rid in halted:
+                continue
+            for j in range(min(k, caps[idx] - off)):
+                t = int(tok[j, r.slot])
+                self.tokens_next[r.slot] = t
+                self._dev_counters[r.slot] += 1
+                self._record_token(r, t, float(lp[j, r.slot]))
+                self._advance_decoded(r)
+                sp = r.sampling
+                if sp.eos_ids is not None and t in sp.eos_ids:
+                    halted.add(r.rid)
+                    self._dev_mask[r.slot] = False
+                    break
 
     # ------------------------------------------------------------------
     def step(self):
@@ -450,25 +765,31 @@ class ZipageEngine:
         scheduler's (repro.core.scheduler); this loop only sequences the
         device work."""
         t0 = time.monotonic()
+        self._t_blocked = 0.0
+        self._step_decoded = 0
+        self._last_horizon = 0
         self.step_count += 1
         plan = self.scheduler.schedule(self.step_count)
         t_admit = time.monotonic()
         if plan.prefill_chunks:
             self._run_prefill(plan.prefill_chunks)
             if self.opts.measure_phases:
-                jax.block_until_ready(self.state["pools"]
-                                      if "pools" in self.state
-                                      else self.state["rec"])
+                self._block_ready(self.state["pools"]
+                                  if "pools" in self.state
+                                  else self.state["rec"])
         t_prefill = time.monotonic()
         self.scheduler.plan_compression(plan)
         self._launch_compression(plan)
         t_comp = time.monotonic()
         active = self.scheduler.schedule_decode(plan)
-        self._run_decode(active)
+        if self.opts.fuse_sampling:
+            self._run_decode_fused(active, plan)
+        else:
+            self._run_decode(active)
         if self.opts.measure_phases:
-            jax.block_until_ready(self.state["pools"]
-                                  if "pools" in self.state
-                                  else self.state["rec"])
+            self._block_ready(self.state["pools"]
+                              if "pools" in self.state
+                              else self.state["rec"])
         t_dec = time.monotonic()
         self.scheduler.end_step(plan)
         used = self.opts.n_total_blocks - self.bm.num_free
@@ -478,17 +799,26 @@ class ZipageEngine:
             "t_prefill": t_prefill - t_admit,
             "t_compress": t_comp - t_prefill,
             "t_decode": t_dec - t_comp,
+            # host planning/bookkeeping vs blocked-on-device split
+            # (t_host + t_device == t_total; docs/PERF.md)
+            "t_device": self._t_blocked,
+            "t_host": max(0.0, (t_dec - t0) - self._t_blocked),
             "n_running": len(self.scheduler.running),
             "n_waiting": len(self.scheduler.waiting),
             "n_active": len(active),
             "n_compressing": len(plan.compress),
             "n_prefilled": len(plan.admitted),
             "block_util": used / self.opts.n_total_blocks,
-            "tokens": len(active) + len(plan.admitted),
+            "tokens": self._step_decoded + len(plan.admitted),
+            "decode_horizon": self._last_horizon,
         }
-        entry.update(self.scheduler.stats(plan))
+        entry.update(self.scheduler.stats(plan,
+                                          n_decoded=self._step_decoded))
         self.metrics.append(entry)
-        self.scheduler.observe_latency(t_dec - t0)
+        # normalise by the fused horizon so a K-step dispatch doesn't read
+        # as a straggler to the admission backoff
+        self.scheduler.observe_latency(
+            (t_dec - t0) / max(1, self._last_horizon))
 
     def run(self, max_steps=10_000):
         while self.scheduler.has_work() and self.step_count < max_steps:
@@ -539,3 +869,11 @@ class ZipageEngine:
         sched.running = r["running"]
         sched.finished = r["finished"]
         sched.bm = copy.deepcopy(snap["bm"])
+        # invalidate every device mirror: the next step re-pushes tables
+        # and fused sampling state wholesale
+        self._pushed_version = -1
+        self._tokens_dirty = True
+        self._dev_mask = None
+        self._dev_counters = None
+        self._samp_version = -1
+        self._samp_arrays = None

@@ -68,6 +68,9 @@ class SchedulerParams:
     token_budget: Optional[int] = None   # prefill+decode tokens per step
     max_prefill_chunk: Optional[int] = None  # per-request chunk cap per step
     admission_margin: float = 0.0    # fraction of projected growth reserved
+    # multi-step decode ceiling (docs/PERF.md): max fused decode+sample
+    # iterations per engine step; quiescent_horizon() trims it per request
+    decode_steps: int = 1
     # --- model/engine-derived flags ---
     compression_enabled: bool = True
     budget_blocks: int = 3           # n_max - 1 (compression destination)
@@ -209,6 +212,8 @@ class Scheduler:
                 "each step")
         if params.admission_margin < 0:
             raise ValueError("admission_margin must be >= 0")
+        if params.decode_steps < 1:
+            raise ValueError("decode_steps must be >= 1")
         self.p = params
         self.bm = bm
         self.policy = make_policy(params.policy)
@@ -222,6 +227,11 @@ class Scheduler:
         # straggler-aware admission: EWMA of step latency vs baseline
         self.ewma: Optional[float] = None
         self.admission_scale = 1.0
+        # monotonically increasing whenever scheduler-owned state that the
+        # device tables mirror (slots, qslots, block lists, seq lens)
+        # changes; the engine compares it against the last pushed version
+        # to skip redundant host->device table uploads (docs/PERF.md)
+        self.version = 0
 
     # ------------------------------------------------------------------
     # queue entry points
@@ -279,6 +289,7 @@ class Scheduler:
     def _release_slots(self, r: Request) -> None:
         """Return r's blocks, decode slot and query slot to their pools
         (shared by preempt/finish/abort)."""
+        self.version += 1
         self.bm.release(r.blocks)
         r.blocks = []
         if r.slot >= 0:
@@ -355,6 +366,7 @@ class Scheduler:
                 break
             if r.qslot < 0 and r.state != State.FINISHED:
                 r.qslot = self.free_qslots.pop()
+                self.version += 1
                 if r.state == State.BLOCKED:
                     r.state = State.RUNNING
 
@@ -446,6 +458,7 @@ class Scheduler:
                 if shared:
                     self.bm.release(shared)
                 break
+            self.version += 1
             new_blocks = self.bm.allocate(n_new) if n_new else []
             r.blocks = shared + new_blocks
             r.n_cached, r.chain, r.n_shared = n_cached, chain, len(shared)
@@ -530,6 +543,8 @@ class Scheduler:
         release the source blocks, swap in the compressed table, and (in
         async mode) park the request for this step's decode (§4.5)."""
         k = self.p.budget_blocks * self.p.block_size
+        if outs.compress:
+            self.version += 1
         for c in outs.compress:
             r = c.request
             shared_released = [blk for blk in c.release
@@ -593,9 +608,71 @@ class Scheduler:
                     continue
                 blk = self.bm.allocate(1)[0]
                 r.blocks.append(blk)
+                self.version += 1
             active.append(r)
         outs.decode = [r for r in active if r in self.running]
         return outs.decode
+
+    # ------------------------------------------------------------------
+    # multi-step decode horizon (docs/PERF.md)
+
+    def quiescent_horizon(self, active: Sequence[Request],
+                          outs: Optional[SchedulerOutputs] = None):
+        """Per-request *host-free* decode budgets for this step, and the
+        fused scan length ``K = max(caps)`` (capped by ``decode_steps``).
+
+        ``caps[i]`` is how many consecutive tokens ``active[i]`` can decode
+        before a decision only the host can make comes due: a block
+        allocation or compression launch (last allocated block fills), the
+        hybrid slotless ``b - w`` boundary (§4.3), finish-by-length, or
+        per-token stop-sequence matching. A row whose cap is below K simply
+        sits out the scan's remaining iterations (the decode batch is
+        dense, so the masked rows cost nothing) and resumes next step —
+        its (seed, position)-keyed token stream is unaffected.
+
+        Under a ``token_budget`` each row's cap is additionally bounded by
+        its even share of what this step's prefill chunks (``outs``) left
+        over, preserving the per-step invariant
+        ``n_prefill_tokens + n_decode <= token_budget``.
+
+        Returns ``(K, caps)`` with ``caps`` aligned to ``active``;
+        ``K == 1`` reproduces single-step scheduling exactly.
+        """
+        limit = self.p.decode_steps
+        if self.p.token_budget is not None and active:
+            avail = self.p.token_budget \
+                - (outs.n_prefill_tokens if outs else 0)
+            # schedule() reserved one token per decodable row up front,
+            # so every active row's share is at least 1
+            limit = min(limit, max(1, avail // len(active)))
+        caps = []
+        for r in active:
+            if limit <= 1 or r.sampling.stop:
+                caps.append(1)        # host matches stop sequences per token
+                continue
+            c = min(limit, r.max_new_tokens - len(r.output))
+            caps.append(max(1, self._host_free_steps(r, c)))
+        return max(caps, default=1), caps
+
+    def _host_free_steps(self, r: Request, cap: int) -> int:
+        """Consecutive decode tokens ``r`` can take without host
+        intervention, at most ``cap``. The first token was already
+        validated (and its block allocated) by ``schedule_decode``."""
+        if self.p.attention_free or self.p.ring_blocks:
+            return cap               # no paged growth: length-bound only
+        b, w = self.p.block_size, self.p.window
+        s, n = r.seq_len + 1, r.n_blocks
+        k = 1
+        while k < cap:
+            if s >= n * b:
+                break                # needs a block (or compression) next
+            if self.p.compression_enabled and r.qslot < 0:
+                til = b if (s % b == 0 and s > 0) else s % b
+                if not (n < self.p.n_max or til < b - w):
+                    break            # hybrid slotless boundary (§4.3)
+            s += 1
+            k += 1
+        return k
 
     # ------------------------------------------------------------------
     # phase 4: step epilogue
@@ -633,10 +710,15 @@ class Scheduler:
             self.admission_scale = min(1.0, self.admission_scale * 1.1)
 
     # ------------------------------------------------------------------
-    def stats(self, outs: SchedulerOutputs) -> dict:
+    def stats(self, outs: SchedulerOutputs,
+              n_decoded: Optional[int] = None) -> dict:
         """Per-step telemetry merged into the engine's metrics entries and
-        surfaced as ``Zipage.scheduler_stats`` (docs/SCHEDULER.md)."""
-        scheduled = outs.n_scheduled_tokens
+        surfaced as ``Zipage.scheduler_stats`` (docs/SCHEDULER.md).
+        ``n_decoded`` is the number of decode tokens actually emitted —
+        under a multi-step horizon that exceeds ``len(outs.decode)``, and
+        ``budget_util`` must reflect it."""
+        scheduled = outs.n_prefill_tokens + (
+            n_decoded if n_decoded is not None else len(outs.decode))
         return {
             "policy": self.policy.name,
             "n_admitted": len(outs.admitted),

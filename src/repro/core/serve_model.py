@@ -200,12 +200,17 @@ def _decode_attn(cfg, spec, p, x, carry, a_idx, write_pos, attend_len,
                 o = paged.paged_decode_attention(q, k_l, v_l, bt, attend_len)
         o = o.reshape(B, cfg.num_heads * cfg.head_dim)
         q_entry = q
-    # observation-window query write (ring at qring_pos) for slots w/ qslot
+    # observation-window query write (ring at qring_pos) for slots w/ qslot.
+    # Inactive rows (write_pos < 0: masked out or past their fused-horizon
+    # cap) must not write: their query is garbage and their ring position
+    # is frozen, so it would overwrite a real entry the compression
+    # scoring still needs.
     qw_l = _dyn(qwin, a_idx)                                  # (M, w, hq, dq)
     Mq, w = qw_l.shape[0], qw_l.shape[1]
+    live = (qslot >= 0) & (write_pos >= 0)
     qs = jnp.where(qslot >= 0, qslot, Mq)
     qw_flat = qw_l.reshape(Mq * w, *qw_l.shape[2:])
-    qidx = jnp.where(qslot >= 0, qs * w + qring_pos % w, Mq * w)
+    qidx = jnp.where(live, qs * w + qring_pos % w, Mq * w)
     qw_flat = qw_flat.at[qidx].set(q_entry.astype(qw_flat.dtype), mode="drop")
     carry = dict(carry, pools=pools,
                  qwin=_dyn_set(qwin, qw_flat.reshape(qw_l.shape), a_idx))
@@ -331,6 +336,59 @@ def build_decode_step(cfg: ArchConfig, spec: ServeSpec):
         return logits, new_state
 
     return step
+
+
+def build_fused_decode_step(cfg: ArchConfig, spec: ServeSpec, n_steps: int):
+    """``n_steps`` decode+sample iterations in one dispatch (docs/PERF.md).
+
+    fused(params, state, idx0, step_caps, seeds, temps, top_k, top_p,
+          eos_ids) -> (tokens (n_steps, B), logprobs (n_steps, B), new_state)
+
+    The host round-trip per generated token disappears: the sampler runs on
+    the logits inside the same program (no ``(B, V)`` materialisation), and
+    ``tokens_next`` / ``active_mask`` / ``sample_counters`` are carried as
+    device state, so consecutive dispatches chain without the host reading
+    the tokens in between.
+
+    Per-row gating inside the scan:
+      * ``step_caps`` (B,) int32 — row i decodes only while the global step
+        index (``idx0 + j``) is ``< step_caps[i]``; rows whose host-free
+        budget (block capacity, remaining tokens, stop-sequence matching)
+        is exhausted sit out the rest of the horizon with zero cost (the
+        batch is dense either way) and resume next engine step.
+      * eos: a row that samples one of its ``eos_ids`` (padded with -1,
+        which never matches) clears its own ``active_mask`` bit for the
+        remaining iterations — tokens after eos are frozen, never written
+        to the KV cache, and ignored by the host's replay.
+
+    Sampling matches ``sampling.sample_batch`` bit-for-bit: per-row
+    (seed, n_generated)-keyed PRNG, temperature/top-k/top-p, logprobs from
+    the unfiltered distribution.
+    """
+    from repro.core.sampling import sample_batch
+
+    core = build_decode_step(cfg, spec)
+
+    def fused(params, state, idx0, step_caps, seeds, temps, top_k, top_p,
+              eos_ids):
+        def body(st, j):
+            gate = st["active_mask"] & (idx0 + j < step_caps)
+            logits, st2 = core(params, st, st["tokens_next"], gate)
+            tok, lp = sample_batch(logits, seeds, st["sample_counters"],
+                                   temps, top_k, top_p)
+            tok = jnp.where(gate, tok, st["tokens_next"])
+            eos_hit = gate & jnp.any(tok[:, None] == eos_ids, axis=-1)
+            st2["tokens_next"] = tok
+            st2["sample_counters"] = st["sample_counters"] \
+                + gate.astype(jnp.int32)
+            st2["active_mask"] = st["active_mask"] & ~eos_hit
+            return st2, (tok, lp)
+
+        new_state, (toks, lps) = jax.lax.scan(
+            body, state, jnp.arange(n_steps))
+        return toks, lps, new_state
+
+    return fused
 
 
 # ----------------------------------------------------------------------

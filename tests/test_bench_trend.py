@@ -1,0 +1,77 @@
+"""tools/bench_trend.py: trajectory table + decode-throughput regression
+gate over the per-PR bench-smoke JSON artifacts (`make bench-trend`)."""
+import importlib.util
+import json
+from pathlib import Path
+
+REPO = Path(__file__).resolve().parent.parent
+_spec = importlib.util.spec_from_file_location(
+    "bench_trend", REPO / "tools" / "bench_trend.py")
+bench_trend = importlib.util.module_from_spec(_spec)
+_spec.loader.exec_module(bench_trend)
+
+
+def conc_point(tps, nano=200.0, schema="zipage-bench-concurrency/v2"):
+    return {
+        "schema": schema, "jax": "0", "platform": "cpu", "smoke": True,
+        "results": [
+            {"name": "zipage", "tps": tps, "tokens_per_step": 6.0,
+             "t_host_ms": 10.0, "t_device_ms": 2.0,
+             "mean_decode_horizon": 4.0},
+            {"name": "nano_vllm", "tps": nano},
+        ],
+        "speedup_tps_zipage_vs_nano": round(tps / nano, 3),
+    }
+
+
+def kernels_point():
+    return {
+        "schema": "zipage-bench-kernels/v1", "jax": "0", "platform": "cpu",
+        "smoke": True,
+        "results": [{"name": "scoring", "backend": "jnp",
+                     "us_per_call": 12.5}],
+    }
+
+
+def write(tmp_path, name, data):
+    p = tmp_path / name
+    p.write_text(json.dumps(data))
+    return str(p)
+
+
+def test_trend_table_and_pass(tmp_path, capsys):
+    files = [write(tmp_path, "pr1-concurrency.json", conc_point(100.0,
+                   schema="zipage-bench-concurrency/v1")),
+             write(tmp_path, "pr2-concurrency.json", conc_point(150.0)),
+             write(tmp_path, "pr2-kernels.json", kernels_point())]
+    out = tmp_path / "TREND.md"
+    rc = bench_trend.main(files + ["--out", str(out)])
+    assert rc == 0
+    text = out.read_text()
+    assert "pr1-concurrency" in text and "pr2-concurrency" in text
+    assert "| 150.0 |" in text            # newest zipage tps in the table
+    assert "scoring/jnp" in text          # kernels table rendered too
+
+
+def test_trend_fails_on_regression(tmp_path):
+    files = [write(tmp_path, "a.json", conc_point(100.0)),
+             write(tmp_path, "b.json", conc_point(74.0))]   # -26% > 25%
+    assert bench_trend.main(files) == 1
+    # a 25%-or-less drop passes the default gate
+    files = [write(tmp_path, "a.json", conc_point(100.0)),
+             write(tmp_path, "c.json", conc_point(76.0))]
+    assert bench_trend.main(files) == 0
+    # tighter threshold flips it
+    assert bench_trend.main(files + ["--max-regression", "0.1"]) == 1
+
+
+def test_trend_single_point_trivially_green(tmp_path):
+    files = [write(tmp_path, "only.json", conc_point(123.0))]
+    assert bench_trend.main(files) == 0
+
+
+def test_trend_unknown_schema_skipped(tmp_path):
+    bad = write(tmp_path, "bad.json", {"schema": "nope/v9"})
+    good = write(tmp_path, "good.json", conc_point(100.0))
+    assert bench_trend.main([bad, good]) == 0
+    assert bench_trend.main([bad]) == 2   # nothing recognised

@@ -58,17 +58,17 @@ def test_kv_replication_decode_parity():
 
 
 def test_chunked_attn_backend_engine_parity():
-    """Engine outputs identical under gather vs chunked decode attention."""
+    """Engine outputs identical under gather vs chunked decode attention.
+    ``kernel_backend`` drives the spec at construction, so the fused
+    decode path (the default) traces with the right backend too."""
     outs = {}
     for backend in ("jnp", "chunked"):
         eng = ZipageEngine(CFG, PARAMS, EngineOptions(
             block_size=8, n_total_blocks=64, max_batch=4, m_qslots=4,
             n_max=3, window=4, compress=CompressOptions(window=4),
             max_model_len=128, prefill_rows=2, prefill_len=32,
-            temperature=0.0))
-        eng.spec = dataclasses.replace(eng.spec, attn_backend=backend)
-        eng._decode = jax.jit(
-            serve_model.build_decode_step(CFG, eng.spec), donate_argnums=(1,))
+            temperature=0.0, kernel_backend=backend))
+        assert eng.spec.attn_backend == backend
         rids = [eng.submit([1, 2, 3], 30), eng.submit([5, 6], 30)]
         done = eng.run(max_steps=300)
         outs[backend] = [done[r].output for r in rids]

@@ -23,8 +23,9 @@ from repro.core.block_manager import BlockManager
 from repro.core.compression import CompressOptions
 from repro.core.engine import EngineOptions, ZipageEngine
 from repro.core.request import Request, State
-from repro.core.scheduler import (POLICIES, Scheduler, SchedulerOutputs,
-                                  SchedulerParams, make_policy)
+from repro.core.scheduler import (POLICIES, PrefillChunk, Scheduler,
+                                  SchedulerOutputs, SchedulerParams,
+                                  make_policy)
 from repro.models import lm
 
 from _legacy_engine import LegacyZipageEngine
@@ -103,6 +104,88 @@ def running_request(sched, rid, n_blocks, priority=0, max_new=20,
     r.n_prefilled = r.prefill_target = len(r.prompt)
     sched.running.append(r)
     return r
+
+
+def test_quiescent_horizon_per_row_caps():
+    """Pure-host horizon planning (docs/PERF.md): each active row's cap is
+    its host-free decode budget — block capacity, remaining length, the
+    hybrid slotless boundary or stop-sequence matching — and the scan
+    length is the max (rows below it sit out, they are not a global min)."""
+    s = make_sched(n_blocks=32, block_size=8, window=4, n_max=3,
+                   decode_steps=8)
+    # plain qslot-holder: 2 blocks allocated, 10/16 tokens used -> 6 steps
+    r_cap = running_request(s, 0, n_blocks=2, max_new=100, qslot=0)
+    r_cap.seq_len = r_cap.position = 10
+    # length-bound: only 3 tokens of budget left
+    r_len = running_request(s, 1, n_blocks=2, max_new=20, qslot=1)
+    r_len.seq_len = r_len.position = 9
+    r_len.output = list(range(17))
+    # slotless at 1 token into its n_max-th block: b - w = 4 boundary
+    # allows tokens while tokens_in_last_block < 4 -> 3 steps
+    r_slotless = running_request(s, 2, n_blocks=3, max_new=100, qslot=-1)
+    r_slotless.seq_len = r_slotless.position = 17
+    # stop sequences need per-token host matching -> cap 1
+    r_stop = running_request(s, 3, n_blocks=2, max_new=100, qslot=2)
+    r_stop.seq_len = r_stop.position = 9
+    r_stop.sampling = SamplingParams(max_new_tokens=100, stop=((5, 6),))
+    active = [r_cap, r_len, r_stop, r_slotless]
+    K, caps = s.quiescent_horizon(active)
+    assert caps == [6, 3, 1, 3]
+    assert K == 6
+
+
+def test_quiescent_horizon_respects_token_budget():
+    """Multi-step caps must keep n_prefill_tokens + n_decode within the
+    per-step token budget: each row gets its even share of what the
+    step's prefill chunks left over."""
+    s = make_sched(n_blocks=32, block_size=8, window=4, n_max=3,
+                   decode_steps=8, token_budget=28, max_batch=4)
+    rows = []
+    for rid in range(4):
+        r = running_request(s, rid, n_blocks=2, max_new=100, qslot=-1)
+        r.seq_len = r.position = 9
+        rows.append(r)
+    outs = SchedulerOutputs()
+    outs.prefill_chunks.append(PrefillChunk(waiting_request(9, 8, 10),
+                                            0, 12, is_final=False))
+    K, caps = s.quiescent_horizon(rows, outs)
+    # (28 budget - 12 prefill) // 4 rows = 4 tokens per row
+    assert caps == [4, 4, 4, 4] and K == 4
+    assert 12 + sum(caps) <= 28
+    # without prefill this step, decode may fill the whole budget share
+    K2, caps2 = s.quiescent_horizon(rows, SchedulerOutputs())
+    assert caps2 == [7, 7, 7, 7]       # 28 // 4, block capacity allows it
+    assert sum(caps2) <= 28
+
+
+def test_quiescent_horizon_single_step_mode():
+    s = make_sched(n_blocks=32, block_size=8, decode_steps=1)
+    r = running_request(s, 0, n_blocks=2, max_new=100, qslot=0)
+    assert s.quiescent_horizon([r]) == (1, [1])
+    assert s.quiescent_horizon([]) == (1, [])
+
+
+def test_scheduler_version_tracks_device_table_mutations():
+    """The engine's dirty-push gate: the version must move whenever slot /
+    qslot / block state changes, and stay put across decision-free steps."""
+    s = make_sched(n_blocks=16)          # block_size 4
+    v0 = s.version
+    s.add_request(waiting_request(0, n_prompt=6, n_out=30))
+    plan = s.schedule()
+    assert len(plan.admitted) == 1 and s.version > v0
+    r = plan.admitted[0]
+    r.n_prefilled = r.prefill_target     # prefill "done"
+    r.output = [1]
+    v1 = s.version
+    # mid-stream decode with room in the last block (seq 6 of 8): no
+    # device-table mutation, so the version must not move
+    s.schedule_decode(plan)
+    assert s.version == v1
+    # block boundary -> allocation bumps the version
+    r.seq_len = r.position = 8
+    plan2 = SchedulerOutputs()
+    s.schedule_decode(plan2)
+    assert s.version > v1
 
 
 @pytest.mark.parametrize("policy,expect_victim", [

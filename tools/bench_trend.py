@@ -1,0 +1,163 @@
+#!/usr/bin/env python
+"""Accumulate per-PR bench-smoke JSON artifacts into a markdown trend
+table and gate on decode-throughput regressions (``make bench-trend``).
+
+CI uploads ``bench-concurrency-smoke.json`` (schema
+``zipage-bench-concurrency/v1|v2``) and ``bench-kernels-smoke.json``
+(``zipage-bench-kernels/v1``) for every PR (ROADMAP "Multi-backend bench
+trajectory"). Feed this tool those artifacts **in chronological order**
+(oldest first — e.g. a ``bench-history/`` directory of downloaded
+artifacts plus the freshly produced smoke JSON):
+
+    python tools/bench_trend.py bench-history/*.json \\
+        bench-concurrency-smoke.json --out BENCH_TREND.md
+
+Output: a markdown trajectory table per benchmark kind. Exit status: 1 if
+the newest concurrency point's zipage decode throughput (``tps``) dropped
+more than ``--max-regression`` (default 0.25, i.e. 25%) below the
+previous point's; 0 otherwise (a single point trivially passes).
+Stdlib only — safe to run anywhere CI can run python.
+"""
+from __future__ import annotations
+
+import argparse
+import json
+import sys
+from pathlib import Path
+
+CONCURRENCY_SCHEMAS = ("zipage-bench-concurrency/v1",
+                       "zipage-bench-concurrency/v2")
+KERNELS_SCHEMAS = ("zipage-bench-kernels/v1",)
+
+
+def load_points(paths):
+    """Split the input files into (concurrency, kernels) point lists,
+    keeping argument order (= chronological order)."""
+    concurrency, kernels, skipped = [], [], []
+    for p in paths:
+        path = Path(p)
+        try:
+            data = json.loads(path.read_text())
+        except (OSError, ValueError) as e:
+            skipped.append(f"{p}: unreadable ({e})")
+            continue
+        schema = data.get("schema")
+        point = {"label": path.stem, "data": data}
+        if schema in CONCURRENCY_SCHEMAS:
+            concurrency.append(point)
+        elif schema in KERNELS_SCHEMAS:
+            kernels.append(point)
+        else:
+            skipped.append(f"{p}: unknown schema {schema!r}")
+    return concurrency, kernels, skipped
+
+
+def _result(data, name):
+    for r in data.get("results", []):
+        if r.get("name") == name:
+            return r
+    return {}
+
+
+def concurrency_table(points):
+    lines = [
+        "## Decode throughput trajectory (bench_concurrency)",
+        "",
+        "| point | zipage tok/s | nano tok/s | speedup | tok/step "
+        "| t_host ms | t_device ms | horizon |",
+        "|---|---|---|---|---|---|---|---|",
+    ]
+    for pt in points:
+        d = pt["data"]
+        z = _result(d, "zipage")
+        n = _result(d, "nano_vllm")
+        fmt = lambda v: "-" if v is None else f"{v}"  # noqa: E731
+        lines.append(
+            f"| {pt['label']} | {fmt(z.get('tps'))} | {fmt(n.get('tps'))} "
+            f"| {fmt(d.get('speedup_tps_zipage_vs_nano'))} "
+            f"| {fmt(z.get('tokens_per_step'))} "
+            f"| {fmt(z.get('t_host_ms'))} | {fmt(z.get('t_device_ms'))} "
+            f"| {fmt(z.get('mean_decode_horizon'))} |")
+    return lines
+
+
+def kernels_table(points):
+    names = []
+    for pt in points:
+        for r in pt["data"].get("results", []):
+            key = (r.get("name"), r.get("backend"))
+            if key not in names:
+                names.append(key)
+    lines = [
+        "## Kernel micro-bench trajectory (bench_kernels, us/call)",
+        "",
+        "| kernel/backend | " + " | ".join(pt["label"] for pt in points)
+        + " |",
+        "|---|" + "---|" * len(points),
+    ]
+    for name, backend in names:
+        row = [f"| {name}/{backend}"]
+        for pt in points:
+            us = next((r.get("us_per_call")
+                       for r in pt["data"].get("results", [])
+                       if r.get("name") == name
+                       and r.get("backend") == backend), None)
+            row.append(f" {'-' if us is None else us}")
+        lines.append(" |".join(row) + " |")
+    return lines
+
+
+def check_regression(points, max_regression):
+    """(ok, message) for the newest vs previous zipage decode tps."""
+    tps = [(pt["label"], _result(pt["data"], "zipage").get("tps"))
+           for pt in points]
+    tps = [(label, t) for label, t in tps if t]
+    if len(tps) < 2:
+        return True, "regression gate: <2 concurrency points, trivially OK"
+    (prev_label, prev), (cur_label, cur) = tps[-2], tps[-1]
+    floor = (1.0 - max_regression) * prev
+    msg = (f"regression gate: {cur_label} zipage {cur} tok/s vs "
+           f"{prev_label} {prev} tok/s (floor {floor:.2f})")
+    return cur >= floor, msg
+
+
+def main(argv=None):
+    ap = argparse.ArgumentParser(description=__doc__.splitlines()[0])
+    ap.add_argument("files", nargs="+",
+                    help="bench-*-smoke.json artifacts, oldest first")
+    ap.add_argument("--out", default=None, metavar="FILE.md",
+                    help="write the markdown table here (default: stdout)")
+    ap.add_argument("--max-regression", type=float, default=0.25,
+                    help="fail when the newest zipage tps drops more than "
+                         "this fraction below the previous point "
+                         "(default: 0.25)")
+    args = ap.parse_args(argv)
+
+    concurrency, kernels, skipped = load_points(args.files)
+    lines = ["# Bench trajectory", ""]
+    if concurrency:
+        lines += concurrency_table(concurrency) + [""]
+    if kernels:
+        lines += kernels_table(kernels) + [""]
+    ok, gate_msg = check_regression(concurrency, args.max_regression)
+    lines += [f"_{gate_msg}_", ""]
+    text = "\n".join(lines)
+    if args.out:
+        Path(args.out).write_text(text)
+        print(f"wrote {args.out}", file=sys.stderr)
+    else:
+        print(text)
+    for s in skipped:
+        print(f"bench-trend: skipped {s}", file=sys.stderr)
+    if not concurrency and not kernels:
+        print("bench-trend: no recognised bench JSONs", file=sys.stderr)
+        return 2
+    if not ok:
+        print(f"bench-trend: FAIL — {gate_msg}", file=sys.stderr)
+        return 1
+    print(f"bench-trend: OK — {gate_msg}", file=sys.stderr)
+    return 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())
