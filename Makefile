@@ -35,15 +35,18 @@ bench:
 bench-kernels:
 	$(PYTHON) -m benchmarks.bench_kernels --smoke --out bench-kernels-smoke.json
 
-# end-to-end serving smoke (zipage vs nano-vLLM baseline) — CI uploads the
-# JSON as the per-PR concurrency trajectory artifact
+# end-to-end serving smoke (zipage vs nano-vLLM baseline, plus the
+# oversubscribed recompute-vs-swap-vs-auto preemption-mode comparison) —
+# CI uploads the JSON as the per-PR concurrency trajectory artifact
 bench-concurrency:
-	$(PYTHON) -m benchmarks.bench_concurrency --smoke --out bench-concurrency-smoke.json
+	$(PYTHON) -m benchmarks.bench_concurrency --smoke --oversubscribe --out bench-concurrency-smoke.json
 
 # accumulate bench-smoke artifacts (oldest first) into BENCH_TREND.md and
-# fail on a >25% decode-throughput regression vs the previous point. Drop
-# downloaded per-PR artifacts into bench-history/ to grow the trajectory.
-BENCH_TREND_FILES ?= $(sort $(wildcard bench-history/*concurrency*.json)) bench-concurrency-smoke.json
+# fail on a >25% decode-throughput regression (zipage, and swap-mode once
+# oversubscribed points exist) vs the previous point. CI seeds
+# bench-history/ from the last successful main run's artifact; locally,
+# drop downloaded per-PR artifacts there to grow the trajectory.
+BENCH_TREND_FILES ?= $(sort $(wildcard bench-history/*.json)) bench-concurrency-smoke.json bench-kernels-smoke.json
 bench-trend:
 	$(PYTHON) tools/bench_trend.py $(BENCH_TREND_FILES) --out BENCH_TREND.md
 

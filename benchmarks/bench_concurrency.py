@@ -5,25 +5,40 @@ Usable two ways:
 
   * ``python -m benchmarks.run bench_concurrency`` — legacy CSV rows via
     ``run()`` (name,us_per_step,derived);
-  * ``python -m benchmarks.bench_concurrency [--smoke] [--out FILE.json]``
-    — JSON for the per-PR concurrency trajectory (CI's bench-smoke
-    artifact), same envelope as ``bench_kernels.py``:
+  * ``python -m benchmarks.bench_concurrency [--smoke] [--oversubscribe]
+    [--out FILE.json]`` — JSON for the per-PR concurrency trajectory
+    (CI's bench-smoke artifact), same envelope as ``bench_kernels.py``:
 
-      {"schema": "zipage-bench-concurrency/v2", "jax": ..., "platform": ...,
+      {"schema": "zipage-bench-concurrency/v3", "jax": ..., "platform": ...,
        "smoke": bool, "results": [{"name", "tps", "tokens", "steps",
        "tokens_per_step", "mean_concurrency", "p50_concurrency",
        "max_concurrency", "frac_steps_conc_ge12", "tpot_ms", "block_util",
-       "compressions", "preemptions", "t_host_ms", "t_device_ms",
-       "mean_decode_horizon", "wall_s"}, ...],
-       "speedup_tps_zipage_vs_nano": float}
+       "compressions", "preemptions", "n_swapped_out", "n_swapped_in",
+       "swap_mb", "t_host_ms", "t_device_ms", "mean_decode_horizon",
+       "wall_s"}, ...],
+       "speedup_tps_zipage_vs_nano": float,
+       "oversub_speedup_tps_swap_vs_recompute": float | absent,
+       "oversub_speedup_tps_auto_vs_recompute": float | absent,
+       "oversub_speedup_step_swap_vs_recompute": float | absent,
+       "oversub_speedup_step_auto_vs_recompute": float | absent}
 
-    v2 adds the per-step host/device time split (``t_host_ms`` is host
+    v2 added the per-step host/device time split (``t_host_ms`` is host
     planning+bookkeeping, ``t_device_ms`` is blocked-on-device; means per
-    step) and the mean fused decode horizon (docs/PERF.md).
+    step) and the mean fused decode horizon (docs/PERF.md). v3 adds the
+    swap-preemption telemetry per row and, with ``--oversubscribe``, the
+    ``oversub_{recompute,swap,auto}`` rows: the same heavily
+    oversubscribed reasoning workload (short prompts, very long outputs,
+    steady-state demand ~2x the block pool, chunked prefill under a
+    token budget) served under each preemption mode. The ``_step``
+    speedups compare tokens-per-step — deterministic, unlike wall-clock
+    on a noisy CI box — where recompute mode pays for re-prefilling
+    preempted requests and swap mode restores their KV from the host
+    swap tier instead (docs/SCHEDULER.md "Preemption modes").
 
 ``--smoke`` shrinks the request count so the job stays in CI budget.
 ``tools/bench_trend.py`` accumulates these JSONs across PRs and gates on
-decode-throughput regressions (``make bench-trend``).
+decode-throughput regressions (``make bench-trend``) — including the
+swap-mode decode throughput once oversubscribed points exist.
 """
 import argparse
 import json
@@ -41,6 +56,24 @@ def _measure(n_requests):
     out = []
     for name, ov in (("zipage", {}), ("nano_vllm", {"n_max": None})):
         out.append((name, run_engine(reqs, **ov)))
+    return out
+
+
+# oversubscribed scenario (ISSUE 5): sustained preemption churn under a
+# shared token budget with chunked prefill, so recompute-mode victims pay
+# their re-prefill in budget tokens while swapped victims resume free
+OVERSUB_ENGINE = dict(token_budget=64, max_prefill_chunk=16)
+
+
+def _measure_oversub(n_requests):
+    """[(name, result)] for the swap-vs-recompute preemption-mode
+    comparison on the oversubscribed workload."""
+    reqs = workload("oversub", n_requests, np.random.default_rng(7))
+    out = []
+    for mode in ("recompute", "swap", "auto"):
+        ov = dict(OVERSUB_ENGINE, preemption_mode=mode,
+                  swap_space_blocks=0 if mode == "recompute" else 96)
+        out.append((f"oversub_{mode}", run_engine(reqs, **ov)))
     return out
 
 
@@ -64,6 +97,12 @@ def _row(name, r):
         "compressions": r["compressions"],
         "preemptions": int(sum(m.get("n_preempted", 0)
                                for m in metrics)),
+        "n_swapped_out": int(sum(m.get("n_swapped_out", 0)
+                                 for m in metrics)),
+        "n_swapped_in": int(sum(m.get("n_swapped_in", 0)
+                                for m in metrics)),
+        "swap_mb": round(metrics[-1].get("swap_bytes", 0) / 2**20, 3)
+        if metrics else 0.0,
         "t_host_ms": round(1e3 * float(np.mean(
             [m["t_host"] for m in metrics])), 3),
         "t_device_ms": round(1e3 * float(np.mean(
@@ -96,6 +135,9 @@ def main(argv=None):
     ap = argparse.ArgumentParser(description=__doc__.splitlines()[0])
     ap.add_argument("--smoke", action="store_true",
                     help="small request count (CI bench-smoke)")
+    ap.add_argument("--oversubscribe", action="store_true",
+                    help="add the oversubscribed swap-vs-recompute "
+                         "preemption-mode comparison")
     ap.add_argument("--out", default=None, metavar="FILE.json",
                     help="write the JSON report here (default: stdout)")
     args = ap.parse_args(argv)
@@ -103,7 +145,7 @@ def main(argv=None):
     results = {name: _row(name, r)
                for name, r in _measure(8 if args.smoke else 24)}
     report = {
-        "schema": "zipage-bench-concurrency/v2",
+        "schema": "zipage-bench-concurrency/v3",
         "jax": jax.__version__,
         "platform": jax.default_backend(),
         "smoke": args.smoke,
@@ -111,6 +153,18 @@ def main(argv=None):
         "speedup_tps_zipage_vs_nano": round(
             results["zipage"]["tps"] / results["nano_vllm"]["tps"], 3),
     }
+    if args.oversubscribe:
+        oversub = {name: _row(name, r)
+                   for name, r in _measure_oversub(24 if args.smoke
+                                                   else 32)}
+        report["results"] += list(oversub.values())
+        rec = oversub["oversub_recompute"]
+        for mode in ("swap", "auto"):
+            row = oversub[f"oversub_{mode}"]
+            report[f"oversub_speedup_tps_{mode}_vs_recompute"] = round(
+                row["tps"] / rec["tps"], 3)
+            report[f"oversub_speedup_step_{mode}_vs_recompute"] = round(
+                row["tokens_per_step"] / rec["tokens_per_step"], 3)
     text = json.dumps(report, indent=2)
     if args.out:
         with open(args.out, "w") as f:

@@ -51,6 +51,10 @@ def workload(kind, n, rng):
             p, o = int(rng.integers(8, 24)), int(rng.integers(8, 20))
         elif kind == "long":        # long in, short out
             p, o = int(rng.integers(80, 140)), int(rng.integers(8, 20))
+        elif kind == "oversub":     # short in, very long out: steady-state
+            #                         demand far exceeds the block pool, so
+            #                         preemption churn is sustained
+            p, o = int(rng.integers(8, 24)), int(rng.integers(100, 160))
         else:                       # mix
             if i % 2:
                 p, o = int(rng.integers(8, 24)), int(rng.integers(60, 100))

@@ -33,6 +33,10 @@ class CacheConfig:
     prefix_caching: bool = True
     compress: Optional[CompressOptions] = None   # None => window defaults
     max_model_len: int = 512
+    # host swap tier: CPU-side block slots backing swap-mode preemption
+    # (SchedulerConfig.preemption_mode). 0 disables the tier; preempted
+    # requests are then always re-prefilled (recompute mode).
+    swap_space_blocks: int = 0
 
 
 @dataclasses.dataclass(frozen=True)
@@ -49,6 +53,17 @@ class SchedulerConfig:
     policy: str = "fcfs"
     # victim-order policy for preemption; None => same as `policy`
     preemption: Optional[str] = None
+    # what preemption *does* (docs/SCHEDULER.md "Preemption modes"):
+    # "recompute" frees the victim's blocks and re-prefills on
+    # re-admission; "swap" parks its KV in the host swap tier
+    # (CacheConfig.swap_space_blocks) and restores it block-for-block;
+    # "auto" picks per victim by the swap-bytes-vs-re-prefill cost model
+    preemption_mode: str = "recompute"
+    # auto's exchange rate: host-copy cost of one KV token-slot (one
+    # direction), in re-prefill-token equivalents — swap a victim iff
+    # 2 * n_blocks * block_size * swap_cost_per_token < tokens to
+    # re-prefill. Lower it on fast interconnects to swap more eagerly.
+    swap_cost_per_token: float = 0.5
     # shared prefill+decode token budget per step (continuous batching with
     # chunked prefill); None => unbounded (prefill completes in-step)
     token_budget: Optional[int] = None
@@ -150,6 +165,9 @@ def build_engine_options(cache: CacheConfig, scheduler: SchedulerConfig,
         async_compression=scheduler.async_compression,
         policy=scheduler.policy,
         preemption=scheduler.preemption,
+        preemption_mode=scheduler.preemption_mode,
+        swap_cost_per_token=scheduler.swap_cost_per_token,
+        swap_space_blocks=cache.swap_space_blocks,
         token_budget=scheduler.token_budget,
         max_prefill_chunk=scheduler.max_prefill_chunk,
         admission_margin=scheduler.admission_margin,

@@ -199,7 +199,9 @@ class Zipage:
             return None
         m = self.engine.metrics[-1]
         return {k: m[k] for k in (
-            "policy", "n_admitted", "n_preempted", "n_blocked",
+            "policy", "preemption_mode", "n_admitted", "n_preempted",
+            "n_swapped_out", "n_swapped_in", "n_swapped", "swap_bytes",
+            "swap_util", "n_blocked",
             "n_finished", "n_prefill_tokens", "n_scheduled_tokens",
             "token_budget", "budget_util", "free_blocks",
             "admission_scale", "t_host", "t_device",

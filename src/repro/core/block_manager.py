@@ -13,7 +13,8 @@ class OutOfBlocks(Exception):
 
 class BlockManager:
     def __init__(self, num_blocks: int, block_size: int,
-                 enable_prefix_cache: bool = True):
+                 enable_prefix_cache: bool = True,
+                 swap_space_blocks: int = 0):
         self.num_blocks = num_blocks
         self.block_size = block_size
         self.enable_prefix_cache = enable_prefix_cache
@@ -24,6 +25,14 @@ class BlockManager:
         self.hash_to_block: Dict[int, int] = {}
         self.block_hash: Dict[int, int] = {}
         self.cached_free: "OrderedDict[int, None]" = OrderedDict()
+        # host swap tier (docs/SCHEDULER.md "Preemption modes"): a CPU-side
+        # pool of block slots a swap-out parks KV copies in. Swapped blocks
+        # are per-request private copies — shared prefix blocks are
+        # copy-on-swap, so the device ref counts simply drop by one and the
+        # prefix cache keeps serving its other holders.
+        self.swap_space_blocks = swap_space_blocks
+        self.swap_free: List[int] = list(range(swap_space_blocks - 1, -1, -1))
+        self.swapped: Dict[int, List[int]] = {}      # rid -> host blocks
 
     # ------------------------------------------------------------------
     @property
@@ -125,6 +134,40 @@ class BlockManager:
     def is_shared(self, block: int) -> bool:
         return self.ref[block] > 1
 
+    # ------------------------------------------------------------------
+    # host swap tier
+
+    @property
+    def swap_util(self) -> float:
+        if not self.swap_space_blocks:
+            return 0.0
+        return 1.0 - len(self.swap_free) / self.swap_space_blocks
+
+    def can_swap_out(self, n: int) -> bool:
+        return 0 < n <= len(self.swap_free)
+
+    def swap_out(self, rid: int, n: int) -> List[int]:
+        """Reserve ``n`` host blocks for ``rid``'s KV copy. The caller
+        copies the device blocks out *before* releasing them (the device
+        side stays ref-counted: shared blocks merely drop one ref)."""
+        assert rid not in self.swapped, f"rid {rid} already swapped out"
+        if not self.can_swap_out(n):
+            raise OutOfBlocks()
+        host = [self.swap_free.pop() for _ in range(n)]
+        self.swapped[rid] = host
+        return host
+
+    def swapped_blocks(self, rid: int) -> List[int]:
+        return list(self.swapped[rid])
+
+    def n_swapped_blocks(self, rid: int) -> int:
+        return len(self.swapped[rid])
+
+    def release_swapped(self, rid: int) -> None:
+        """Return ``rid``'s host blocks to the swap pool (after swap-in
+        copied them back, or on abort of a swapped request)."""
+        self.swap_free.extend(self.swapped.pop(rid))
+
     # invariant checks (used by property tests)
     def check_invariants(self) -> None:
         live = [b for b in range(self.num_blocks) if self.ref[b] > 0]
@@ -134,3 +177,8 @@ class BlockManager:
         assert len(live) + len(free_set) == self.num_blocks
         for h, b in self.hash_to_block.items():
             assert self.block_hash.get(b) == h
+        # swap pool: free + per-rid reservations partition the host blocks
+        held = [b for blocks in self.swapped.values() for b in blocks]
+        swap_all = set(self.swap_free) | set(held)
+        assert len(swap_all) == len(self.swap_free) + len(held)
+        assert len(swap_all) == self.swap_space_blocks

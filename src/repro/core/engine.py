@@ -15,7 +15,9 @@ subsystem (docs/SCHEDULER.md); ``step()`` merely executes the
   * block-level prefix caching with compression into target blocks (§4.4),
   * asynchronous compression: compressing requests sit out one decode step
     and rejoin; decode of the rest is dispatched without waiting (§4.5),
-  * preemption (recompute mode) with pluggable victim order, pluggable
+  * preemption with a schedulable *mode* — recompute, host-KV swap
+    (CPU swap pool, batched block gather/scatter), or an auto cost model
+    picking per victim — plus pluggable victim order, pluggable
     admission policies (FCFS / priority / shortest-remaining), and
     compression-aware admission margins,
   * per-request sampling (``SamplingParams``: temperature/top-k/top-p with
@@ -65,6 +67,11 @@ _FUSED_CACHE: Dict[tuple, callable] = {}
 # step builders are pure functions of (cfg, spec), so engines with the
 # same signature reuse one jit object instead of recompiling
 _STEP_CACHE: Dict[tuple, callable] = {}
+
+# swap gather/scatter jits (host swap tier, docs/SCHEDULER.md) shared per
+# (kind, arch, serve-spec); block ids are padded to max_blocks so one
+# executable serves every victim size
+_SWAP_CACHE: Dict[tuple, callable] = {}
 
 _SAMPLER = None      # module-wide jit of sampling.sample_batch
 
@@ -123,6 +130,12 @@ class EngineOptions:
     # surfaced as SchedulerConfig on the repro.api facade
     policy: str = "fcfs"             # fcfs | priority | srpt
     preemption: Optional[str] = None  # victim-order policy; None => policy
+    # host swap tier (docs/SCHEDULER.md "Preemption modes"): what
+    # preemption does (recompute | swap | auto) and how many CPU-side
+    # block slots back it (0 disables swap entirely)
+    preemption_mode: str = "recompute"
+    swap_space_blocks: int = 0
+    swap_cost_per_token: float = 0.5  # auto cost model's exchange rate
     token_budget: Optional[int] = None   # prefill+decode tokens per step
     max_prefill_chunk: Optional[int] = None  # per-request chunk cap per step
     admission_margin: float = 0.0    # fraction of projected growth reserved
@@ -180,26 +193,6 @@ class ZipageEngine:
                      and not cfg.local_window and not cfg.is_enc_dec)
         self.prefix_ok = prefix_ok
         self._ring = (self.spec.ring_blocks(cfg) if cfg.local_window else 0)
-        # the scheduling subsystem: owns queues, slot pools and the block
-        # manager; every policy decision happens in there
-        self.scheduler = Scheduler(
-            SchedulerParams(
-                block_size=b, max_batch=opts.max_batch,
-                m_qslots=opts.m_qslots, n_max=opts.n_max,
-                window=opts.window, scheduling=opts.scheduling,
-                async_compression=opts.async_compression,
-                prefill_rows=opts.prefill_rows,
-                policy=opts.policy, preemption=opts.preemption,
-                token_budget=opts.token_budget,
-                max_prefill_chunk=opts.max_prefill_chunk,
-                admission_margin=opts.admission_margin,
-                decode_steps=opts.decode_steps,
-                compression_enabled=self.compression_enabled,
-                budget_blocks=self.budget_blocks,
-                prefix_ok=prefix_ok, attention_free=cfg.attention_free,
-                ring_blocks=self._ring),
-            BlockManager(opts.n_total_blocks, b,
-                         enable_prefix_cache=prefix_ok))
         self.state = serve_model.make_state(cfg, self.spec)
         # fused-decode device state (docs/PERF.md): the next input token,
         # the per-slot live mask and the per-slot PRNG counter live on
@@ -210,6 +203,49 @@ class ZipageEngine:
         self.state["active_mask"] = jnp.zeros((opts.max_batch,), bool)
         self.state["sample_counters"] = jnp.zeros((opts.max_batch,),
                                                   jnp.int32)
+        # host swap tier (docs/SCHEDULER.md): only paged-attention archs
+        # without per-slot recurrent/cross state can vacate a slot and
+        # restore elsewhere — the KV pool is the whole story for them
+        self._swap_ok = (opts.swap_space_blocks > 0
+                         and "pools" in self.state and not self._ring
+                         and "rec" not in self.state
+                         and "cross_kv" not in self.state)
+        if opts.swap_space_blocks > 0 and not self._swap_ok:
+            warnings.warn(
+                f"preemption_mode={opts.preemption_mode!r} cannot swap on "
+                "this arch (recurrent/ring/enc-dec state is per-slot, not "
+                "paged); falling back to recompute-mode preemption")
+        # the scheduling subsystem: owns queues, slot pools and the block
+        # manager; every policy decision happens in there
+        self.scheduler = Scheduler(
+            SchedulerParams(
+                block_size=b, max_batch=opts.max_batch,
+                m_qslots=opts.m_qslots, n_max=opts.n_max,
+                window=opts.window, scheduling=opts.scheduling,
+                async_compression=opts.async_compression,
+                prefill_rows=opts.prefill_rows,
+                policy=opts.policy, preemption=opts.preemption,
+                # arch can't swap (warned above): degrade to recompute.
+                # swap_space_blocks == 0 passes the mode through so the
+                # scheduler rejects the contradictory config.
+                preemption_mode=(opts.preemption_mode
+                                 if self._swap_ok
+                                 or opts.swap_space_blocks == 0
+                                 else "recompute"),
+                swap_cost_per_token=opts.swap_cost_per_token,
+                block_bytes=self._kv_block_bytes(),
+                token_budget=opts.token_budget,
+                max_prefill_chunk=opts.max_prefill_chunk,
+                admission_margin=opts.admission_margin,
+                decode_steps=opts.decode_steps,
+                compression_enabled=self.compression_enabled,
+                budget_blocks=self.budget_blocks,
+                prefix_ok=prefix_ok, attention_free=cfg.attention_free,
+                ring_blocks=self._ring),
+            BlockManager(opts.n_total_blocks, b,
+                         enable_prefix_cache=prefix_ok,
+                         swap_space_blocks=(opts.swap_space_blocks
+                                            if self._swap_ok else 0)))
         self._decode = _cached_step("decode", cfg, self.spec)
         self._prefill = _cached_step("prefill", cfg, self.spec)
         self._fused_fns: Dict[int, callable] = {}
@@ -242,6 +278,11 @@ class ZipageEngine:
         self._sampler = _sampler_jit()
         self.metrics: List[dict] = []
         self.step_count = 0
+        self.swap_pool: Optional[Dict[str, np.ndarray]] = None
+        self._swap_qwin: Dict[int, np.ndarray] = {}   # rid -> parked window
+        self._swap_bufs: Dict[int, dict] = {}         # bucket -> staging
+        if self._swap_ok:
+            self._init_swap()
         if self.compression_enabled:
             self._warm_compression()
         if opts.fuse_sampling:
@@ -338,6 +379,7 @@ class ZipageEngine:
         r = self.scheduler.abort(rid)
         if r is None:
             return False
+        self._swap_qwin.pop(rid, None)
         r.state = State.FINISHED
         r.finish_reason = FinishReason.ABORT
         r.t_finish = time.monotonic()
@@ -493,6 +535,126 @@ class ZipageEngine:
         self.scheduler.commit_compression(outs)
         if self.opts.measure_phases or not self.opts.async_compression:
             self._block_ready(self.state["pools"])
+
+    # ------------------------------------------------------------------
+    # plan execution: host swap tier (docs/SCHEDULER.md "Preemption modes")
+
+    def _kv_block_bytes(self) -> int:
+        """Bytes one pool block occupies across all layers and leaves —
+        the unit of the scheduler's swap-traffic telemetry and auto cost
+        model."""
+        pools = self.state.get("pools")
+        if not pools:
+            return 0
+        return int(sum(leaf.size // leaf.shape[1] * leaf.dtype.itemsize
+                       for leaf in jax.tree.leaves(pools)))
+
+    def _init_swap(self):
+        """Allocate the CPU swap pool (one host mirror per pools leaf,
+        ``swap_space_blocks`` wide) and register the two synchronous
+        executors the scheduler calls at plan time. Warm both jits at
+        every power-of-2 bucket width with all-padding ids (semantic
+        no-ops) so preemption under pressure never stalls on
+        trace+compile."""
+        self.swap_pool = {
+            k: np.zeros((leaf.shape[0], self.opts.swap_space_blocks)
+                        + leaf.shape[2:], dtype=leaf.dtype)
+            for k, leaf in self.state["pools"].items()}
+        self.scheduler.swap_executor = self._swap_out_blocks
+        self.scheduler.swap_in_executor = self._swap_in_blocks
+        m = 1
+        while True:
+            pad = jnp.full((m,), -1, jnp.int32)
+            gathered = self._swap_fn("swap_out")(self.state["pools"], pad)
+            self.state["pools"] = self._swap_fn("swap_in")(
+                self.state["pools"], pad, gathered)
+            if m >= self.max_blocks:
+                break
+            m = min(2 * m, self.max_blocks)
+
+    def _swap_fn(self, kind: str):
+        key = (kind, self.cfg, self.spec)
+        fn = _SWAP_CACHE.get(key)
+        if fn is None:
+            if kind == "swap_out":
+                fn = jax.jit(serve_model.build_swap_out_step(self.cfg,
+                                                             self.spec))
+            else:
+                fn = jax.jit(serve_model.build_swap_in_step(self.cfg,
+                                                            self.spec),
+                             donate_argnums=(0,))
+            _SWAP_CACHE[key] = fn
+        return fn
+
+    def _swap_bucket(self, n: int) -> int:
+        """Power-of-2 padded width for an ``n``-block swap (capped at
+        max_blocks), so only O(log max_blocks) shapes are ever traced and
+        a typical compressed victim moves ~n_max blocks, not the full
+        table width."""
+        return min(self.max_blocks, 1 << max(0, n - 1).bit_length())
+
+    def _pad_block_ids(self, blocks: Sequence[int], width: int):
+        ids = np.full((width,), -1, np.int32)
+        ids[:len(blocks)] = blocks
+        return jnp.asarray(ids)
+
+    def _swap_out_blocks(self, r: Request, src_blocks, dst_host_blocks):
+        """Scheduler swap-out callback: gather the victim's blocks from
+        every layer's pools and park the copy in the CPU swap pool. The
+        fetch is synchronous, so the blocks are safe to reuse the moment
+        this returns — the scheduler releases them right after. The
+        victim's observation-window rows ride along (keyed by rid), so a
+        swap-in with a fresh qslot resumes compression scoring exactly
+        where the swap-out left it."""
+        n = len(src_blocks)
+        gathered = self._swap_fn("swap_out")(
+            self.state["pools"],
+            self._pad_block_ids(src_blocks, self._swap_bucket(n)))
+        gathered = self._fetch(gathered)
+        for k, arr in gathered.items():
+            self.swap_pool[k][:, dst_host_blocks] = np.asarray(arr)[:, :n]
+        if r.qslot >= 0 and "qwin" in self.state:
+            self._swap_qwin[r.rid] = self._fetch(
+                self.state["qwin"][:, r.qslot])
+
+    def _swap_in_buffers(self, m: int):
+        """Reusable padded host staging buffers for a bucket-``m``
+        swap-in (cf. ``_comp_buffers``; realloc-free hot path)."""
+        bufs = self._swap_bufs.get(m)
+        if bufs is None:
+            bufs = {k: np.zeros((host.shape[0], m) + host.shape[2:],
+                                dtype=host.dtype)
+                    for k, host in self.swap_pool.items()}
+            self._swap_bufs[m] = bufs
+        return bufs
+
+    def _swap_in_blocks(self, r: Request, src_host_blocks,
+                        dst_dev_blocks) -> bool:
+        """Scheduler swap-in callback: scatter the parked copy back into
+        freshly allocated device blocks (pools donated — restored in
+        place) and re-arm the decode input: the victim's last sampled
+        token becomes ``tokens_next`` for its new slot. Returns True when
+        the observation window was restored too (the scheduler keeps
+        ``win_count`` only then)."""
+        n = len(dst_dev_blocks)
+        m = self._swap_bucket(n)
+        bufs = self._swap_in_buffers(m)
+        vals = {}
+        for k, host in self.swap_pool.items():
+            bufs[k][:, :n] = host[:, src_host_blocks]
+            vals[k] = jnp.asarray(bufs[k])
+        self.state["pools"] = self._swap_fn("swap_in")(
+            self.state["pools"], self._pad_block_ids(dst_dev_blocks, m),
+            vals)
+        if r.output and not r.prefill_pending:
+            self.tokens_next[r.slot] = r.output[-1]
+            self._tokens_dirty = True
+        qwin = self._swap_qwin.pop(r.rid, None)
+        if qwin is None or r.qslot < 0:
+            return False
+        self.state["qwin"] = self.state["qwin"].at[:, r.qslot].set(
+            jnp.asarray(qwin))
+        return True
 
     # ------------------------------------------------------------------
     # plan execution: decode
@@ -842,13 +1004,21 @@ class ZipageEngine:
                 "rid": self._rid, "step": self.step_count,
                 "admission_scale": self.scheduler.admission_scale,
                 "ewma": self.scheduler.ewma,
+                "n_swapped_out": self.scheduler.n_swapped_out,
+                "n_swapped_in": self.scheduler.n_swapped_in,
+                "swap_bytes": self.scheduler.swap_bytes,
             }),
             "requests": copy.deepcopy({
                 "waiting": list(self.scheduler.waiting),
                 "running": self.scheduler.running,
+                "swapped": list(self.scheduler.swapped),
                 "finished": self.scheduler.finished,
             }),
             "bm": copy.deepcopy(self.bm),
+            "swap_pool": (None if self.swap_pool is None else
+                          {k: v.copy() for k, v in self.swap_pool.items()}),
+            "swap_qwin": {rid: np.asarray(a).copy()
+                          for rid, a in self._swap_qwin.items()},
         }
 
     def restore(self, snap):
@@ -863,12 +1033,21 @@ class ZipageEngine:
         sched.free_slots, sched.free_qslots = h["free_slots"], h["free_qslots"]
         sched.admission_scale = h.get("admission_scale", 1.0)
         sched.ewma = h.get("ewma")
+        sched.n_swapped_out = h.get("n_swapped_out", 0)
+        sched.n_swapped_in = h.get("n_swapped_in", 0)
+        sched.swap_bytes = h.get("swap_bytes", 0)
         self._rid, self.step_count = h["rid"], h["step"]
         r = copy.deepcopy(snap["requests"])
         sched.waiting = deque(r["waiting"])
         sched.running = r["running"]
+        sched.swapped = deque(r.get("swapped", []))
         sched.finished = r["finished"]
         sched.bm = copy.deepcopy(snap["bm"])
+        sp = snap.get("swap_pool")
+        if sp is not None and self.swap_pool is not None:
+            self.swap_pool = {k: v.copy() for k, v in sp.items()}
+        self._swap_qwin = {rid: a.copy()
+                           for rid, a in snap.get("swap_qwin", {}).items()}
         # invalidate every device mirror: the next step re-pushes tables
         # and fused sampling state wholesale
         self._pushed_version = -1

@@ -53,6 +53,29 @@ def scatter_prefill(pool, block_tables, values, lengths, start=None):
 
 
 # ----------------------------------------------------------------------
+# whole-block copies (host swap tier, docs/SCHEDULER.md)
+
+def gather_kv_blocks(pool, block_ids):
+    """Gather whole blocks across every layer of a pool leaf.
+
+    pool: (L, N_total, b, ...); block_ids: (m,) int32, padded with -1.
+    Returns (L, m, b, ...); padding rows carry garbage — callers slice by
+    the real block count. The swap-out half of the host swap tier: the
+    result is fetched to host and parked in the CPU swap pool.
+    """
+    return pool[:, jnp.maximum(block_ids, 0)]
+
+
+def scatter_kv_blocks(pool, block_ids, values):
+    """Inverse of :func:`gather_kv_blocks`: write (L, m, b, ...) values
+    back into the pool at ``block_ids`` (-1 entries dropped). Swap-in
+    restores a preempted request's KV bit-for-bit."""
+    n = pool.shape[1]
+    idx = jnp.where(block_ids >= 0, block_ids, n)
+    return pool.at[:, idx].set(values.astype(pool.dtype), mode="drop")
+
+
+# ----------------------------------------------------------------------
 # reads
 
 def gather_entries(pool, block_tables):

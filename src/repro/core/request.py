@@ -14,6 +14,8 @@ class State(enum.Enum):
     BLOCKED = "blocked"          # in running queue, cannot decode (no block /
     #                              slotless past the b-w boundary)
     COMPRESSING = "compressing"  # async compression in flight, skips decode
+    SWAPPED = "swapped"          # preempted to the host swap tier; KV parked
+    #                              in CPU memory, awaiting swap-in
     FINISHED = "finished"
 
 
@@ -48,6 +50,7 @@ class Request:
     chain: List[int] = dataclasses.field(default_factory=list)
     n_shared: int = 0                  # shared blocks at admission
     preempt_count: int = 0
+    n_swaps: int = 0                   # swap-mode preemptions among those
     win_count: int = 0                 # observation-window entries captured
 
     # chunked-prefill progress (owned by repro.core.scheduler): tokens of

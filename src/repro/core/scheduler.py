@@ -36,6 +36,7 @@ from __future__ import annotations
 import dataclasses
 import math
 import time
+import warnings
 from collections import deque
 from typing import Deque, Dict, List, Optional, Sequence
 
@@ -65,6 +66,18 @@ class SchedulerParams:
     # --- policy knobs (SchedulerConfig on the repro.api facade) ---
     policy: str = "fcfs"             # fcfs | priority | srpt
     preemption: Optional[str] = None  # victim-order policy; None => policy
+    # what preemption *does* (docs/SCHEDULER.md "Preemption modes"):
+    # "recompute" frees the victim's blocks and re-prefills on
+    # re-admission; "swap" parks its KV in the host swap tier and restores
+    # it block-for-block; "auto" picks per victim by the cost model below
+    preemption_mode: str = "recompute"   # recompute | swap | auto
+    # auto cost model: host-copy cost of one KV token-slot (one direction)
+    # in re-prefill-token equivalents. swap iff
+    #   2 * n_blocks * block_size * swap_cost_per_token < len(full_prompt)
+    # — a compressed victim (small n, long history) swaps, a short
+    # uncompressed one recomputes.
+    swap_cost_per_token: float = 0.5
+    block_bytes: int = 0             # KV bytes per block (swap telemetry)
     token_budget: Optional[int] = None   # prefill+decode tokens per step
     max_prefill_chunk: Optional[int] = None  # per-request chunk cap per step
     admission_margin: float = 0.0    # fraction of projected growth reserved
@@ -112,6 +125,8 @@ class SchedulerOutputs:
         default_factory=list)
     decode: List[Request] = dataclasses.field(default_factory=list)
     preempted: List[Request] = dataclasses.field(default_factory=list)
+    swapped_out: List[Request] = dataclasses.field(default_factory=list)
+    swapped_in: List[Request] = dataclasses.field(default_factory=list)
     finished: List[Request] = dataclasses.field(default_factory=list)
     n_blocked: int = 0
     token_budget: Optional[int] = None
@@ -214,6 +229,19 @@ class Scheduler:
             raise ValueError("admission_margin must be >= 0")
         if params.decode_steps < 1:
             raise ValueError("decode_steps must be >= 1")
+        if params.preemption_mode not in ("recompute", "swap", "auto"):
+            raise ValueError(
+                f"unknown preemption_mode {params.preemption_mode!r}; "
+                "expected one of ('recompute', 'swap', 'auto')")
+        if params.preemption_mode == "swap" and bm.swap_space_blocks <= 0:
+            raise ValueError(
+                "preemption_mode='swap' requires swap_space_blocks > 0 "
+                "(the host swap tier is sized by CacheConfig."
+                "swap_space_blocks)")
+        if params.preemption_mode == "auto" and bm.swap_space_blocks <= 0:
+            warnings.warn(
+                "preemption_mode='auto' with swap_space_blocks=0: the "
+                "swap tier is unarmed, every preemption will recompute")
         self.p = params
         self.bm = bm
         self.policy = make_policy(params.policy)
@@ -221,7 +249,21 @@ class Scheduler:
                                           or params.policy)
         self.waiting: Deque[Request] = deque()
         self.running: List[Request] = []      # admission order
+        self.swapped: Deque[Request] = deque()   # host swap tier, FIFO
         self.finished: Dict[int, Request] = {}
+        # swap execution is device work: the engine registers these two
+        # callbacks (swap_executor(r, device_blocks, host_blocks) and
+        # swap_in_executor(r, host_blocks, device_blocks)) when the host
+        # swap tier is enabled and the arch supports it (paged attention,
+        # no per-slot recurrent state). They run synchronously at plan
+        # time so a victim's KV is parked before its blocks are reused.
+        # None => swap unavailable, every preemption recomputes.
+        self.swap_executor = None
+        self.swap_in_executor = None
+        # cumulative swap telemetry (surfaced via stats())
+        self.n_swapped_out = 0
+        self.n_swapped_in = 0
+        self.swap_bytes = 0
         self.free_slots = list(range(params.max_batch - 1, -1, -1))
         self.free_qslots = list(range(params.m_qslots - 1, -1, -1))
         # straggler-aware admission: EWMA of step latency vs baseline
@@ -240,11 +282,12 @@ class Scheduler:
         self.waiting.append(r)
 
     def has_work(self) -> bool:
-        return bool(self.waiting or self.running)
+        return bool(self.waiting or self.running or self.swapped)
 
     def abort(self, rid: int) -> Optional[Request]:
-        """Remove a waiting/running request, return its blocks to the pool
-        and hand it back for finish bookkeeping (None if unknown)."""
+        """Remove a waiting/running/swapped request, return its blocks to
+        the pool and hand it back for finish bookkeeping (None if
+        unknown)."""
         for r in list(self.waiting):
             if r.rid == rid:
                 self.waiting.remove(r)
@@ -253,6 +296,11 @@ class Scheduler:
             if r.rid == rid:
                 self._release_slots(r)
                 self.running.remove(r)
+                return r
+        for r in list(self.swapped):
+            if r.rid == rid:
+                self.bm.release_swapped(rid)
+                self.swapped.remove(r)
                 return r
         return None
 
@@ -298,19 +346,82 @@ class Scheduler:
             self.free_qslots.append(r.qslot)
         r.slot = r.qslot = -1
 
-    def _preempt(self, r: Request, outs: Optional[SchedulerOutputs]) -> None:
-        self._release_slots(r)
+    def _preempt_mode(self, r: Request) -> str:
+        """Resolve what preemption does to this victim (docs/SCHEDULER.md).
+        Falls back to recompute whenever swap is unavailable: no engine
+        executor (unsupported arch), no blocks to park, or a full swap
+        pool."""
+        mode = self.p.preemption_mode
+        if mode == "recompute":
+            return "recompute"
+        if (self.swap_executor is None or not r.blocks
+                or not self.bm.can_swap_out(r.n_blocks)):
+            return "recompute"
+        if mode == "swap":
+            return "swap"
+        # auto: bytes moved (out now + back in later) vs re-prefilling the
+        # full accumulated prompt. A compressed victim holds n_max-ish
+        # blocks against a far longer history — swap wins; a short
+        # uncompressed one is cheaper to recompute.
+        swap_cost = (2 * r.n_blocks * self.p.block_size
+                     * self.p.swap_cost_per_token)
+        recompute_cost = len(r.prompt) + len(r.output)
+        return "swap" if swap_cost < recompute_cost else "recompute"
+
+    def _reset_for_recompute(self, r: Request) -> None:
+        """Recompute-mode bookkeeping: all progress is discarded; the
+        generated tokens survive as prompt suffix (``full_prompt``) and
+        the request re-enters the front of the waiting queue."""
         r.compressed = False
         r.seq_len = r.position = 0
         r.n_cached = 0
         r.win_count = 0
         r.n_prefilled = r.prefill_target = 0
-        r.preempt_count += 1
         r.state = State.WAITING
-        self.running.remove(r)
         self.waiting.appendleft(r)       # front of waiting queue (§3)
+
+    def _preempt(self, r: Request, outs: Optional[SchedulerOutputs]) -> None:
+        if self._preempt_mode(r) == "swap":
+            self._swap_out(r, outs)
+            return
+        self._release_slots(r)
+        r.preempt_count += 1
+        self.running.remove(r)
+        self._reset_for_recompute(r)
         if outs is not None:
             outs.preempted.append(r)
+
+    def _swap_out(self, r: Request, outs: Optional[SchedulerOutputs]) -> None:
+        """Swap-mode preemption: park the victim's KV in the host swap
+        pool, then free its device resources. Unlike recompute, all
+        progress state (seq_len/position/compressed/prefill cursor, and —
+        via the executor — the observation window and its win_count)
+        survives the round trip. Shared prefix blocks are copy-on-swap:
+        the host copy makes the restore self-contained while the device
+        ref merely drops."""
+        self.version += 1
+        host_blocks = self.bm.swap_out(r.rid, r.n_blocks)
+        # the executor also parks the observation-window rows while the
+        # victim still owns its qslot, so win_count survives the swap
+        self.swap_executor(r, list(r.blocks), host_blocks)
+        self.bm.release(r.blocks)        # prefix-safe: shared blocks decref
+        r.blocks = []
+        if r.slot >= 0:
+            self.free_slots.append(r.slot)
+        if r.qslot >= 0:
+            self.free_qslots.append(r.qslot)
+        r.slot = r.qslot = -1
+        r.n_shared = 0
+        r.preempt_count += 1
+        r.n_swaps += 1
+        r.state = State.SWAPPED
+        self.running.remove(r)
+        self.swapped.append(r)
+        self.n_swapped_out += 1
+        self.swap_bytes += len(host_blocks) * self.p.block_bytes
+        if outs is not None:
+            outs.preempted.append(r)
+            outs.swapped_out.append(r)
 
     def _find_victim(self, requester: Request,
                      exclude: frozenset = frozenset()) -> Optional[Request]:
@@ -326,6 +437,12 @@ class Scheduler:
                         or r.state == State.FINISHED:
                     continue
                 if r.qslot < 0:
+                    # a compressed request can be slotless here only after
+                    # a qslot-starved swap-in; recompute-preempting it
+                    # would discard its condensed KV, so it stays
+                    # swap-only even in this tier
+                    if r.compressed and self._preempt_mode(r) != "swap":
+                        continue
                     return r
         if self.p.prefix_ok:
             for r in order:
@@ -333,6 +450,18 @@ class Scheduler:
                         or r.state == State.FINISHED:
                     continue
                 if not r.compressed:
+                    return r
+        # swap-only tier: compressed victims are never recompute-preempted
+        # (re-prefilling would both waste the compression and rebuild raw
+        # KV, changing their downstream tokens), but the host swap tier
+        # preserves their compressed KV exactly — and moves n_max-fewer
+        # blocks doing it, so eviction-then-swap beats either alone.
+        if self.p.preemption_mode != "recompute":
+            for r in order:
+                if r is requester or r.rid in exclude \
+                        or r.state == State.FINISHED:
+                    continue
+                if r.compressed and self._preempt_mode(r) == "swap":
                     return r
         return None
 
@@ -376,6 +505,7 @@ class Scheduler:
     def schedule(self, step: int = 0) -> SchedulerOutputs:
         outs = SchedulerOutputs(step=step,
                                 token_budget=self.p.token_budget)
+        self._swap_in_ready(outs)
         self._assign_qslots()
         # token budget shared across prefill + decode (continuous batching):
         # every decodable running request is reserved one token up front,
@@ -419,7 +549,60 @@ class Scheduler:
             return prefill_avail - take
         return prefill_avail
 
+    def _swap_in_ready(self, outs: SchedulerOutputs) -> None:
+        """Re-admit swapped requests (FIFO — they already spent their
+        prefill compute) while a decode slot and device blocks are
+        available under the same admission margin waiting requests face.
+        The engine's swap-in executor restores the KV synchronously, so
+        the request decodes this very step."""
+        # a swapped queue with no executor (e.g. a swap-mode snapshot
+        # restored into an engine without a swap tier) can never swap in:
+        # demote those requests to recompute re-admission — their parked
+        # KV is unreachable, but full_prompt rebuilds it
+        while self.swapped and self.swap_in_executor is None:
+            r = self.swapped.popleft()
+            self.bm.release_swapped(r.rid)
+            self._reset_for_recompute(r)
+        while self.swapped:
+            r = self.swapped[0]
+            n = self.bm.n_swapped_blocks(r.rid)
+            if not self.free_slots:
+                break
+            margin = 0
+            if self.p.admission_margin > 0:
+                final_len = len(r.prompt) + r.max_new_tokens
+                own = max(0, self._projected_blocks(final_len) - n)
+                margin = math.ceil(self.p.admission_margin
+                                   * (self.projected_growth() + own))
+            if not self.bm.can_allocate(n, margin=margin):
+                break
+            self.version += 1
+            host_blocks = self.bm.swapped_blocks(r.rid)
+            r.blocks = self.bm.allocate(n)
+            r.slot = self.free_slots.pop()
+            if self.p.compression_enabled and self.free_qslots \
+                    and len(self.running) < self.p.m_qslots:
+                r.qslot = self.free_qslots.pop()
+            r.state = State.RUNNING
+            # slot/qslot + blocks are assigned before the copy: the
+            # executor re-arms tokens_next for the new slot and, given a
+            # qslot, restores the parked observation window (returns
+            # truthy); without that restore the window must re-prime
+            if not self.swap_in_executor(r, host_blocks, r.blocks):
+                r.win_count = 0
+            self.bm.release_swapped(r.rid)
+            self.swapped.popleft()
+            self.running.append(r)
+            self.n_swapped_in += 1
+            self.swap_bytes += n * self.p.block_bytes
+            outs.swapped_in.append(r)
+
     def _admit(self, outs: SchedulerOutputs, prefill_avail, max_chunk):
+        if self.swapped:
+            # anti-thrash: while a swapped request cannot come back (the
+            # head of the queue lacks a slot or blocks), admitting fresh
+            # prompts would grab exactly the resources it is waiting for
+            return prefill_avail
         limit = max(1, int(self.p.prefill_rows * self.admission_scale))
         for r in self.policy.admission_order(self.waiting):
             if len(outs.admitted) >= limit or not self.free_slots:
@@ -721,8 +904,14 @@ class Scheduler:
             n_decoded if n_decoded is not None else len(outs.decode))
         return {
             "policy": self.policy.name,
+            "preemption_mode": self.p.preemption_mode,
             "n_admitted": len(outs.admitted),
             "n_preempted": len(outs.preempted),
+            "n_swapped_out": len(outs.swapped_out),
+            "n_swapped_in": len(outs.swapped_in),
+            "n_swapped": len(self.swapped),
+            "swap_bytes": self.swap_bytes,
+            "swap_util": self.bm.swap_util,
             "n_blocked": outs.n_blocked,
             "n_finished": len(outs.finished),
             "n_prefill_tokens": outs.n_prefill_tokens,

@@ -392,6 +392,52 @@ def build_fused_decode_step(cfg: ArchConfig, spec: ServeSpec, n_steps: int):
 
 
 # ----------------------------------------------------------------------
+# host swap tier (docs/SCHEDULER.md): batched device<->host block copies
+
+def _swap_backend(spec: ServeSpec) -> str:
+    # "chunked" is a decode-attention-only alias; block copies dispatch
+    # through the regular kernel backends
+    return "auto" if spec.attn_backend == "chunked" else spec.attn_backend
+
+
+def build_swap_out_step(cfg: ArchConfig, spec: ServeSpec):
+    """``swap_out(pools, block_ids) -> gathered`` — gather whole KV blocks
+    (every layer, every pool leaf) for a swap-out.
+
+    ``block_ids`` is padded to a fixed width with -1 so one compiled
+    executable serves every victim size; padding rows return garbage the
+    engine slices off before parking the copy in the CPU swap pool.
+    Dispatches through ``repro.kernels.ops`` (``resolve_backend``).
+    """
+    from repro.kernels import ops as kops
+
+    backend = _swap_backend(spec)
+
+    def swap_out(pools, block_ids):
+        return {k: kops.gather_kv_blocks(v, block_ids, backend=backend)
+                for k, v in pools.items()}
+
+    return swap_out
+
+
+def build_swap_in_step(cfg: ArchConfig, spec: ServeSpec):
+    """``swap_in(pools, block_ids, values) -> pools`` — scatter previously
+    swapped-out blocks back into the device pools (swap-in restores the
+    victim's KV bit-for-bit; -1 ids dropped). The engine jits this with
+    the pools donated, so restoration happens in place."""
+    from repro.kernels import ops as kops
+
+    backend = _swap_backend(spec)
+
+    def swap_in(pools, block_ids, values):
+        return {k: kops.scatter_kv_blocks(pools[k], block_ids, values[k],
+                                          backend=backend)
+                for k in pools}
+
+    return swap_in
+
+
+# ----------------------------------------------------------------------
 # prefill
 
 def build_prefill_step(cfg: ArchConfig, spec: ServeSpec):

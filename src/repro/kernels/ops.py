@@ -131,6 +131,37 @@ def _flash_redundancy(k_pages, block_tables, seq_lens, *, p_thresh, backend):
                                     p_thresh=p_thresh)
 
 
+def gather_kv_blocks(pool, block_ids, backend="auto"):
+    """Batched whole-block gather for the host swap tier (swap-out half).
+    All backends lower to the same dense gather — a block copy is pure
+    bandwidth, so the Pallas tiers add nothing over the jnp reference —
+    but dispatch still resolves through ``resolve_backend`` so an
+    accelerator-specific copy kernel can slot in per backend later."""
+    return _gather_kv_blocks(pool, block_ids,
+                             backend=resolve_backend(backend))
+
+
+@functools.partial(jax.jit, static_argnames=("backend",))
+def _gather_kv_blocks(pool, block_ids, *, backend):
+    del backend                      # memcpy-bound: one implementation
+    return paged_ref.gather_kv_blocks(pool, block_ids)
+
+
+def scatter_kv_blocks(pool, block_ids, values, backend="auto"):
+    """Swap-in half: write gathered blocks back at ``block_ids``. The pool
+    is donated — swap-in restores KV in place without doubling the pool's
+    footprint."""
+    return _scatter_kv_blocks(pool, block_ids, values,
+                              backend=resolve_backend(backend))
+
+
+@functools.partial(jax.jit, static_argnames=("backend",),
+                   donate_argnums=(0,))
+def _scatter_kv_blocks(pool, block_ids, values, *, backend):
+    del backend
+    return paged_ref.scatter_kv_blocks(pool, block_ids, values)
+
+
 def compact_gather(pool_flat, src_slots, backend="auto"):
     return _compact_gather(pool_flat, src_slots,
                            backend=resolve_backend(backend))

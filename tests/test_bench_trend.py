@@ -24,6 +24,24 @@ def conc_point(tps, nano=200.0, schema="zipage-bench-concurrency/v2"):
     }
 
 
+def oversub_point(tps, swap_tps, step_speedup=1.05):
+    """Schema-v3 point: the base comparison plus the oversubscribed
+    preemption-mode rows (ISSUE 5)."""
+    pt = conc_point(tps, schema="zipage-bench-concurrency/v3")
+    pt["results"] += [
+        {"name": "oversub_recompute", "tps": round(swap_tps / 1.1, 2),
+         "tokens_per_step": 36.0, "preemptions": 9, "n_swapped_out": 0},
+        {"name": "oversub_swap", "tps": swap_tps, "tokens_per_step": 38.0,
+         "preemptions": 9, "n_swapped_out": 9, "n_swapped_in": 9,
+         "swap_mb": 1.5},
+        {"name": "oversub_auto", "tps": swap_tps, "tokens_per_step": 37.5,
+         "preemptions": 9, "n_swapped_out": 4},
+    ]
+    pt["oversub_speedup_tps_swap_vs_recompute"] = 1.1
+    pt["oversub_speedup_step_swap_vs_recompute"] = step_speedup
+    return pt
+
+
 def kernels_point():
     return {
         "schema": "zipage-bench-kernels/v1", "jax": "0", "platform": "cpu",
@@ -68,6 +86,29 @@ def test_trend_fails_on_regression(tmp_path):
 def test_trend_single_point_trivially_green(tmp_path):
     files = [write(tmp_path, "only.json", conc_point(123.0))]
     assert bench_trend.main(files) == 0
+
+
+def test_trend_v3_history_and_swap_gate(tmp_path):
+    """Synthetic 3-point history (pre-swap v2 point + two v3 points): the
+    table grows a swap column, mixed-schema rows render, and the gate
+    watches the swap-mode series too."""
+    files = [write(tmp_path, "000-pr4.json", conc_point(150.0)),   # pre-v3
+             write(tmp_path, "001-pr5.json", oversub_point(155.0, 300.0)),
+             write(tmp_path, "002-pr6.json", oversub_point(160.0, 310.0))]
+    out = tmp_path / "TREND.md"
+    assert bench_trend.main(files + ["--out", str(out)]) == 0
+    text = out.read_text()
+    assert "swap tok/s" in text and "| 310.0 |" in text
+    assert text.count("\n| 0") == 3            # one row per point
+    # swap-mode collapse fails the gate even with zipage tps healthy
+    files[2] = write(tmp_path, "002-pr6.json", oversub_point(160.0, 200.0))
+    assert bench_trend.main(files) == 1
+    # a single v3 point after v2 history: swap series has <2 points,
+    # zipage series still gates across the schema boundary
+    assert bench_trend.main(files[:2]) == 0
+    assert bench_trend.main([files[0],
+                             write(tmp_path, "001b.json",
+                                   oversub_point(80.0, 300.0))]) == 1
 
 
 def test_trend_unknown_schema_skipped(tmp_path):

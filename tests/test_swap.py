@@ -1,0 +1,380 @@
+"""Host-KV swap preemption tier (ISSUE 5, docs/SCHEDULER.md "Preemption
+modes").
+
+Swap-mode preemption must be *invisible in the token streams*: a victim's
+KV (and its observation window) is parked in the CPU swap pool and
+restored bit-for-bit, so under any preemption pressure the outputs must
+match recompute mode — greedy, seeded top-k/top-p, logprobs, compression
+and all — while moving blocks instead of re-prefilling. On top of the
+parity pins: prefix-cache ref-count safety across the swap cycle
+(shared blocks are copy-on-swap), snapshot/restore with a non-empty
+swapped queue, the auto mode's cost model, and pool accounting that never
+leaks a device or host block.
+"""
+import dataclasses
+
+import jax
+import numpy as np
+import pytest
+
+from repro.api import SamplingParams as ApiSamplingParams, Zipage
+from repro.configs import get_config
+from repro.core.block_manager import BlockManager
+from repro.core.compression import CompressOptions
+from repro.core.engine import EngineOptions, ZipageEngine
+from repro.core.request import State
+from repro.core.sampling import SamplingParams
+from repro.core.scheduler import Scheduler, SchedulerParams
+from repro.models import lm
+
+CFG = dataclasses.replace(get_config("tiny-lm"), dtype="float32")
+PARAMS = lm.init(CFG, jax.random.key(0))
+
+PROMPTS = [[1, 2, 3, 4, 5], [9, 8, 7], [10, 11, 12, 13, 14, 15, 16],
+           [20, 21]]
+# greedy + seeded top-k/top-p + a logprob consumer, long enough that
+# compression triggers (n_max=3 * block_size=8 = 24-token budget)
+MIXED = [SamplingParams(max_new_tokens=28),
+         SamplingParams(max_new_tokens=28, temperature=0.8, top_k=5,
+                        seed=7),
+         SamplingParams(max_new_tokens=28, temperature=1.1, top_p=0.9,
+                        seed=3),
+         SamplingParams(max_new_tokens=28, temperature=0.7, seed=11,
+                        logprobs=True)]
+
+
+def make_engine(**kw):
+    # 10 blocks for 4 requests wanting ~4 blocks each: preemption fires
+    # in every mode (same spec as test_engine's preemption test, so the
+    # jitted steps are shared across the suite)
+    base = dict(block_size=8, n_total_blocks=10, max_batch=4, m_qslots=4,
+                n_max=3, window=4, max_model_len=256, prefill_rows=2,
+                prefill_len=64, compress=CompressOptions(window=4))
+    base.update(kw)
+    return ZipageEngine(CFG, PARAMS, EngineOptions(**base))
+
+
+def run_tight(mode, **kw):
+    swap = 0 if mode == "recompute" else 24
+    eng = make_engine(preemption_mode=mode, swap_space_blocks=swap, **kw)
+    rids = [eng.add_request(p, sp) for p, sp in zip(PROMPTS, MIXED)]
+    done = eng.run(max_steps=2000)
+    outs = [(done[r].output, done[r].logprobs) for r in rids]
+    return outs, eng
+
+
+def total(eng, key):
+    return sum(m[key] for m in eng.metrics)
+
+
+REC, REC_ENG = run_tight("recompute")
+SWAP, SWAP_ENG = run_tight("swap")
+
+
+# ----------------------------------------------------------------------
+# token-stream parity under forced preemption
+
+
+def test_recompute_vs_swap_token_stream_parity():
+    """The headline pin: under a pool tight enough to force preemption,
+    swap mode and recompute mode emit identical tokens *and* logprobs —
+    and both actually preempted (otherwise the test proves nothing)."""
+    assert total(REC_ENG, "n_preempted") > 0
+    assert total(SWAP_ENG, "n_preempted") > 0
+    assert total(SWAP_ENG, "n_swapped_out") > 0
+    assert total(REC_ENG, "n_swapped_out") == 0
+    assert total(SWAP_ENG, "n_swapped_out") == total(SWAP_ENG,
+                                                     "n_swapped_in")
+    assert REC == SWAP
+
+
+def test_auto_mode_parity_and_telemetry():
+    outs, eng = run_tight("auto")
+    assert outs == REC
+    assert total(eng, "n_preempted") > 0
+    # cumulative swap telemetry is monotone and consistent
+    assert eng.metrics[-1]["swap_bytes"] >= 0
+    assert 0.0 <= eng.metrics[-1]["swap_util"] <= 1.0
+
+
+def test_swap_stream_matches_unpressured_run():
+    """Swap restores KV bit-for-bit, so the swapped run's streams equal a
+    run with an ample pool where nothing is ever preempted."""
+    eng = make_engine(n_total_blocks=64)
+    rids = [eng.add_request(p, sp) for p, sp in zip(PROMPTS, MIXED)]
+    done = eng.run(max_steps=2000)
+    assert total(eng, "n_preempted") == 0
+    ample = [(done[r].output, done[r].logprobs) for r in rids]
+    assert SWAP == ample
+
+
+def test_swap_accounting_drains_clean():
+    """After the swapped run completes, every device and host block is
+    back in its pool and the swapped queue is empty."""
+    bm = SWAP_ENG.bm
+    bm.check_invariants()
+    assert bm.num_free == SWAP_ENG.opts.n_total_blocks
+    assert len(bm.swap_free) == SWAP_ENG.opts.swap_space_blocks
+    assert bm.swapped == {}
+    assert not SWAP_ENG.scheduler.swapped
+    assert SWAP_ENG._swap_qwin == {}
+
+
+# ----------------------------------------------------------------------
+# pure-host scheduler units (no model, no device steps)
+
+
+def make_swap_sched(n_blocks=16, block_size=4, swap_blocks=8,
+                    prefix_ok=False, **kw):
+    base = dict(block_size=block_size, max_batch=4, m_qslots=4, n_max=3,
+                window=2, prefill_rows=4, compression_enabled=True,
+                budget_blocks=2, prefix_ok=prefix_ok,
+                preemption_mode="swap", block_bytes=100)
+    base.update(kw)
+    s = Scheduler(SchedulerParams(**base),
+                  BlockManager(n_blocks, block_size,
+                               enable_prefix_cache=prefix_ok,
+                               swap_space_blocks=swap_blocks))
+    log = []
+    s.swap_executor = lambda r, src, dst: log.append(
+        ("out", r.rid, list(src), list(dst)))
+    s.swap_in_executor = lambda r, src, dst: log.append(
+        ("in", r.rid, list(src), list(dst)))
+    return s, log
+
+
+def waiting_request(rid, n_prompt, n_out):
+    from repro.core.request import Request
+    return Request(rid=rid, prompt=list(range(1, n_prompt + 1)),
+                   max_new_tokens=n_out, arrival=float(rid))
+
+
+def test_preemption_mode_validation():
+    with pytest.raises(ValueError, match="preemption_mode"):
+        Scheduler(SchedulerParams(preemption_mode="hibernate"),
+                  BlockManager(8, 4))
+    with pytest.raises(ValueError, match="swap_space_blocks"):
+        Scheduler(SchedulerParams(preemption_mode="swap"),
+                  BlockManager(8, 4, swap_space_blocks=0))
+    # the facade rejects the same contradiction (plumbed through
+    # CacheConfig.swap_space_blocks / SchedulerConfig.preemption_mode)
+    with pytest.raises(ValueError, match="swap_space_blocks"):
+        Zipage(CFG, PARAMS, block_size=8, n_total_blocks=32,
+               preemption_mode="swap")
+
+
+def test_auto_cost_model_picks_per_victim():
+    """auto: a compressed victim (few blocks, long history) swaps; a
+    short uncompressed one recomputes; and swap degrades to recompute
+    when the executor is missing or the host pool is full."""
+    s, _log = make_swap_sched(preemption_mode="auto")
+    short = waiting_request(0, n_prompt=8, n_out=4)
+    short.blocks = s.bm.allocate(2)
+    short.state = State.RUNNING
+    compressed = waiting_request(1, n_prompt=8, n_out=40)
+    compressed.blocks = s.bm.allocate(3)
+    compressed.compressed = True
+    compressed.output = list(range(30))      # long accumulated history
+    compressed.state = State.RUNNING
+    # swap cost 2*2*4*0.5 = 8 tokens vs re-prefill 8 -> tie goes recompute
+    assert s._preempt_mode(short) == "recompute"
+    # swap cost 2*3*4*0.5 = 12 << 38-token re-prefill -> swap
+    assert s._preempt_mode(compressed) == "swap"
+    s.swap_executor = None
+    assert s._preempt_mode(compressed) == "recompute"
+
+
+def test_swap_mode_always_swaps_when_possible():
+    s, _log = make_swap_sched(preemption_mode="swap")
+    r = waiting_request(0, n_prompt=8, n_out=4)
+    r.blocks = s.bm.allocate(2)
+    r.state = State.RUNNING
+    assert s._preempt_mode(r) == "swap"
+    s.bm.swap_free = []                      # host pool exhausted
+    assert s._preempt_mode(r) == "recompute"
+
+
+def test_swap_cycle_preserves_prefix_cache_refcounts():
+    """Shared prefix blocks are copy-on-swap: swapping a sharer out drops
+    only its own ref (the peer and the cache keep serving the block), and
+    swap-in restores private copies without disturbing the cache."""
+    s, log = make_swap_sched(n_blocks=16, prefix_ok=True)
+    a = waiting_request(0, n_prompt=8, n_out=20)     # 2 full blocks
+    b = waiting_request(1, n_prompt=8, n_out=20)     # same prompt
+    s.add_request(a)
+    s.add_request(b)
+    plan = s.schedule()
+    assert len(plan.admitted) == 2 and b.n_shared == 2
+    shared = list(a.blocks)
+    assert all(s.bm.ref[blk] == 2 for blk in shared)
+    for r in (a, b):
+        r.n_prefilled = r.prefill_target         # prefill "done"
+        r.output = [1]
+    s._swap_out(a, None)
+    assert a.state == State.SWAPPED and a.blocks == []
+    assert all(s.bm.ref[blk] == 1 for blk in shared), \
+        "peer's refs must survive the sharer's swap-out"
+    assert s.bm.n_swapped_blocks(a.rid) == 2
+    assert log[-1][0] == "out" and log[-1][1] == a.rid
+    s.bm.check_invariants()
+    plan2 = s.schedule()
+    assert plan2.swapped_in == [a] and a.state == State.RUNNING
+    assert log[-1][0] == "in" and log[-1][1] == a.rid
+    # restored blocks are private copies; the cached originals still
+    # belong to the peer and the hash chain is untouched
+    assert set(a.blocks).isdisjoint(shared)
+    assert all(s.bm.ref[blk] == 1 for blk in a.blocks + shared)
+    assert all(blk in s.bm.block_hash for blk in shared)
+    assert s.bm.swapped == {} and not s.swapped
+    assert s.n_swapped_out == 1 and s.n_swapped_in == 1
+    assert s.swap_bytes == 4 * 100               # 2 blocks out + 2 back in
+    s.bm.check_invariants()
+
+
+def test_swapped_queue_blocks_fresh_admission():
+    """Anti-thrash: while a swapped request cannot come back, fresh
+    prompts must not steal the blocks it is waiting for."""
+    s, _log = make_swap_sched(n_blocks=8)
+    v = waiting_request(0, n_prompt=8, n_out=20)
+    s.add_request(v)
+    plan = s.schedule()
+    assert plan.admitted == [v]
+    v.n_prefilled = v.prefill_target
+    s._swap_out(v, None)
+    s.bm.allocate(s.bm.num_free)                 # someone holds every block
+    s.add_request(waiting_request(1, n_prompt=4, n_out=4))
+    plan2 = s.schedule()
+    assert plan2.admitted == [] and plan2.swapped_in == []
+    assert s.has_work()
+
+
+def test_abort_swapped_request_releases_host_blocks():
+    s, _log = make_swap_sched()
+    r = waiting_request(0, n_prompt=8, n_out=20)
+    s.add_request(r)
+    s.schedule()
+    r.n_prefilled = r.prefill_target
+    s._swap_out(r, None)
+    assert s.bm.swap_util > 0
+    assert s.abort(r.rid) is r
+    assert s.bm.swapped == {} and not s.swapped and s.bm.swap_util == 0.0
+    s.bm.check_invariants()
+
+
+# ----------------------------------------------------------------------
+# snapshot/restore + leak property (engine level)
+
+
+def test_snapshot_restore_with_nonempty_swapped_queue():
+    """Fault tolerance across the swap tier: snapshot taken while a
+    request sits in the swapped queue (KV parked on host) must restore to
+    byte-identical streams."""
+    def boot():
+        eng = make_engine(preemption_mode="swap", swap_space_blocks=24,
+                          prefix_caching=False)
+        rids = [eng.add_request([30 + i, 2, 3, 4, 5], sp)
+                for i, sp in enumerate(
+                    [SamplingParams(max_new_tokens=30)] * 5)]
+        return eng, rids
+
+    eng, rids = boot()
+    snap = None
+    for _ in range(400):
+        eng.step()
+        if eng.scheduler.swapped:
+            snap = eng.snapshot()
+            break
+    assert snap is not None, "never caught a non-empty swapped queue"
+    assert len(snap["requests"]["swapped"]) > 0
+    done_a = eng.run(max_steps=2000)
+    out_a = [done_a[r].output for r in rids]
+    eng2, _ = boot()
+    eng2.restore(snap)
+    assert eng2.scheduler.swapped
+    done_b = eng2.run(max_steps=2000)
+    out_b = [done_b[r].output for r in rids]
+    assert out_a == out_b
+    eng2.bm.check_invariants()
+    assert len(eng2.bm.swap_free) == eng2.opts.swap_space_blocks
+
+
+def test_restore_swap_snapshot_without_swap_tier_degrades():
+    """A swap-mode snapshot with a non-empty swapped queue restored into
+    an engine without a swap tier must not crash: the parked KV is
+    unreachable there, so those requests demote to recompute
+    re-admission and still finish."""
+    eng = make_engine(preemption_mode="swap", swap_space_blocks=24,
+                      prefix_caching=False)
+    rids = [eng.add_request([40 + i, 2, 3, 4, 5],
+                            SamplingParams(max_new_tokens=30))
+            for i in range(5)]
+    snap = None
+    for _ in range(400):
+        eng.step()
+        if eng.scheduler.swapped:
+            snap = eng.snapshot()
+            break
+    assert snap is not None
+    plain = make_engine(prefix_caching=False)    # no swap tier at all
+    plain.restore(snap)
+    assert plain.scheduler.swapped
+    done = plain.run(max_steps=2000)
+    assert sorted(done) == sorted(rids)
+    assert all(len(done[r].output) == 30 for r in rids)
+    plain.bm.check_invariants()
+    assert plain.bm.num_free == plain.opts.n_total_blocks
+
+
+def test_swap_cost_per_token_is_public_config():
+    """The auto cost model's exchange rate rides the facade config path
+    (docs/SCHEDULER.md documents the formula, so the knob must be
+    reachable)."""
+    from repro.api.config import build_engine_options, route_overrides
+    cache, sched, runner = route_overrides(preemption_mode="auto",
+                                           swap_space_blocks=8,
+                                           swap_cost_per_token=0.125)
+    assert sched.swap_cost_per_token == 0.125
+    opts = build_engine_options(cache, sched, runner)
+    assert opts.swap_cost_per_token == 0.125
+    assert opts.swap_space_blocks == 8
+
+
+@pytest.mark.parametrize("seed", [0, 1])
+def test_swap_pool_accounting_never_leaks(seed):
+    """Property: random oversubscribed workloads under auto mode leave
+    both pools exactly full and every queue empty."""
+    rng = np.random.default_rng(seed)
+    eng = make_engine(preemption_mode="auto", swap_space_blocks=16,
+                      prefix_caching=bool(seed % 2))
+    rids = []
+    for i in range(6):
+        p = rng.integers(1, 50, size=int(rng.integers(2, 9))).tolist()
+        sp = SamplingParams(max_new_tokens=int(rng.integers(8, 30)),
+                            temperature=float(rng.choice([0.0, 0.9])),
+                            seed=int(rng.integers(0, 100)))
+        rids.append(eng.add_request(p, sp))
+    done = eng.run(max_steps=3000)
+    assert sorted(done) == sorted(rids)
+    bm = eng.bm
+    bm.check_invariants()
+    assert bm.num_free == eng.opts.n_total_blocks
+    assert len(bm.swap_free) == eng.opts.swap_space_blocks
+    assert bm.swapped == {} and not eng.scheduler.swapped
+    assert eng._swap_qwin == {}
+
+
+def test_facade_surfaces_swap_telemetry():
+    z = Zipage(CFG, PARAMS, block_size=8, n_total_blocks=10, max_batch=4,
+               m_qslots=4, n_max=3, window=4, max_model_len=256,
+               prefill_rows=2, prefill_len=64,
+               preemption_mode="swap", swap_space_blocks=24)
+    outs = z.generate(PROMPTS, [ApiSamplingParams(max_new_tokens=24)] * 4,
+                      max_steps=2000)
+    assert all(o.n_tokens == 24 for o in outs)
+    stats = z.scheduler_stats
+    for key in ("preemption_mode", "n_swapped_out", "n_swapped_in",
+                "n_swapped", "swap_bytes", "swap_util"):
+        assert key in stats
+    assert stats["preemption_mode"] == "swap"
+    assert sum(m["n_swapped_out"] for m in z.metrics) > 0
+    assert max(m["swap_bytes"] for m in z.metrics) > 0

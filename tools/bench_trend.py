@@ -13,10 +13,12 @@ artifacts plus the freshly produced smoke JSON):
         bench-concurrency-smoke.json --out BENCH_TREND.md
 
 Output: a markdown trajectory table per benchmark kind. Exit status: 1 if
-the newest concurrency point's zipage decode throughput (``tps``) dropped
-more than ``--max-regression`` (default 0.25, i.e. 25%) below the
-previous point's; 0 otherwise (a single point trivially passes).
-Stdlib only — safe to run anywhere CI can run python.
+the newest concurrency point's zipage decode throughput (``tps``) — or,
+once oversubscribed points exist (schema v3), the swap-mode decode
+throughput (``oversub_swap``) — dropped more than ``--max-regression``
+(default 0.25, i.e. 25%) below the previous point's; 0 otherwise (a
+single point trivially passes). Stdlib only — safe to run anywhere CI
+can run python.
 """
 from __future__ import annotations
 
@@ -26,8 +28,14 @@ import sys
 from pathlib import Path
 
 CONCURRENCY_SCHEMAS = ("zipage-bench-concurrency/v1",
-                       "zipage-bench-concurrency/v2")
+                       "zipage-bench-concurrency/v2",
+                       "zipage-bench-concurrency/v3")
 KERNELS_SCHEMAS = ("zipage-bench-kernels/v1",)
+
+#: (result name, human label) series the regression gate watches; a
+#: series only gates between consecutive points that both report it, so
+#: pre-v3 history mixes fine with v3 points
+GATED_SERIES = (("zipage", "zipage"), ("oversub_swap", "swap-mode"))
 
 
 def load_points(paths):
@@ -64,20 +72,24 @@ def concurrency_table(points):
         "## Decode throughput trajectory (bench_concurrency)",
         "",
         "| point | zipage tok/s | nano tok/s | speedup | tok/step "
-        "| t_host ms | t_device ms | horizon |",
-        "|---|---|---|---|---|---|---|---|",
+        "| t_host ms | t_device ms | horizon | swap tok/s "
+        "| swap/recompute (step) |",
+        "|---|---|---|---|---|---|---|---|---|---|",
     ]
     for pt in points:
         d = pt["data"]
         z = _result(d, "zipage")
         n = _result(d, "nano_vllm")
+        sw = _result(d, "oversub_swap")       # v3 oversubscribed scenario
         fmt = lambda v: "-" if v is None else f"{v}"  # noqa: E731
         lines.append(
             f"| {pt['label']} | {fmt(z.get('tps'))} | {fmt(n.get('tps'))} "
             f"| {fmt(d.get('speedup_tps_zipage_vs_nano'))} "
             f"| {fmt(z.get('tokens_per_step'))} "
             f"| {fmt(z.get('t_host_ms'))} | {fmt(z.get('t_device_ms'))} "
-            f"| {fmt(z.get('mean_decode_horizon'))} |")
+            f"| {fmt(z.get('mean_decode_horizon'))} "
+            f"| {fmt(sw.get('tps'))} "
+            f"| {fmt(d.get('oversub_speedup_step_swap_vs_recompute'))} |")
     return lines
 
 
@@ -108,17 +120,24 @@ def kernels_table(points):
 
 
 def check_regression(points, max_regression):
-    """(ok, message) for the newest vs previous zipage decode tps."""
-    tps = [(pt["label"], _result(pt["data"], "zipage").get("tps"))
-           for pt in points]
-    tps = [(label, t) for label, t in tps if t]
-    if len(tps) < 2:
-        return True, "regression gate: <2 concurrency points, trivially OK"
-    (prev_label, prev), (cur_label, cur) = tps[-2], tps[-1]
-    floor = (1.0 - max_regression) * prev
-    msg = (f"regression gate: {cur_label} zipage {cur} tok/s vs "
-           f"{prev_label} {prev} tok/s (floor {floor:.2f})")
-    return cur >= floor, msg
+    """(ok, message) for the newest vs previous decode tps, across every
+    gated series (plain zipage + v3's swap-mode oversubscribed run). Each
+    series compares its own two newest points, so older history without a
+    series never blocks a newer one from gating."""
+    ok, msgs = True, []
+    for result_name, label in GATED_SERIES:
+        tps = [(pt["label"], _result(pt["data"], result_name).get("tps"))
+               for pt in points]
+        tps = [(lbl, t) for lbl, t in tps if t]
+        if len(tps) < 2:
+            msgs.append(f"{label}: <2 points, trivially OK")
+            continue
+        (prev_label, prev), (cur_label, cur) = tps[-2], tps[-1]
+        floor = (1.0 - max_regression) * prev
+        msgs.append(f"{label}: {cur_label} {cur} tok/s vs "
+                    f"{prev_label} {prev} tok/s (floor {floor:.2f})")
+        ok = ok and cur >= floor
+    return ok, "regression gate: " + "; ".join(msgs)
 
 
 def main(argv=None):
