@@ -1,8 +1,8 @@
 PYTHON ?= python
 export PYTHONPATH := src$(if $(PYTHONPATH),:$(PYTHONPATH))
 
-.PHONY: test test-fast lint docs-check quickstart bench bench-kernels \
-	bench-concurrency bench-trend install-dev
+.PHONY: test test-fast test-sanitize lint zipalint docs-check quickstart \
+	bench bench-kernels bench-concurrency bench-trend install-dev
 
 # tier-1 verify (ROADMAP.md). Local default is fail-fast; CI overrides
 # PYTEST_ARGS (e.g. --junitxml=...) and drops -x so junit reports are
@@ -11,12 +11,23 @@ PYTEST_ARGS ?= -x
 test:
 	$(PYTHON) -m pytest -q $(PYTEST_ARGS)
 
+# tier-1 with the whole-engine runtime sanitizer armed: every step is
+# followed by a full state audit (queues, pools, refcounts, qwin
+# ownership — docs/ANALYSIS.md). Slower; CI runs a slice of it.
+test-sanitize:
+	ZIPAGE_SANITIZE=1 $(PYTHON) -m pytest -q $(PYTEST_ARGS)
+
 # correctness lint (ruff config in pyproject.toml; pip install ruff)
 lint:
 	$(PYTHON) -m ruff check src tests benchmarks examples
 
-# docs gate (run in CI): intra-repo markdown links resolve + every public
-# SchedulerConfig/CacheConfig field appears in README/docs
+# repo-specific architectural static analysis (stdlib-only; zero
+# findings is the gate — docs/ANALYSIS.md lists the rules and waivers)
+zipalint:
+	$(PYTHON) tools/zipalint.py
+
+# docs gate (run in CI): intra-repo markdown links resolve. Config-field
+# coverage moved into zipalint (rule ZPL004).
 docs-check:
 	$(PYTHON) tools/docs_check.py
 

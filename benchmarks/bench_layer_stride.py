@@ -37,7 +37,8 @@ def run():
         fn = jax.jit(build_compress_fn(CFG, block_size=b, max_blocks=mb,
                                        budget_blocks=mb - 1, opts=opts))
 
-        def compress_strided():
+        def compress_strided(fn=fn, stride=stride):
+            # bind loop vars as defaults: the closure outlives the loop
             outs = []
             for g in range(0, L, stride):
                 sub_pools = {k: v[g:g + stride] for k, v in pools.items()}

@@ -19,7 +19,8 @@ def main():
     recs = {}
     skips = []
     for f in sorted(glob.glob(os.path.join(RESULTS, "*.json"))):
-        j = json.load(open(f))
+        with open(f) as fh:
+            j = json.load(fh)
         key = (j["arch"], j["shape"], j["mesh"], j.get("variant", "baseline"))
         recs[key] = j
         if j["status"] == "skipped" and j["variant"] == "baseline":
@@ -78,7 +79,7 @@ def main():
 
     print("\n### Skipped cells (per assignment rules)\n")
     seen = set()
-    for arch, shape, mesh, reason in skips:
+    for arch, shape, _mesh, reason in skips:
         if (arch, shape) in seen:
             continue
         seen.add((arch, shape))

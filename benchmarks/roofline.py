@@ -14,7 +14,8 @@ def load_records():
     recs = []
     for f in sorted(glob.glob(os.path.join(RESULTS, "*.json"))):
         try:
-            recs.append(json.load(open(f)))
+            with open(f) as fh:
+                recs.append(json.load(fh))
         except Exception:
             pass
     return recs

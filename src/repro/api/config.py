@@ -87,7 +87,6 @@ class ModelRunnerConfig:
     prefill_rows: int = 4
     prefill_len: int = 128
     dtype: str = "float32"
-    layer_stride: int = 0            # 0 => all layers in one compress call
     measure_phases: bool = False     # block per phase for timing benches
     # kernel dispatch (repro.kernels.ops / docs/KERNELS.md): "auto" resolves
     # to pallas-tpu on TPU hosts and the jnp reference elsewhere;
@@ -176,7 +175,6 @@ def build_engine_options(cache: CacheConfig, scheduler: SchedulerConfig,
         prefill_rows=runner.prefill_rows,
         prefill_len=runner.prefill_len,
         dtype=runner.dtype,
-        layer_stride=runner.layer_stride,
         measure_phases=runner.measure_phases,
         kernel_backend=runner.kernel_backend,
         fuse_sampling=runner.fuse_sampling,

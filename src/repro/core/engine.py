@@ -43,7 +43,7 @@ import jax.numpy as jnp
 import numpy as np
 
 from repro.configs.base import ArchConfig
-from repro.core import serve_model
+from repro.core import invariants, serve_model
 from repro.core.block_manager import BlockManager
 from repro.core.compression import CompressOptions, build_compress_fn
 from repro.core.request import FinishReason, Request, State
@@ -153,7 +153,6 @@ class EngineOptions:
     temperature: float = 0.0         # 0 => greedy
     seed: int = 0
     dtype: str = "float32"
-    layer_stride: int = 0            # 0 => all layers in one compress call
     measure_phases: bool = False     # block per phase for timing benches
     # engine-wide kernel backend (repro.kernels.ops): auto | jnp |
     # pallas-interpret | pallas-tpu, plus "chunked" (decode attention only).
@@ -214,7 +213,8 @@ class ZipageEngine:
             warnings.warn(
                 f"preemption_mode={opts.preemption_mode!r} cannot swap on "
                 "this arch (recurrent/ring/enc-dec state is per-slot, not "
-                "paged); falling back to recompute-mode preemption")
+                "paged); falling back to recompute-mode preemption",
+                stacklevel=2)
         # the scheduling subsystem: owns queues, slot pools and the block
         # manager; every policy decision happens in there
         self.scheduler = Scheduler(
@@ -281,6 +281,12 @@ class ZipageEngine:
         self.swap_pool: Optional[Dict[str, np.ndarray]] = None
         self._swap_qwin: Dict[int, np.ndarray] = {}   # rid -> parked window
         self._swap_bufs: Dict[int, dict] = {}         # bucket -> staging
+        # runtime sanitizer (docs/ANALYSIS.md): whole-engine state audit
+        # after every step when ZIPAGE_SANITIZE=1; _qwin_shadow holds
+        # host copies of free observation-window rows so writes to rows
+        # no active slot owns are caught (the PR-4 qwin masking bug class)
+        self.sanitize = invariants.enabled()
+        self._qwin_shadow: Dict[int, np.ndarray] = {}
         if self._swap_ok:
             self._init_swap()
         if self.compression_enabled:
@@ -565,24 +571,33 @@ class ZipageEngine:
         m = 1
         while True:
             pad = jnp.full((m,), -1, jnp.int32)
-            gathered = self._swap_fn("swap_out")(self.state["pools"], pad)
-            self.state["pools"] = self._swap_fn("swap_in")(
+            gathered = self._swap_out_fn()(self.state["pools"], pad)
+            self.state["pools"] = self._swap_in_fn()(
                 self.state["pools"], pad, gathered)
             if m >= self.max_blocks:
                 break
             m = min(2 * m, self.max_blocks)
 
-    def _swap_fn(self, kind: str):
-        key = (kind, self.cfg, self.spec)
+    # one factory per donation signature (zipalint ZPL003): swap-out
+    # gathers without touching the pools, swap-in scatters with the pools
+    # donated — callers of _swap_in_fn() must rebind self.state["pools"]
+
+    def _swap_out_fn(self):
+        key = ("swap_out", self.cfg, self.spec)
         fn = _SWAP_CACHE.get(key)
         if fn is None:
-            if kind == "swap_out":
-                fn = jax.jit(serve_model.build_swap_out_step(self.cfg,
-                                                             self.spec))
-            else:
-                fn = jax.jit(serve_model.build_swap_in_step(self.cfg,
-                                                            self.spec),
-                             donate_argnums=(0,))
+            fn = jax.jit(serve_model.build_swap_out_step(self.cfg,
+                                                         self.spec))
+            _SWAP_CACHE[key] = fn
+        return fn
+
+    def _swap_in_fn(self):
+        key = ("swap_in", self.cfg, self.spec)
+        fn = _SWAP_CACHE.get(key)
+        if fn is None:
+            fn = jax.jit(serve_model.build_swap_in_step(self.cfg,
+                                                        self.spec),
+                         donate_argnums=(0,))
             _SWAP_CACHE[key] = fn
         return fn
 
@@ -607,7 +622,7 @@ class ZipageEngine:
         swap-in with a fresh qslot resumes compression scoring exactly
         where the swap-out left it."""
         n = len(src_blocks)
-        gathered = self._swap_fn("swap_out")(
+        gathered = self._swap_out_fn()(
             self.state["pools"],
             self._pad_block_ids(src_blocks, self._swap_bucket(n)))
         gathered = self._fetch(gathered)
@@ -643,7 +658,7 @@ class ZipageEngine:
         for k, host in self.swap_pool.items():
             bufs[k][:, :n] = host[:, src_host_blocks]
             vals[k] = jnp.asarray(bufs[k])
-        self.state["pools"] = self._swap_fn("swap_in")(
+        self.state["pools"] = self._swap_in_fn()(
             self.state["pools"], self._pad_block_ids(dst_dev_blocks, m),
             vals)
         if r.output and not r.prefill_pending:
@@ -981,6 +996,8 @@ class ZipageEngine:
         # as a straggler to the admission backoff
         self.scheduler.observe_latency(
             (t_dec - t0) / max(1, self._last_horizon))
+        if self.sanitize:
+            invariants.check_engine(self)
 
     def run(self, max_steps=10_000):
         while self.scheduler.has_work() and self.step_count < max_steps:
@@ -992,6 +1009,9 @@ class ZipageEngine:
 
     def snapshot(self):
         import copy
+        # snapshot IS a full-state sync point by design; per-leaf _fetch
+        # would add nothing but overhead here
+        # zipalint: waive[ZPL005] -- snapshot is an intentional whole-state sync
         dev = {k: jax.tree.map(np.asarray, v) for k, v in self.state.items()}
         return {
             "device": dev,
@@ -1049,9 +1069,11 @@ class ZipageEngine:
         self._swap_qwin = {rid: a.copy()
                            for rid, a in snap.get("swap_qwin", {}).items()}
         # invalidate every device mirror: the next step re-pushes tables
-        # and fused sampling state wholesale
+        # and fused sampling state wholesale (sanitizer shadows of the
+        # old device buffers are stale too)
         self._pushed_version = -1
         self._tokens_dirty = True
+        self._qwin_shadow = {}
         self._dev_mask = None
         self._dev_counters = None
         self._samp_version = -1

@@ -241,7 +241,8 @@ class Scheduler:
         if params.preemption_mode == "auto" and bm.swap_space_blocks <= 0:
             warnings.warn(
                 "preemption_mode='auto' with swap_space_blocks=0: the "
-                "swap tier is unarmed, every preemption will recompute")
+                "swap tier is unarmed, every preemption will recompute",
+                stacklevel=2)
         self.p = params
         self.bm = bm
         self.policy = make_policy(params.policy)
@@ -697,11 +698,11 @@ class Scheduler:
                 need = min(n_prefix, nb)
                 if self.bm.is_shared(r.blocks[min(nb, r.n_blocks - 1)]):
                     need += 1                      # reserved must be fresh too
-            if need and not self.bm.can_allocate(need):
-                if not self._preempt_for_blocks(need, r, outs,
-                                                exclude=no_preempt):
-                    r.state = State.BLOCKED        # retry next step
-                    continue
+            if need and not self.bm.can_allocate(need) \
+                    and not self._preempt_for_blocks(need, r, outs,
+                                                     exclude=no_preempt):
+                r.state = State.BLOCKED            # retry next step
+                continue
             if n_prefix == 0:
                 dest = r.blocks[:nb]
                 reserved = r.blocks[nb]

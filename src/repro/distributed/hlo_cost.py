@@ -144,7 +144,7 @@ def _dot_flops(op: Op, comp: Comp):
 def analyze(text: str):
     comps = parse_module(text)
     entry = None
-    for name, c in comps.items():
+    for name in comps:
         if "main" in name:
             entry = name
     if entry is None and comps:

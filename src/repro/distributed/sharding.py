@@ -51,7 +51,7 @@ def param_spec(cfg, path: str, shape, mesh) -> P:
     heads_ok = hq and hq % tp == 0
     kv_ok = hkv and hkv % tp == 0
 
-    if name == "embed" or name == "unembed":
+    if name in ("embed", "unembed"):
         # vocab dim over model (logit/embedding parallelism)
         vdim = 0 if name == "embed" else 1
         if shape[vdim] % tp == 0 and tp > 1:
@@ -59,7 +59,7 @@ def param_spec(cfg, path: str, shape, mesh) -> P:
             out[vdim] = "model"
             return P(*out)
         return P()
-    if parent == "moe" or parent == "shared":
+    if parent in ("moe", "shared"):
         if name in ("w1", "w3", "w2") and parent == "moe":
             # experts over model (EP)
             edim = nd - 3

@@ -102,12 +102,13 @@ def make_serve_spec(cfg, cell: ShapeCell, mesh, variant):
     B = cell.global_batch
     tp = mesh.shape.get("model", 1)
     kv_rep = 1
-    if cfg.num_kv_heads and not cfg.attention_free and cfg.attn_type != "mla":
-        if tp > cfg.num_kv_heads and tp % cfg.num_kv_heads == 0:
-            r = tp // cfg.num_kv_heads
-            # q-head groups must stay aligned to stored slots
-            if cfg.num_heads % (cfg.num_kv_heads * r) == 0:
-                kv_rep = r
+    if (cfg.num_kv_heads and not cfg.attention_free
+            and cfg.attn_type != "mla"
+            and tp > cfg.num_kv_heads and tp % cfg.num_kv_heads == 0):
+        r = tp // cfg.num_kv_heads
+        # q-head groups must stay aligned to stored slots
+        if cfg.num_heads % (cfg.num_kv_heads * r) == 0:
+            kv_rep = r
     prefix = cfg.num_prefix_embeds if cfg.frontend == "vision_stub" else 0
     if cfg.local_window:
         mb = cfg.local_window // b

@@ -106,7 +106,7 @@ def test_property_random_workload_completes_cleanly(seed, n, scheduling):
         scheduling=scheduling,
         prefix_caching=bool(seed % 2)))
     rids = []
-    for i in range(n):
+    for _i in range(n):
         p = rng.integers(0, CFG.vocab_size,
                          size=int(rng.integers(2, 20))).tolist()
         rids.append(eng.submit(p, int(rng.integers(2, 40))))

@@ -1,0 +1,308 @@
+"""Runtime sanitizer tests: deliberately corrupt engine state and assert
+``invariants.audit_engine`` reports each corruption with an actionable
+message; a healthy run must audit clean at every step; the per-step hook
+raises ``InvariantViolation`` when the sanitizer is armed."""
+import dataclasses
+
+import jax
+import pytest
+
+from repro.configs import get_config
+from repro.core import invariants
+from repro.core.compression import CompressOptions
+from repro.core.engine import EngineOptions, ZipageEngine
+from repro.core.request import State
+from repro.models import lm
+
+CFG = dataclasses.replace(get_config("tiny-lm"), dtype="float32")
+PARAMS = lm.init(CFG, jax.random.key(0))
+
+PROMPTS = [[1, 2, 3, 4, 5], [9, 8, 7], [10, 11, 12, 13, 14, 15, 16],
+           [20, 21]]
+
+
+def make_engine(**kw):
+    base = dict(block_size=8, n_total_blocks=64, max_batch=4, m_qslots=2,
+                n_max=3, window=4, max_model_len=256, prefill_rows=2,
+                prefill_len=64, compress=CompressOptions(window=4),
+                temperature=0.0)
+    base.update(kw)
+    return ZipageEngine(CFG, PARAMS, EngineOptions(**base))
+
+
+def running_engine(steps=3, **kw):
+    eng = make_engine(**kw)
+    for p in PROMPTS:
+        eng.submit(p, 24)
+    for _ in range(steps):
+        eng.step()
+    assert eng.running, "fixture expects live requests"
+    return eng
+
+
+# ----------------------------------------------------------------------
+# healthy runs audit clean
+
+
+def test_healthy_run_audits_clean_every_step():
+    eng = make_engine(n_max=3, m_qslots=4)
+    for p in PROMPTS:
+        eng.submit(p, 30)
+    while eng.scheduler.has_work():
+        eng.step()
+        assert invariants.audit_engine(eng) == []
+        assert eng.step_count < 500
+
+
+def test_healthy_swap_run_audits_clean():
+    eng = make_engine(n_total_blocks=10, max_batch=4, m_qslots=4,
+                      prefix_caching=False, preemption_mode="swap",
+                      swap_space_blocks=16)
+    for p in PROMPTS:
+        eng.submit(p, 24)
+    while eng.scheduler.has_work():
+        eng.step()
+        assert invariants.audit_engine(eng) == []
+        assert eng.step_count < 800
+
+
+# ----------------------------------------------------------------------
+# block refcount corruption
+
+
+def test_double_free_is_detected():
+    eng = running_engine()
+    victim = next(r for r in eng.running if r.blocks)
+    blk = victim.blocks[0]
+    eng.bm.release([blk])                      # rip a ref out from under it
+    msgs = invariants.audit_engine(eng)
+    assert any("double-free" in m and f"block {blk}" in m for m in msgs), msgs
+
+
+def test_leaked_reference_is_detected():
+    eng = running_engine()
+    leaked = eng.bm.allocate(1)[0]             # ref'd but held by nobody
+    msgs = invariants.audit_engine(eng)
+    assert any("leaked reference" in m and f"block {leaked}" in m
+               for m in msgs), msgs
+
+
+def test_self_aliased_block_table_is_detected():
+    eng = running_engine()
+    victim = next(r for r in eng.running if r.blocks)
+    victim.blocks.append(victim.blocks[0])
+    msgs = invariants.audit_engine(eng)
+    assert any("more than once" in m and f"rid {victim.rid}" in m
+               for m in msgs), msgs
+
+
+# ----------------------------------------------------------------------
+# slot pools
+
+
+def test_orphaned_slot_is_detected():
+    eng = running_engine()
+    victim = next(r for r in eng.running if r.slot >= 0)
+    eng.scheduler.free_slots.append(victim.slot)   # free while still held
+    msgs = invariants.audit_engine(eng)
+    assert any("both free and held" in m and str(victim.slot) in m
+               for m in msgs), msgs
+
+
+def test_leaked_slot_is_detected():
+    eng = running_engine()
+    victim = next(r for r in eng.running if r.slot >= 0)
+    slot = victim.slot
+    victim.slot = -1                           # drop the handle, no free
+    msgs = invariants.audit_engine(eng)
+    assert any("leaked" in m and f"[{slot}]" in m for m in msgs), msgs
+    victim.slot = slot                         # restore for teardown
+
+
+# ----------------------------------------------------------------------
+# queue discipline
+
+
+def test_queue_overlap_is_detected():
+    eng = running_engine()
+    r = eng.running[0]
+    eng.scheduler.waiting.append(r)            # now in two queues
+    msgs = invariants.audit_engine(eng)
+    assert any("queues must be disjoint" in m and f"rid {r.rid}" in m
+               for m in msgs), msgs
+
+
+def test_wrong_state_in_queue_is_detected():
+    eng = running_engine()
+    r = eng.running[0]
+    r.state = State.FINISHED                   # but still in running queue
+    msgs = invariants.audit_engine(eng)
+    assert any("sits in the 'running' queue with state 'finished'" in m
+               for m in msgs), msgs
+    r.state = State.RUNNING
+
+
+def test_waiting_request_holding_blocks_is_detected():
+    eng = make_engine()
+    rid = eng.submit([1, 2, 3], 8)
+    w = next(r for r in eng.waiting if r.rid == rid)
+    w.blocks = [0, 1]                          # waiting must hold nothing
+    msgs = invariants.audit_engine(eng)
+    assert any("only running requests hold device blocks" in m
+               for m in msgs), msgs
+    w.blocks = []
+
+
+# ----------------------------------------------------------------------
+# swap pool
+
+
+def test_swap_pool_leak_is_detected():
+    eng = running_engine(preemption_mode="swap", swap_space_blocks=16,
+                         prefix_caching=False)
+    eng.bm.swapped[9999] = [eng.bm.swap_free.pop()]   # rid not in queue
+    msgs = invariants.audit_engine(eng)
+    assert any("rid 9999" in m and "swap-pool leak" in m for m in msgs), msgs
+
+
+# ----------------------------------------------------------------------
+# token budget
+
+
+def test_budget_overdraw_is_detected():
+    eng = running_engine(token_budget=16)
+    eng.metrics.append({"step": eng.step_count,
+                        "n_scheduled_tokens": 99, "token_budget": 16})
+    msgs = invariants.audit_engine(eng)
+    assert any("overdraw" in m and "99" in m for m in msgs), msgs
+
+
+# ----------------------------------------------------------------------
+# per-request counters
+
+
+def test_win_count_without_qslot_is_detected():
+    eng = running_engine()
+    r = eng.running[0]
+    old = r.qslot, r.win_count
+    r.qslot, r.win_count = -1, 2
+    msgs = invariants.audit_engine(eng)
+    assert any("without a qslot" in m and f"rid {r.rid}" in m
+               for m in msgs), msgs
+    r.qslot, r.win_count = old
+
+
+def test_output_overflow_is_detected():
+    eng = running_engine()
+    r = eng.running[0]
+    r.output = list(range(r.max_new_tokens + 3))
+    msgs = invariants.audit_engine(eng)
+    assert any("max_new_tokens" in m and f"rid {r.rid}" in m
+               for m in msgs), msgs
+    r.output = []
+
+
+def test_prefill_cursor_regression_is_detected():
+    eng = running_engine()
+    r = eng.running[0]
+    old = r.n_prefilled, r.prefill_target
+    r.n_prefilled, r.prefill_target = 5, 2      # cursor past target
+    msgs = invariants.audit_engine(eng)
+    assert any("chunked-prefill bookkeeping" in m for m in msgs), msgs
+    r.n_prefilled, r.prefill_target = old
+
+
+def test_block_cap_violation_is_detected():
+    eng = running_engine()
+    r = next(x for x in eng.running if x.blocks)
+    # fake an uncompressed request hoarding far more blocks than seq_len
+    extra = eng.bm.allocate(4)
+    r.blocks.extend(extra)
+    msgs = invariants.audit_engine(eng)
+    assert any("over-allocation" in m and f"rid {r.rid}" in m
+               for m in msgs), msgs
+    eng.bm.release(extra)
+    del r.blocks[-len(extra):]
+
+
+# ----------------------------------------------------------------------
+# qwin ownership (free observation-window rows must stay untouched)
+
+
+def test_qwin_write_to_free_row_is_detected():
+    eng = make_engine(m_qslots=2, max_batch=2)
+    assert "qwin" in eng.state
+    # no request ever ran: all qslots free, none recently dispatched
+    eng.host_qslot.fill(-1)
+    assert invariants.audit_engine(eng) == []   # arms the shadows
+    q = eng.scheduler.free_qslots[0]
+    eng.state["qwin"] = eng.state["qwin"].at[:, q].add(1.0)
+    msgs = invariants.audit_engine(eng)
+    assert any(f"free qslot {q}" in m and "does not own" in m
+               for m in msgs), msgs
+    assert invariants.audit_engine(eng) == []   # re-armed, not re-reported
+
+
+def test_qwin_shadow_retired_for_dispatched_qslots():
+    eng = make_engine(m_qslots=2, max_batch=2)
+    eng.host_qslot.fill(-1)
+    assert invariants.audit_engine(eng) == []
+    q = eng.scheduler.free_qslots[0]
+    eng.host_qslot[0] = q                       # legitimately dispatched
+    eng.state["qwin"] = eng.state["qwin"].at[:, q].add(1.0)
+    assert invariants.audit_engine(eng) == []   # no false positive
+
+
+# ----------------------------------------------------------------------
+# the env-gated per-step hook
+
+
+def test_enabled_parses_env(monkeypatch):
+    for v, want in (("1", True), ("true", True), ("ON", True),
+                    ("0", False), ("", False)):
+        monkeypatch.setenv("ZIPAGE_SANITIZE", v)
+        assert invariants.enabled() is want
+    monkeypatch.delenv("ZIPAGE_SANITIZE")
+    assert invariants.enabled() is False
+
+
+def test_step_hook_raises_when_armed():
+    eng = running_engine()
+    eng.sanitize = True                        # as if ZIPAGE_SANITIZE=1
+    eng.bm.release([next(r for r in eng.running if r.blocks).blocks[0]])
+    # the ripped-out ref surfaces either directly (double-free) or as the
+    # block being handed out again while still listed (self-aliased /
+    # refcount mismatch) — the hook must raise either way
+    with pytest.raises(invariants.InvariantViolation,
+                       match="double-free|more than once|holder"):
+        eng.step()
+
+
+def test_step_hook_quiet_when_disarmed(monkeypatch):
+    monkeypatch.delenv("ZIPAGE_SANITIZE", raising=False)
+    eng = running_engine()
+    assert eng.sanitize is False
+    # corrupt state exactly as in the armed test: disarmed steps must not
+    # audit, even under `make test-sanitize` (env controlled above)
+    eng.bm.release([next(r for r in eng.running if r.blocks).blocks[0]])
+    eng.step()                                 # no raise
+
+
+def test_restore_clears_qwin_shadows():
+    eng = make_engine(n_max=3, m_qslots=4)
+    rids = [eng.submit(p, 24) for p in PROMPTS]
+    for _ in range(5):
+        eng.step()
+    assert invariants.audit_engine(eng) == []  # may arm shadows
+    snap = eng.snapshot()
+    eng2 = make_engine(n_max=3, m_qslots=4)
+    invariants.audit_engine(eng2)              # arm shadows on old state
+    eng2.restore(snap)
+    assert eng2._qwin_shadow == {}             # stale shadows dropped
+    done = eng2.run(max_steps=400)
+    for rid in rids:
+        assert len(done[rid].output) == 24
+
+
+if __name__ == "__main__":
+    pytest.main([__file__, "-q"])

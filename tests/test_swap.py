@@ -347,7 +347,7 @@ def test_swap_pool_accounting_never_leaks(seed):
     eng = make_engine(preemption_mode="auto", swap_space_blocks=16,
                       prefix_caching=bool(seed % 2))
     rids = []
-    for i in range(6):
+    for _i in range(6):
         p = rng.integers(1, 50, size=int(rng.integers(2, 9))).tolist()
         sp = SamplingParams(max_new_tokens=int(rng.integers(8, 30)),
                             temperature=float(rng.choice([0.0, 0.9])),

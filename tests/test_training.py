@@ -33,7 +33,7 @@ def test_loss_decreases():
     step = jax.jit(build_train_step(CFG, ADAMW, vocab_chunk=16))
     batch = jax.tree.map(jnp.asarray, batch_at(DC, 0))
     losses = []
-    for i in range(25):
+    for _i in range(25):
         params, state, _, m = step(params, state, None, batch)
         losses.append(float(m["loss"]))
     assert losses[-1] < losses[0] - 0.5

@@ -1,0 +1,392 @@
+"""zipalint pass tests: every rule has at least one failing fixture
+proving it fires, plus a good fixture proving it stays quiet, plus the
+waiver mechanics (ZPL000 hygiene) and the zero-findings gate on the real
+repo (the same gate CI runs via ``make zipalint``)."""
+import importlib.util
+import sys
+from pathlib import Path
+
+import pytest
+
+_TOOL = Path(__file__).resolve().parent.parent / "tools" / "zipalint.py"
+_spec = importlib.util.spec_from_file_location("zipalint", _TOOL)
+zl = importlib.util.module_from_spec(_spec)
+sys.modules["zipalint"] = zl          # dataclasses resolve annotations here
+_spec.loader.exec_module(zl)
+
+
+def ctx_of(modules, docs=None):
+    return zl.Context({p: zl.make_module(p, src)
+                       for p, src in modules.items()}, docs or {})
+
+
+def findings(modules, docs=None, rule=None):
+    out = zl.analyze(ctx_of(modules, docs))
+    return [f for f in out if rule is None or f.rule == rule]
+
+
+def checked(modules, docs=None):
+    """analyze + waivers, like the CLI does."""
+    ctx = ctx_of(modules, docs)
+    kept, _ = zl.apply_waivers(zl.analyze(ctx), ctx.modules)
+    return kept
+
+
+# ----------------------------------------------------------------------
+# ZPL001 host-purity
+
+
+def test_zpl001_fires_on_jax_import_in_pure_host_module():
+    out = findings({"src/repro/core/scheduler.py":
+                    "import jax.numpy as jnp\n"}, rule="ZPL001")
+    assert len(out) == 1 and out[0].line == 1
+    assert "pure-host" in out[0].msg
+
+
+def test_zpl001_fires_on_device_module_import():
+    out = findings({"src/repro/core/block_manager.py":
+                    "from repro.core.engine import ZipageEngine\n"},
+                   rule="ZPL001")
+    assert out, "importing the engine from a pure-host module must fire"
+
+
+def test_zpl001_quiet_on_host_imports():
+    out = findings({"src/repro/core/request.py":
+                    "import numpy as np\nfrom collections import deque\n"},
+                   rule="ZPL001")
+    assert out == []
+
+
+def test_zpl001_ignores_non_pure_host_modules():
+    out = findings({"src/repro/core/serve_model.py": "import jax\n"},
+                   rule="ZPL001")
+    assert out == []
+
+
+# ----------------------------------------------------------------------
+# ZPL002 jit-boundary host-sync
+
+_BUILDER = "src/repro/core/serve_model.py"
+
+
+def test_zpl002_fires_on_item_in_builder():
+    src = ("def build_decode_step(cfg, spec):\n"
+           "    def step(params, state):\n"
+           "        n = state['seq_lens'].item()\n"
+           "        return n\n"
+           "    return step\n")
+    out = findings({_BUILDER: src}, rule="ZPL002")
+    assert len(out) == 1 and ".item()" in out[0].msg
+
+
+def test_zpl002_fires_on_branch_on_traced_value():
+    src = ("import jax.numpy as jnp\n"
+           "def build_decode_step(cfg, spec):\n"
+           "    def step(x):\n"
+           "        if jnp.sum(x) > 0:\n"
+           "            return x\n"
+           "        return -x\n"
+           "    return step\n")
+    out = findings({_BUILDER: src}, rule="ZPL002")
+    assert any("`if` on a traced value" in f.msg for f in out)
+
+
+def test_zpl002_fires_on_np_asarray_and_block_until_ready():
+    src = ("import numpy as np\n"
+           "def build_prefill_step(cfg, spec):\n"
+           "    def step(x):\n"
+           "        y = np.asarray(x)\n"
+           "        x.block_until_ready()\n"
+           "        return y\n"
+           "    return step\n")
+    msgs = [f.msg for f in findings({_BUILDER: src}, rule="ZPL002")]
+    assert any("np.asarray" in m for m in msgs)
+    assert any("block_until_ready" in m for m in msgs)
+
+
+def test_zpl002_fires_in_jit_decorated_def():
+    src = ("import functools, jax\n"
+           "@functools.partial(jax.jit, static_argnames=('k',))\n"
+           "def f(x, k):\n"
+           "    return float(x.sum())\n")
+    out = findings({"src/repro/kernels/ops.py": src}, rule="ZPL002")
+    assert any("float()" in f.msg for f in out)
+
+
+def test_zpl002_quiet_on_static_python():
+    # int() on a static comparison and np.sqrt on config scalars are
+    # trace-time constants, not host syncs
+    src = ("import numpy as np\n"
+           "def build_decode_step(cfg, spec):\n"
+           "    scale = 1.0 / np.sqrt(cfg.head_dim)\n"
+           "    causal = int(spec.kind == 'decode')\n"
+           "    def step(x):\n"
+           "        if causal:\n"
+           "            return x * scale\n"
+           "        return x\n"
+           "    return step\n")
+    assert findings({_BUILDER: src}, rule="ZPL002") == []
+
+
+def test_zpl002_ignores_build_functions_outside_builder_modules():
+    src = ("def build_optimizer(cfg):\n"
+           "    return float(cfg.lr)\n")
+    assert findings({"src/repro/launch/train_loop.py": src},
+                    rule="ZPL002") == []
+
+
+# ----------------------------------------------------------------------
+# ZPL003 donation safety
+
+_ENG = "src/repro/core/engine.py"
+
+
+def test_zpl003_fires_on_use_after_donate_local_jit():
+    src = ("import jax\n"
+           "def run(step, buf, x):\n"
+           "    fn = jax.jit(step, donate_argnums=(0,))\n"
+           "    out = fn(buf, x)\n"       # buf not rebound -> hazard
+           "    return out, buf\n")
+    out = findings({_ENG: src}, rule="ZPL003")
+    assert len(out) == 1 and "buf" in out[0].msg \
+        and "use-after-donate" in out[0].msg
+
+
+def test_zpl003_quiet_when_donated_arg_rebound():
+    src = ("import jax\n"
+           "def run(step, buf, x):\n"
+           "    fn = jax.jit(step, donate_argnums=(0,))\n"
+           "    buf = fn(buf, x)\n"
+           "    return buf\n")
+    assert findings({_ENG: src}, rule="ZPL003") == []
+
+
+def test_zpl003_quiet_on_tuple_rebind_of_self_attr():
+    src = ("import jax\n"
+           "class E:\n"
+           "    def setup(self, fwd):\n"
+           "        self._decode = jax.jit(fwd, donate_argnums=(1,))\n"
+           "    def run(self, toks):\n"
+           "        toks, self.state = self._decode(toks, self.state)\n"
+           "        return toks\n")
+    assert findings({_ENG: src}, rule="ZPL003") == []
+
+
+def test_zpl003_fires_on_self_attr_not_rebound():
+    src = ("import jax\n"
+           "class E:\n"
+           "    def setup(self, fwd):\n"
+           "        self._decode = jax.jit(fwd, donate_argnums=(1,))\n"
+           "    def run(self, toks):\n"
+           "        out = self._decode(toks, self.state)\n"
+           "        return out\n")
+    out = findings({_ENG: src}, rule="ZPL003")
+    assert len(out) == 1 and "self.state" in out[0].msg
+
+
+def test_zpl003_fires_on_mixed_donation_factory():
+    src = ("import jax\n"
+           "def _swap(kind, a, b):\n"
+           "    if kind == 'out':\n"
+           "        return jax.jit(a)\n"
+           "    return jax.jit(b, donate_argnums=(0,))\n")
+    out = findings({_ENG: src}, rule="ZPL003")
+    assert any("both donating and non-donating" in f.msg for f in out)
+
+
+def test_zpl003_fires_on_decorated_def_call_site():
+    src = ("import functools, jax\n"
+           "@functools.partial(jax.jit, donate_argnums=(0,))\n"
+           "def scatter(pool, ids):\n"
+           "    return pool\n"
+           "def caller(pool, ids):\n"
+           "    scatter(pool, ids)\n"    # Expr stmt, pool never rebound
+           "    return pool\n")
+    out = findings({_ENG: src}, rule="ZPL003")
+    assert len(out) == 1 and "pool" in out[0].msg
+
+
+def test_zpl003_skips_call_sites_inside_jit_scopes():
+    # donation is ignored under tracing: a donating helper called from
+    # inside another jitted function is not a hazard
+    src = ("import functools, jax\n"
+           "@functools.partial(jax.jit, donate_argnums=(0,))\n"
+           "def scatter(pool, ids):\n"
+           "    return pool\n"
+           "@jax.jit\n"
+           "def outer(pool, ids):\n"
+           "    scatter(pool, ids)\n"
+           "    return pool\n")
+    assert findings({_ENG: src}, rule="ZPL003") == []
+
+
+# ----------------------------------------------------------------------
+# ZPL004 config discipline
+
+_CONF = "src/repro/api/config.py"
+
+
+def _conf_src(extra_field=""):
+    return ("import dataclasses\n"
+            "@dataclasses.dataclass(frozen=True)\n"
+            "class CacheConfig:\n"
+            "    block_size: int = 16\n"
+            f"{extra_field}")
+
+
+def test_zpl004_fires_on_undocumented_field():
+    mods = {_CONF: _conf_src(),
+            "src/repro/core/engine.py": "def f(c):\n    return c.block_size\n"}
+    out = findings(mods, docs={"API.md": "nothing here"}, rule="ZPL004")
+    assert len(out) == 1 and "not documented" in out[0].msg
+
+
+def test_zpl004_fires_on_dead_knob():
+    mods = {_CONF: _conf_src("    stride: int = 0\n"),
+            "src/repro/core/engine.py": "def f(c):\n    return c.block_size\n"}
+    out = findings(mods, docs={"API.md": "`block_size` and `stride`"},
+                   rule="ZPL004")
+    assert len(out) == 1 and "dead knob" in out[0].msg \
+        and "stride" in out[0].msg
+
+
+def test_zpl004_fires_on_field_dropped_by_facade():
+    src = (_conf_src("    stride: int = 0\n")
+           + "def build_engine_options(c):\n"
+           + "    return dict(block_size=c.block_size)\n")
+    mods = {_CONF: src,
+            "src/repro/core/engine.py":
+            "def f(c):\n    return c.block_size + c.stride\n"}
+    out = findings(mods, docs={"API.md": "`block_size` and `stride`"},
+                   rule="ZPL004")
+    assert len(out) == 1 and "build_engine_options" in out[0].msg
+
+
+def test_zpl004_quiet_when_documented_consumed_and_routed():
+    src = (_conf_src()
+           + "def build_engine_options(c):\n"
+           + "    return dict(block_size=c.block_size)\n")
+    mods = {_CONF: src,
+            "src/repro/core/engine.py": "def f(c):\n    return c.block_size\n"}
+    assert findings(mods, docs={"API.md": "`block_size`"},
+                    rule="ZPL004") == []
+
+
+# ----------------------------------------------------------------------
+# ZPL005 engine sync discipline
+
+
+def test_zpl005_fires_on_device_get_outside_fetch():
+    src = ("import jax\n"
+           "class E:\n"
+           "    def peek(self, x):\n"
+           "        return jax.device_get(x)\n")
+    out = findings({_ENG: src}, rule="ZPL005")
+    assert len(out) == 1 and "_fetch" in out[0].msg
+
+
+def test_zpl005_fires_on_tree_map_asarray():
+    src = ("import jax\nimport numpy as np\n"
+           "class E:\n"
+           "    def dump(self):\n"
+           "        return jax.tree.map(np.asarray, self.state)\n")
+    out = findings({_ENG: src}, rule="ZPL005")
+    assert len(out) == 1 and "whole-tree" in out[0].msg
+
+
+def test_zpl005_quiet_inside_sanctioned_sync_points():
+    src = ("import jax\n"
+           "class E:\n"
+           "    def _fetch(self, x):\n"
+           "        return jax.device_get(x)\n"
+           "    def _block_ready(self, x):\n"
+           "        jax.block_until_ready(x)\n")
+    assert findings({_ENG: src}, rule="ZPL005") == []
+
+
+def test_zpl005_only_applies_to_engine_module():
+    src = ("import jax\n"
+           "def peek(x):\n"
+           "    return jax.device_get(x)\n")
+    assert findings({"src/repro/launch/serve.py": src},
+                    rule="ZPL005") == []
+
+
+# ----------------------------------------------------------------------
+# waivers (ZPL000)
+
+
+def test_waiver_suppresses_finding():
+    src = ("import jax  "
+           "# zipalint: waive[ZPL001] -- test fixture exercising waivers\n")
+    out = checked({"src/repro/core/scheduler.py": src})
+    assert out == []
+
+
+def test_own_line_waiver_applies_to_next_line():
+    src = ("# zipalint: waive[ZPL001] -- fixture\n"
+           "import jax\n")
+    out = checked({"src/repro/core/scheduler.py": src})
+    assert out == []
+
+
+def test_waiver_without_reason_is_a_finding():
+    src = "import jax  # zipalint: waive[ZPL001]\n"
+    out = checked({"src/repro/core/scheduler.py": src})
+    assert [f.rule for f in out] == ["ZPL000"]
+    assert "reason" in out[0].msg
+
+
+def test_waiver_for_unknown_rule_is_a_finding():
+    src = "import os  # zipalint: waive[ZPL999] -- no such rule\n"
+    out = checked({"src/repro/core/scheduler.py": src})
+    rules = {f.rule for f in out}
+    assert rules == {"ZPL000"}
+    assert any("unknown rule" in f.msg for f in out)
+
+
+def test_unused_waiver_is_a_finding():
+    src = "import os  # zipalint: waive[ZPL001] -- nothing to waive\n"
+    out = checked({"src/repro/core/scheduler.py": src})
+    assert [f.rule for f in out] == ["ZPL000"]
+    assert "unused waiver" in out[0].msg
+
+
+def test_waiver_does_not_leak_to_other_lines():
+    src = ("import os   # zipalint: waive[ZPL001] -- wrong line\n"
+           "import jax\n")
+    out = checked({"src/repro/core/scheduler.py": src})
+    assert {f.rule for f in out} == {"ZPL000", "ZPL001"}
+
+
+# ----------------------------------------------------------------------
+# the real repo gates at zero findings
+
+
+def test_repo_is_clean():
+    assert zl.main([]) == 0
+
+
+def test_list_rules_covers_all_passes(capsys):
+    assert zl.main(["--list-rules"]) == 0
+    text = capsys.readouterr().out
+    for rule, _fn in zl.PASSES:
+        assert rule in text
+    assert len(zl.PASSES) >= 4
+
+
+def test_findings_render_file_line_rule():
+    f = zl.Finding("src/x.py", 3, "ZPL001", "boom")
+    assert f.render() == "src/x.py:3: ZPL001 boom"
+
+
+def test_bad_waiver_syntax_is_not_parsed_as_waiver():
+    # regression guard: a comment mentioning zipalint without the exact
+    # waive[...] shape must not suppress anything
+    src = "import jax  # zipalint waive ZPL001 reasons\n"
+    out = checked({"src/repro/core/scheduler.py": src})
+    assert [f.rule for f in out] == ["ZPL001"]
+
+
+if __name__ == "__main__":
+    pytest.main([__file__, "-q"])

@@ -1,21 +1,19 @@
 #!/usr/bin/env python
-"""Documentation consistency checks (``make docs-check``, run in CI).
+"""Documentation consistency checks (``make docs-check``, run in CI's
+static-analysis job).
 
-Two gates:
+One gate: every intra-repo markdown link in README.md / ROADMAP.md /
+docs/*.md resolves to an existing file (anchors are stripped; external
+URLs and the OWNER/REPO badge placeholders are ignored).
 
-  1. every intra-repo markdown link in README.md / ROADMAP.md / docs/*.md
-     resolves to an existing file (anchors are stripped; external URLs and
-     the OWNER/REPO badge placeholders are ignored);
-  2. every public field of ``SchedulerConfig`` and ``CacheConfig``
-     (repro.api.config) is mentioned by name somewhere in the docs, so
-     config knobs cannot silently drift out of the documentation again
-     (docs/API.md once described SchedulerConfig as a pass-through bag).
+Config-field documentation coverage — historically checked here — now
+lives in ``tools/zipalint.py`` rule ZPL004, which also verifies each
+field is consumed and routed through ``build_engine_options``.
 
-Exits non-zero listing every violation. Stdlib + repro only.
+Exits non-zero listing every violation. Stdlib only.
 """
 from __future__ import annotations
 
-import dataclasses
 import re
 import sys
 from pathlib import Path
@@ -48,25 +46,8 @@ def check_links() -> list:
     return errors
 
 
-def check_config_fields() -> list:
-    sys.path.insert(0, str(REPO / "src"))
-    from repro.api.config import CacheConfig, SchedulerConfig
-
-    corpus = "\n".join(md.read_text() for md in DOC_FILES if md.exists())
-    errors = []
-    for cfg in (SchedulerConfig, CacheConfig):
-        for f in dataclasses.fields(cfg):
-            # fields are documented as `name` (markdown code spans)
-            if f"`{f.name}`" not in corpus:
-                errors.append(
-                    f"{cfg.__name__}.{f.name} is not documented in "
-                    "README.md / ROADMAP.md / docs/*.md "
-                    "(expected a `"f"{f.name}"r"` code span)")
-    return errors
-
-
 def main() -> int:
-    errors = check_links() + check_config_fields()
+    errors = check_links()
     for e in errors:
         print(f"docs-check: {e}", file=sys.stderr)
     if errors:
@@ -74,8 +55,7 @@ def main() -> int:
         return 1
     n_links = sum(len(LINK_RE.findall(md.read_text()))
                   for md in DOC_FILES if md.exists())
-    print(f"docs-check: OK ({len(DOC_FILES)} files, {n_links} links, "
-          "all SchedulerConfig/CacheConfig fields documented)")
+    print(f"docs-check: OK ({len(DOC_FILES)} files, {n_links} links)")
     return 0
 
 

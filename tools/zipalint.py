@@ -1,0 +1,842 @@
+#!/usr/bin/env python
+"""zipalint — repo-specific architectural static analysis (``make zipalint``).
+
+The engine's correctness rests on contracts no general-purpose linter
+knows about: the Scheduler subsystem is pure-host, jitted step builders
+must not host-sync, buffers passed at ``donate_argnums`` positions are
+invalid after the call, and every public config field must stay
+documented and consumed. This tool runs AST passes that formalise those
+contracts (docs/ANALYSIS.md spells each one out):
+
+  ZPL001  host-purity          pure-host modules must not import device code
+  ZPL002  jit-host-sync        no host syncs / Python branching on traced
+                               values inside jit-traced scopes
+  ZPL003  donation-safety      a buffer at a donate_argnums position must be
+                               rebound by the calling statement
+  ZPL004  config-discipline    every CacheConfig/SchedulerConfig/
+                               ModelRunnerConfig field is documented,
+                               consumed and routed via build_engine_options
+  ZPL005  engine-sync          device->host syncs in the engine go through
+                               _fetch/_block_ready (t_device accounting)
+  ZPL000  waiver-hygiene       waiver comments must name a known rule, give
+                               a reason, and actually suppress something
+
+Findings are ``path:line: RULE message``; a finding is suppressed by an
+inline waiver comment on the same line (or on its own line immediately
+above)::
+
+    risky_call()   # zipalint: waive[ZPL005] -- snapshot is a sync point
+
+The reason after ``--`` is mandatory. Stdlib only; exits non-zero on any
+finding so CI's static-analysis job can gate on it.
+"""
+from __future__ import annotations
+
+import argparse
+import ast
+import dataclasses
+import re
+import sys
+from pathlib import Path
+from typing import Dict, List, Optional, Sequence, Tuple
+
+REPO = Path(__file__).resolve().parent.parent
+
+RULES = {
+    "ZPL000": "waiver-hygiene: waivers must name a known rule, carry a "
+              "reason after '--', and suppress at least one finding",
+    "ZPL001": "host-purity: modules declared pure-host must not import "
+              "jax/jnp or device-executing repro modules",
+    "ZPL002": "jit-host-sync: no .item()/.tolist()/np.asarray/"
+              "block_until_ready/device_get, float()/int()/bool() on array "
+              "expressions, or Python branching on traced values inside "
+              "jit-traced scopes",
+    "ZPL003": "donation-safety: an argument at a donate_argnums position "
+              "must be rebound by the statement making the call (the "
+              "donated buffer is invalid afterwards)",
+    "ZPL004": "config-discipline: every CacheConfig/SchedulerConfig/"
+              "ModelRunnerConfig field must be documented in the docs "
+              "corpus, consumed outside api/config.py, and routed through "
+              "build_engine_options",
+    "ZPL005": "engine-sync-discipline: device->host syncs in "
+              "core/engine.py go through _fetch/_block_ready so they are "
+              "accounted in t_device telemetry",
+}
+
+# --- repo-specific pass configuration ---------------------------------
+
+#: modules under the pure-host contract (docs/ANALYSIS.md). They drive the
+#: device but never import it; repro.core.sampling is deliberately absent
+#: from the import blacklist below — its host-side surface (SamplingParams,
+#: matched_stop) is part of the scheduler-visible request model.
+PURE_HOST = (
+    "src/repro/core/scheduler.py",
+    "src/repro/core/block_manager.py",
+    "src/repro/core/request.py",
+    "src/repro/core/invariants.py",
+)
+
+#: import roots that count as device code for ZPL001 (direct imports only;
+#: transitive imports are out of scope for a static pass)
+DEVICE_IMPORT_ROOTS = (
+    "jax", "jaxlib", "jax.numpy",
+    "repro.core.engine", "repro.core.serve_model",
+    "repro.core.compression", "repro.core.paged", "repro.core.scoring",
+    "repro.kernels", "repro.models",
+)
+
+#: modules whose top-level ``build_*`` functions return jit-traced callables
+JIT_BUILDER_MODULES = (
+    "src/repro/core/serve_model.py",
+    "src/repro/core/compression.py",
+)
+
+ENGINE_MODULE = "src/repro/core/engine.py"
+CONFIG_MODULE = "src/repro/api/config.py"
+CONFIG_CLASSES = ("CacheConfig", "SchedulerConfig", "ModelRunnerConfig")
+
+#: method-call names that produce scalars/host values from arrays
+ARRAY_REDUCERS = frozenset(
+    {"sum", "max", "min", "mean", "any", "all", "argmax", "argmin", "item"})
+
+#: name roots whose calls are assumed array-valued (traced)
+ARRAY_NAMESPACES = frozenset({"jnp", "jax", "lax"})
+
+WAIVER_RE = re.compile(
+    r"#\s*zipalint:\s*waive\[([^\]]*)\]\s*(?:--\s*(\S.*?))?\s*$")
+
+
+@dataclasses.dataclass(frozen=True)
+class Finding:
+    path: str
+    line: int
+    rule: str
+    msg: str
+
+    def render(self) -> str:
+        return f"{self.path}:{self.line}: {self.rule} {self.msg}"
+
+
+@dataclasses.dataclass(frozen=True)
+class Module:
+    path: str          # repo-relative posix path
+    source: str
+    tree: ast.AST
+
+
+def make_module(path: str, source: str) -> Module:
+    return Module(path, source, ast.parse(source, filename=path))
+
+
+@dataclasses.dataclass
+class Context:
+    """Everything a pass sees: parsed modules + the docs corpus."""
+    modules: Dict[str, Module]
+    docs: Dict[str, str] = dataclasses.field(default_factory=dict)
+
+
+# ----------------------------------------------------------------------
+# shared AST helpers
+
+def dotted(node) -> Optional[str]:
+    """``a.b.c`` for a Name/Attribute chain, else None."""
+    parts = []
+    while isinstance(node, ast.Attribute):
+        parts.append(node.attr)
+        node = node.value
+    if isinstance(node, ast.Name):
+        parts.append(node.id)
+        return ".".join(reversed(parts))
+    return None
+
+
+def parent_map(tree: ast.AST) -> Dict[int, ast.AST]:
+    parents: Dict[int, ast.AST] = {}
+    for node in ast.walk(tree):
+        for child in ast.iter_child_nodes(node):
+            parents[id(child)] = node
+    return parents
+
+
+def enclosing_stmt(node: ast.AST, parents: Dict[int, ast.AST]):
+    while node is not None and not isinstance(node, ast.stmt):
+        node = parents.get(id(node))
+    return node
+
+
+def enclosing_function(node: ast.AST, parents: Dict[int, ast.AST]):
+    node = parents.get(id(node))
+    while node is not None:
+        if isinstance(node, (ast.FunctionDef, ast.AsyncFunctionDef)):
+            return node
+        node = parents.get(id(node))
+    return None
+
+
+def is_array_valued(node: ast.AST) -> bool:
+    """Heuristic: does this expression subtree produce a traced array?
+    True when it calls into jnp/jax/lax or invokes an array-reducer
+    method; static Python (``int(kind == "attn")``, ``np.sqrt(d)``) stays
+    clean."""
+    for n in ast.walk(node):
+        if isinstance(n, ast.Call):
+            d = dotted(n.func)
+            if d and d.split(".", 1)[0] in ARRAY_NAMESPACES:
+                return True
+            if isinstance(n.func, ast.Attribute) \
+                    and n.func.attr in ARRAY_REDUCERS:
+                return True
+    return False
+
+
+def _donate_positions(call: ast.Call) -> Optional[Tuple[int, ...]]:
+    """Literal donate_argnums of a jax.jit / partial(jax.jit, ...) call."""
+    for kw in call.keywords:
+        if kw.arg != "donate_argnums":
+            continue
+        v = kw.value
+        if isinstance(v, ast.Constant) and isinstance(v.value, int):
+            return (v.value,)
+        if isinstance(v, (ast.Tuple, ast.List)):
+            out = []
+            for e in v.elts:
+                if not (isinstance(e, ast.Constant)
+                        and isinstance(e.value, int)):
+                    return None
+                out.append(e.value)
+            return tuple(out)
+        return None
+    return None
+
+
+def _is_jit_call(call: ast.Call) -> bool:
+    return dotted(call.func) == "jax.jit"
+
+
+def _jit_scope_defs(ctx: Context) -> Dict[str, List[ast.AST]]:
+    """Per-module jit-traced scopes: top-level ``build_*`` defs in the
+    builder modules, defs decorated with ``jax.jit`` /
+    ``partial(jax.jit, ...)``, and defs whose name is passed to
+    ``jax.jit`` within the same module."""
+    scopes: Dict[str, List[ast.AST]] = {}
+    for path, mod in ctx.modules.items():
+        found: List[ast.AST] = []
+        jit_target_names = set()
+        for node in ast.walk(mod.tree):
+            if isinstance(node, ast.Call) and _is_jit_call(node) \
+                    and node.args:
+                first = node.args[0]
+                if isinstance(first, ast.Name):
+                    jit_target_names.add(first.id)
+        for node in ast.walk(mod.tree):
+            if not isinstance(node, (ast.FunctionDef,
+                                     ast.AsyncFunctionDef)):
+                continue
+            if path in JIT_BUILDER_MODULES \
+                    and node.name.startswith("build_"):
+                found.append(node)
+                continue
+            if node.name in jit_target_names:
+                found.append(node)
+                continue
+            for dec in node.decorator_list:
+                if isinstance(dec, ast.Call):
+                    d = dotted(dec.func)
+                    if d in ("functools.partial", "partial") and dec.args \
+                            and dotted(dec.args[0]) == "jax.jit":
+                        found.append(node)
+                        break
+                    if d == "jax.jit":
+                        found.append(node)
+                        break
+                elif dotted(dec) == "jax.jit":
+                    found.append(node)
+                    break
+        if found:
+            scopes[path] = found
+    return scopes
+
+
+# ----------------------------------------------------------------------
+# ZPL001 host-purity
+
+
+def pass_host_purity(ctx: Context) -> List[Finding]:
+    out = []
+    for path in PURE_HOST:
+        mod = ctx.modules.get(path)
+        if mod is None:
+            continue
+        for node in ast.walk(mod.tree):
+            names = []
+            if isinstance(node, ast.Import):
+                names = [a.name for a in node.names]
+            elif isinstance(node, ast.ImportFrom) and node.module:
+                names = [node.module]
+            for name in names:
+                if any(name == root or name.startswith(root + ".")
+                       for root in DEVICE_IMPORT_ROOTS):
+                    out.append(Finding(
+                        path, node.lineno, "ZPL001",
+                        f"pure-host module imports device code "
+                        f"({name!r}); the scheduler subsystem must stay "
+                        "importable and testable without JAX"))
+    return out
+
+
+# ----------------------------------------------------------------------
+# ZPL002 jit-boundary host-sync
+
+
+def _check_jit_scope(path: str, scope, out: List[Finding]) -> None:
+    fname = scope.name
+    for node in ast.walk(scope):
+        if isinstance(node, ast.Call):
+            d = dotted(node.func)
+            if isinstance(node.func, ast.Attribute) \
+                    and node.func.attr in ("item", "tolist",
+                                           "block_until_ready"):
+                out.append(Finding(
+                    path, node.lineno, "ZPL002",
+                    f".{node.func.attr}() inside jit scope "
+                    f"`{fname}` forces a device->host sync at trace "
+                    "time"))
+                continue
+            if d in ("jax.device_get", "jax.block_until_ready"):
+                out.append(Finding(
+                    path, node.lineno, "ZPL002",
+                    f"{d}() inside jit scope `{fname}` host-syncs"))
+                continue
+            if d in ("np.asarray", "numpy.asarray"):
+                out.append(Finding(
+                    path, node.lineno, "ZPL002",
+                    f"np.asarray inside jit scope `{fname}` pulls a "
+                    "traced array to host"))
+                continue
+            if d in ("np.array", "numpy.array") and node.args \
+                    and not isinstance(node.args[0],
+                                       (ast.Constant, ast.List,
+                                        ast.Tuple)):
+                out.append(Finding(
+                    path, node.lineno, "ZPL002",
+                    f"np.array on a non-literal inside jit scope "
+                    f"`{fname}` pulls a traced array to host"))
+                continue
+            if isinstance(node.func, ast.Name) \
+                    and node.func.id in ("float", "int", "bool") \
+                    and node.args and is_array_valued(node.args[0]):
+                out.append(Finding(
+                    path, node.lineno, "ZPL002",
+                    f"{node.func.id}() on an array expression inside "
+                    f"jit scope `{fname}` concretises a tracer"))
+        elif isinstance(node, (ast.If, ast.While)) \
+                and is_array_valued(node.test):
+            kind = "if" if isinstance(node, ast.If) else "while"
+            out.append(Finding(
+                path, node.lineno, "ZPL002",
+                f"Python `{kind}` on a traced value inside jit scope "
+                f"`{fname}` (use jnp.where / lax.cond)"))
+
+
+def pass_jit_host_sync(ctx: Context) -> List[Finding]:
+    out: List[Finding] = []
+    for path, scopes in _jit_scope_defs(ctx).items():
+        seen = set()
+        for scope in scopes:
+            if id(scope) in seen:
+                continue
+            seen.add(id(scope))
+            _check_jit_scope(path, scope, out)
+    # dedupe: nested scopes may repeat a finding at the same line
+    uniq = {}
+    for f in out:
+        uniq.setdefault((f.path, f.line, f.msg), f)
+    return list(uniq.values())
+
+
+# ----------------------------------------------------------------------
+# ZPL003 donation safety
+
+
+@dataclasses.dataclass(frozen=True)
+class _Donor:
+    positions: Tuple[int, ...]
+    # None => match the dotted name anywhere in `module`; otherwise only
+    # inside the named function (local variable registrations)
+    module: Optional[str] = None
+    scope: Optional[str] = None
+
+
+def _donation_registry(ctx: Context):
+    """Infer every donating callable in the repo.
+
+    Returns (by_name, factories, findings) where ``by_name`` maps a
+    dotted call-site name (``self._decode``, ``jitted``,
+    ``_scatter_kv_blocks``) to donor entries and ``factories`` maps a
+    bare function name to donate positions for the ``factory(...)(...)``
+    immediate-call pattern."""
+    by_name: Dict[str, List[_Donor]] = {}
+    factories: Dict[str, Tuple[int, ...]] = {}
+    findings: List[Finding] = []
+
+    def add(name, donor):
+        by_name.setdefault(name, []).append(donor)
+
+    for path, mod in ctx.modules.items():
+        parents = parent_map(mod.tree)
+        for node in ast.walk(mod.tree):
+            # decorated defs: @partial(jax.jit, donate_argnums=...)
+            if isinstance(node, (ast.FunctionDef, ast.AsyncFunctionDef)):
+                for dec in node.decorator_list:
+                    if isinstance(dec, ast.Call) \
+                            and dotted(dec.func) in ("functools.partial",
+                                                     "partial") \
+                            and dec.args \
+                            and dotted(dec.args[0]) == "jax.jit":
+                        pos = _donate_positions(dec)
+                        if pos:
+                            add(node.name, _Donor(pos))
+                continue
+            if not (isinstance(node, ast.Call) and _is_jit_call(node)):
+                continue
+            pos = _donate_positions(node)
+            if pos is None:
+                continue
+            stmt = enclosing_stmt(node, parents)
+            func = enclosing_function(node, parents)
+            if isinstance(stmt, ast.Assign):
+                for t in stmt.targets:
+                    name = dotted(t)
+                    if name is None:
+                        continue
+                    if func is not None and "." not in name:
+                        add(name, _Donor(pos, module=path,
+                                         scope=func.name))
+                    else:
+                        add(name, _Donor(pos, module=path))
+            if func is not None:
+                # the enclosing def builds a donating jit -> treat it as a
+                # factory; a factory mixing donating and plain jits cannot
+                # be checked at call sites, flag the def itself
+                prev = factories.get(func.name)
+                if prev is not None and prev != pos:
+                    findings.append(Finding(
+                        path, func.lineno, "ZPL003",
+                        f"factory `{func.name}` builds jits with "
+                        "conflicting donate_argnums; split it so call "
+                        "sites can be checked"))
+                factories[func.name] = pos
+    # mixed factories: a factory containing BOTH donating and plain jits
+    for path, mod in ctx.modules.items():
+        for node in ast.walk(mod.tree):
+            if not isinstance(node, (ast.FunctionDef,
+                                     ast.AsyncFunctionDef)):
+                continue
+            if node.name not in factories:
+                continue
+            plain = donated = 0
+            for c in ast.walk(node):
+                if isinstance(c, ast.Call) and _is_jit_call(c):
+                    if _donate_positions(c):
+                        donated += 1
+                    else:
+                        plain += 1
+            if donated and plain:
+                findings.append(Finding(
+                    path, node.lineno, "ZPL003",
+                    f"factory `{node.name}` builds both donating and "
+                    "non-donating jits; call sites cannot be verified — "
+                    "split it into one factory per donation signature"))
+    # propagate factories through simple assignments:
+    #   self._decode = _cached_step(...)
+    for path, mod in ctx.modules.items():
+        parents = parent_map(mod.tree)
+        for node in ast.walk(mod.tree):
+            if not (isinstance(node, ast.Assign)
+                    and isinstance(node.value, ast.Call)):
+                continue
+            d = dotted(node.value.func)
+            if d is None:
+                continue
+            pos = factories.get(d.split(".")[-1])
+            if pos is None:
+                continue
+            func = enclosing_function(node, parents)
+            for t in node.targets:
+                name = dotted(t)
+                if name is None:
+                    continue
+                if func is not None and "." not in name:
+                    add(name, _Donor(pos, module=path, scope=func.name))
+                else:
+                    add(name, _Donor(pos, module=path))
+    # one-level wrapper propagation: def w(a, b): return _donor(a, b)
+    for path, mod in ctx.modules.items():
+        for node in ast.walk(mod.tree):
+            if not isinstance(node, (ast.FunctionDef,
+                                     ast.AsyncFunctionDef)):
+                continue
+            for stmt in node.body:
+                if not (isinstance(stmt, ast.Return)
+                        and isinstance(stmt.value, ast.Call)):
+                    continue
+                d = dotted(stmt.value.func)
+                if d is None or d not in by_name:
+                    continue
+                params = [a.arg for a in node.args.args]
+                donors = [dn for dn in by_name[d]
+                          if (dn.module is None or dn.module == path)
+                          and (dn.scope is None or dn.scope == node.name)]
+                for donor in donors:
+                    mapped = []
+                    for p in donor.positions:
+                        if p >= len(stmt.value.args):
+                            break
+                        arg = stmt.value.args[p]
+                        if isinstance(arg, ast.Name) \
+                                and arg.id in params:
+                            mapped.append(params.index(arg.id))
+                    if mapped and node.name not in by_name:
+                        add(node.name, _Donor(tuple(mapped)))
+    return by_name, factories, findings
+
+
+def _flat_targets(stmt) -> List[str]:
+    dumps = []
+
+    def rec(t):
+        if isinstance(t, (ast.Tuple, ast.List)):
+            for e in t.elts:
+                rec(e)
+        elif isinstance(t, ast.Starred):
+            rec(t.value)
+        else:
+            # unparse, not dump: Store/Load ctx must not break matching
+            dumps.append(ast.unparse(t))
+
+    if isinstance(stmt, ast.Assign):
+        for t in stmt.targets:
+            rec(t)
+    elif isinstance(stmt, (ast.AnnAssign, ast.AugAssign)):
+        rec(stmt.target)
+    return dumps
+
+
+def _check_donating_call(path, call, positions, stmt, out) -> None:
+    if stmt is None or isinstance(stmt, ast.Return):
+        return
+    targets = _flat_targets(stmt)
+    if not targets and not isinstance(stmt, ast.Expr):
+        out.append(Finding(
+            path, call.lineno, "ZPL003",
+            "donating call used in a non-assignment statement; the "
+            "donated buffer cannot be rebound here"))
+        return
+    for p in positions:
+        if p >= len(call.args):
+            continue
+        if any(isinstance(a, ast.Starred) for a in call.args[:p]):
+            continue                      # position not resolvable
+        arg = call.args[p]
+        if isinstance(arg, (ast.Call, ast.Constant)):
+            continue                      # fresh temporary
+        desc = ast.unparse(arg)
+        if desc in targets:
+            continue                      # rebound by this statement
+        out.append(Finding(
+            path, call.lineno, "ZPL003",
+            f"`{desc}` is passed at donated position {p} but not "
+            "rebound by this statement — the buffer is invalid after "
+            "the call (use-after-donate hazard)"))
+
+
+def pass_donation_safety(ctx: Context) -> List[Finding]:
+    by_name, factories, out = _donation_registry(ctx)
+    jit_scopes = _jit_scope_defs(ctx)
+    for path, mod in ctx.modules.items():
+        parents = parent_map(mod.tree)
+        in_jit = set()
+        for scope in jit_scopes.get(path, []):
+            for n in ast.walk(scope):
+                in_jit.add(id(n))
+        for node in ast.walk(mod.tree):
+            if not isinstance(node, ast.Call) or id(node) in in_jit:
+                continue                  # traced calls inline donation
+            positions = None
+            d = dotted(node.func)
+            if d is not None:
+                func = enclosing_function(node, parents)
+                for key in (d, d.split(".")[-1]):
+                    for donor in by_name.get(key, []):
+                        if donor.module is not None \
+                                and donor.module != path:
+                            continue
+                        if donor.scope is not None and (
+                                func is None
+                                or func.name != donor.scope):
+                            continue
+                        positions = donor.positions
+                        break
+                    if positions:
+                        break
+            elif isinstance(node.func, ast.Call):
+                inner = dotted(node.func.func)
+                if inner is not None:
+                    positions = factories.get(inner.split(".")[-1])
+            if not positions:
+                continue
+            _check_donating_call(path, node, positions,
+                                 enclosing_stmt(node, parents), out)
+    return out
+
+
+# ----------------------------------------------------------------------
+# ZPL004 config discipline
+
+
+def _config_fields(mod: Module):
+    fields = {}       # (class, field) -> lineno
+    for node in mod.tree.body:
+        if isinstance(node, ast.ClassDef) and node.name in CONFIG_CLASSES:
+            for item in node.body:
+                if isinstance(item, ast.AnnAssign) \
+                        and isinstance(item.target, ast.Name):
+                    fields[(node.name, item.target.id)] = item.lineno
+    return fields
+
+
+def pass_config_discipline(ctx: Context) -> List[Finding]:
+    mod = ctx.modules.get(CONFIG_MODULE)
+    if mod is None:
+        return []
+    out = []
+    fields = _config_fields(mod)
+    corpus = "\n".join(ctx.docs.values())
+    # attribute reads anywhere in src/repro except the config module itself
+    consumed = set()
+    for path, m in ctx.modules.items():
+        if path == CONFIG_MODULE:
+            continue
+        for node in ast.walk(m.tree):
+            if isinstance(node, ast.Attribute):
+                consumed.add(node.attr)
+    # fields referenced inside build_engine_options (no silent drops)
+    routed = set()
+    for node in mod.tree.body:
+        if isinstance(node, (ast.FunctionDef, ast.AsyncFunctionDef)) \
+                and node.name == "build_engine_options":
+            for n in ast.walk(node):
+                if isinstance(n, ast.Attribute):
+                    routed.add(n.attr)
+    for (cls, name), lineno in sorted(fields.items(),
+                                      key=lambda kv: kv[1]):
+        if f"`{name}`" not in corpus:
+            out.append(Finding(
+                CONFIG_MODULE, lineno, "ZPL004",
+                f"{cls}.{name} is not documented — add a `{name}` code "
+                "span to README.md / ROADMAP.md / docs/*.md"))
+        if name not in consumed:
+            out.append(Finding(
+                CONFIG_MODULE, lineno, "ZPL004",
+                f"{cls}.{name} is never read outside api/config.py — "
+                "dead knob (wire it up or remove it)"))
+        if routed and name not in routed:
+            out.append(Finding(
+                CONFIG_MODULE, lineno, "ZPL004",
+                f"{cls}.{name} is not routed through "
+                "build_engine_options — the facade silently drops it"))
+    return out
+
+
+# ----------------------------------------------------------------------
+# ZPL005 engine sync discipline
+
+#: engine methods that ARE the sanctioned sync points
+SYNC_POINTS = ("_fetch", "_block_ready")
+
+
+def _mentions_self_state(node: ast.AST) -> bool:
+    for n in ast.walk(node):
+        if isinstance(n, ast.Attribute) and n.attr == "state" \
+                and isinstance(n.value, ast.Name) and n.value.id == "self":
+            return True
+    return False
+
+
+def pass_engine_sync(ctx: Context) -> List[Finding]:
+    mod = ctx.modules.get(ENGINE_MODULE)
+    if mod is None:
+        return []
+    out: List[Finding] = []
+    parents = parent_map(mod.tree)
+    for node in ast.walk(mod.tree):
+        if not isinstance(node, ast.Call):
+            continue
+        d = dotted(node.func)
+        func = enclosing_function(node, parents)
+        fname = func.name if func is not None else "<module>"
+        if d in ("jax.device_get", "jax.block_until_ready") \
+                and fname not in SYNC_POINTS:
+            out.append(Finding(
+                ENGINE_MODULE, node.lineno, "ZPL005",
+                f"{d}() in `{fname}` bypasses _fetch/_block_ready — the "
+                "sync is invisible to t_device accounting"))
+        elif isinstance(node.func, ast.Attribute) \
+                and node.func.attr in ("item", "tolist"):
+            out.append(Finding(
+                ENGINE_MODULE, node.lineno, "ZPL005",
+                f".{node.func.attr}() in `{fname}` is an implicit "
+                "device->host sync; fetch through _fetch instead"))
+        elif d == "jax.tree.map" and any(
+                dotted(a) in ("np.asarray", "numpy.asarray")
+                for a in node.args):
+            out.append(Finding(
+                ENGINE_MODULE, node.lineno, "ZPL005",
+                f"jax.tree.map(np.asarray, ...) in `{fname}` is a "
+                "whole-tree device->host sync outside "
+                "_fetch/_block_ready"))
+        elif d in ("np.asarray", "numpy.asarray") and node.args \
+                and _mentions_self_state(node.args[0]):
+            out.append(Finding(
+                ENGINE_MODULE, node.lineno, "ZPL005",
+                f"np.asarray on device state in `{fname}` host-syncs "
+                "outside _fetch/_block_ready"))
+    return out
+
+
+PASSES = (
+    ("ZPL001", pass_host_purity),
+    ("ZPL002", pass_jit_host_sync),
+    ("ZPL003", pass_donation_safety),
+    ("ZPL004", pass_config_discipline),
+    ("ZPL005", pass_engine_sync),
+)
+
+
+# ----------------------------------------------------------------------
+# waivers
+
+
+@dataclasses.dataclass
+class _Waiver:
+    line: int          # line the waiver applies to
+    comment_line: int
+    rules: Tuple[str, ...]
+    reason: Optional[str]
+    used: bool = False
+
+
+def collect_waivers(mod: Module) -> List[_Waiver]:
+    out = []
+    for i, line in enumerate(mod.source.splitlines(), 1):
+        m = WAIVER_RE.search(line)
+        if m is None:
+            continue
+        rules = tuple(r.strip() for r in m.group(1).split(",")
+                      if r.strip())
+        own_line = not line[:m.start()].strip()
+        out.append(_Waiver(line=i + 1 if own_line else i,
+                           comment_line=i, rules=rules,
+                           reason=m.group(2)))
+    return out
+
+
+def apply_waivers(findings: Sequence[Finding], modules: Dict[str, Module]):
+    """Drop waived findings; emit ZPL000 hygiene findings for malformed
+    or unused waivers. Returns (kept, n_waived)."""
+    waivers: Dict[str, List[_Waiver]] = {
+        path: collect_waivers(mod) for path, mod in modules.items()}
+    hygiene: List[Finding] = []
+    for path, ws in waivers.items():
+        for w in ws:
+            if not w.reason:
+                hygiene.append(Finding(
+                    path, w.comment_line, "ZPL000",
+                    "waiver without a reason; write "
+                    "`# zipalint: waive[RULE] -- why`"))
+            for r in w.rules:
+                if r != "*" and r not in RULES:
+                    hygiene.append(Finding(
+                        path, w.comment_line, "ZPL000",
+                        f"waiver names unknown rule {r!r}"))
+    kept: List[Finding] = []
+    n_waived = 0
+    for f in findings:
+        waived = False
+        for w in waivers.get(f.path, []):
+            if w.line == f.line and ("*" in w.rules or f.rule in w.rules):
+                w.used = True
+                waived = True
+        if waived:
+            n_waived += 1
+        else:
+            kept.append(f)
+    for path, ws in waivers.items():
+        for w in ws:
+            if not w.used and w.reason \
+                    and all(r in RULES or r == "*" for r in w.rules):
+                hygiene.append(Finding(
+                    path, w.comment_line, "ZPL000",
+                    f"unused waiver for {', '.join(w.rules)} — the "
+                    "finding it suppressed is gone; remove the comment"))
+    return kept + hygiene, n_waived
+
+
+# ----------------------------------------------------------------------
+# driver
+
+
+def analyze(ctx: Context) -> List[Finding]:
+    findings: List[Finding] = []
+    for _rule, fn in PASSES:
+        findings.extend(fn(ctx))
+    return findings
+
+
+def load_context(root: Path) -> Context:
+    modules = {}
+    src = root / "src" / "repro"
+    for py in sorted(src.rglob("*.py")):
+        rel = py.relative_to(root).as_posix()
+        modules[rel] = make_module(rel, py.read_text())
+    docs = {}
+    for md in [root / "README.md", root / "ROADMAP.md",
+               *sorted((root / "docs").glob("*.md"))]:
+        if md.exists():
+            docs[md.name] = md.read_text()
+    return Context(modules, docs)
+
+
+def run(root: Path) -> Tuple[List[Finding], int, int]:
+    ctx = load_context(root)
+    findings, n_waived = apply_waivers(analyze(ctx), ctx.modules)
+    findings.sort(key=lambda f: (f.path, f.line, f.rule))
+    return findings, n_waived, len(ctx.modules)
+
+
+def main(argv: Optional[Sequence[str]] = None) -> int:
+    ap = argparse.ArgumentParser(
+        prog="zipalint", description=__doc__,
+        formatter_class=argparse.RawDescriptionHelpFormatter)
+    ap.add_argument("--root", type=Path, default=REPO,
+                    help="repo root (default: this checkout)")
+    ap.add_argument("--list-rules", action="store_true",
+                    help="print the rule catalogue and exit")
+    args = ap.parse_args(argv)
+    if args.list_rules:
+        for rule, desc in sorted(RULES.items()):
+            print(f"{rule}  {desc}")
+        return 0
+    findings, n_waived, n_files = run(args.root)
+    for f in findings:
+        print(f"zipalint: {f.render()}", file=sys.stderr)
+    if findings:
+        print(f"zipalint: {len(findings)} finding(s)", file=sys.stderr)
+        return 1
+    print(f"zipalint: OK ({n_files} files, {len(PASSES)} passes, "
+          f"{n_waived} waiver(s) honored)")
+    return 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())
