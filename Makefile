@@ -50,7 +50,7 @@ bench-kernels:
 # oversubscribed recompute-vs-swap-vs-auto preemption-mode comparison) —
 # CI uploads the JSON as the per-PR concurrency trajectory artifact
 bench-concurrency:
-	$(PYTHON) -m benchmarks.bench_concurrency --smoke --oversubscribe --out bench-concurrency-smoke.json
+	$(PYTHON) -m benchmarks.bench_concurrency --smoke --oversubscribe --prefix-heavy --out bench-concurrency-smoke.json
 
 # accumulate bench-smoke artifacts (oldest first) into BENCH_TREND.md and
 # fail on a >25% decode-throughput regression (zipage, and swap-mode once

@@ -6,10 +6,11 @@ Usable two ways:
   * ``python -m benchmarks.run bench_concurrency`` — legacy CSV rows via
     ``run()`` (name,us_per_step,derived);
   * ``python -m benchmarks.bench_concurrency [--smoke] [--oversubscribe]
-    [--out FILE.json]`` — JSON for the per-PR concurrency trajectory
-    (CI's bench-smoke artifact), same envelope as ``bench_kernels.py``:
+    [--prefix-heavy] [--out FILE.json]`` — JSON for the per-PR
+    concurrency trajectory (CI's bench-smoke artifact), same envelope as
+    ``bench_kernels.py``:
 
-      {"schema": "zipage-bench-concurrency/v3", "jax": ..., "platform": ...,
+      {"schema": "zipage-bench-concurrency/v4", "jax": ..., "platform": ...,
        "smoke": bool, "results": [{"name", "tps", "tokens", "steps",
        "tokens_per_step", "mean_concurrency", "p50_concurrency",
        "max_concurrency", "frac_steps_conc_ge12", "tpot_ms", "block_util",
@@ -20,7 +21,11 @@ Usable two ways:
        "oversub_speedup_tps_swap_vs_recompute": float | absent,
        "oversub_speedup_tps_auto_vs_recompute": float | absent,
        "oversub_speedup_step_swap_vs_recompute": float | absent,
-       "oversub_speedup_step_auto_vs_recompute": float | absent}
+       "oversub_speedup_step_auto_vs_recompute": float | absent,
+       "prefix_speedup_tps_radix_vs_flat": float | absent,
+       "prefix_speedup_step_radix_vs_flat": float | absent,
+       "prefix_ttft_ratio_radix_vs_flat": float | absent,
+       "prefix_warm_ttft_ratio_radix_vs_flat": float | absent}
 
     v2 added the per-step host/device time split (``t_host_ms`` is host
     planning+bookkeeping, ``t_device_ms`` is blocked-on-device; means per
@@ -35,6 +40,24 @@ Usable two ways:
     preempted requests and swap mode restores their KV from the host
     swap tier instead (docs/SCHEDULER.md "Preemption modes").
 
+    v4 adds, with ``--prefix-heavy``, the multi-turn prefix-sharing
+    workload (docs/CACHING.md): conversations fanning out from a few
+    block-aligned shared system prompts, then a second round of forked
+    continuations of the round-1 streams — prefixed, in arrival order,
+    by a burst of cold one-off prompts — through the *same* engine, so
+    round 2 can only reuse KV if finished requests registered it. Rows
+    ``prefix_flat_fcfs`` (legacy exact-match cache, FCFS admission),
+    ``prefix_radix_cache_aware`` (radix tree + cache-aware admission) and
+    ``prefix_radix_compressed`` (plus compressed-segment caching) carry
+    the cache telemetry per row: ``prefix_hit_rate``,
+    ``prefix_hit_tokens``, ``prefix_segment_hits``, ``prefix_evictions``,
+    ``cached_tokens_per_block``, ``ttft_ms``, ``ttft_warm_ms`` (mean
+    admitted-to-first-token of the requests that had a cache hit — the
+    ones cache-aware admission floats ahead of the cold burst). The
+    ``prefix_*_vs_flat`` headlines compare radix+cache-aware against the
+    flat+FCFS baseline; ``warm_ttft_ratio`` < 1 means warm requests got
+    their first token sooner under the radix+cache-aware engine.
+
 ``--smoke`` shrinks the request count so the job stays in CI budget.
 ``tools/bench_trend.py`` accumulates these JSONs across PRs and gates on
 decode-throughput regressions (``make bench-trend``) — including the
@@ -43,10 +66,12 @@ swap-mode decode throughput once oversubscribed points exist.
 import argparse
 import json
 import sys
+import time
 
 import numpy as np
 
-from benchmarks.common import run_engine, workload
+from benchmarks.common import (CFG, DEFAULT_ENGINE, params_random,
+                               run_engine, workload)
 
 
 def _measure(n_requests):
@@ -77,12 +102,142 @@ def _measure_oversub(n_requests):
     return out
 
 
+# multi-turn prefix-sharing scenario (docs/CACHING.md): conversations
+# fork off a few block-aligned shared system prompts, and a second round
+# continues the round-1 streams — reuse across rounds only exists if the
+# cache registered finished requests
+PREFIX_VARIANTS = (
+    ("prefix_flat_fcfs",
+     dict(prefix_cache_policy="flat", policy="fcfs")),
+    ("prefix_radix_cache_aware",
+     dict(prefix_cache_policy="radix", policy="cache_aware")),
+    ("prefix_radix_compressed",
+     dict(prefix_cache_policy="radix", policy="cache_aware",
+          cache_compressed_prefixes=True)),
+)
+
+
+def _run_prefix_heavy(n_convs, **overrides):
+    """Two rounds of a multi-turn chat/agent workload (with a cache-churn
+    burst in between) through one engine; returns the run_engine-shaped
+    result dict plus cache telemetry."""
+    from repro.api import SamplingParams, Zipage
+
+    kw = dict(DEFAULT_ENGINE)
+    # tighter pool + budgeted prefill than the plain scenarios: the cache
+    # comparison is about eviction quality and prefill tokens saved, both
+    # of which need the pool and the step budget to actually be scarce.
+    # The full admission margin keeps the tight pool out of admit/preempt
+    # thrash — and is exactly the reserve that cache-aware admission
+    # shrinks by each candidate's matched blocks (docs/CACHING.md)
+    kw.update(n_total_blocks=64, token_budget=96, admission_margin=1.0)
+    kw.update(overrides)
+    bs = kw["block_size"]
+
+    def drive(z):
+        rng = np.random.default_rng(11)
+        sys_prompts = [rng.integers(0, CFG.vocab_size, size=4 * bs).tolist()
+                       for _ in range(3)]
+        # round 1: shared system prompt + block-aligned user turn
+        # (alignment keeps first compressions prompt-pure, so the
+        # compressed variant can actually cache segments)
+        r1_prompts = []
+        for i in range(n_convs):
+            user_len = int(rng.choice([bs, 2 * bs]))
+            r1_prompts.append(sys_prompts[i % len(sys_prompts)]
+                              + rng.integers(0, CFG.vocab_size,
+                                             size=user_len).tolist())
+        n_out = [int(rng.integers(16, 28)) for _ in range(2 * n_convs)]
+        t0 = time.monotonic()
+        outs1 = z.generate(r1_prompts,
+                           [SamplingParams(max_new_tokens=n_out[i])
+                            for i in range(n_convs)], max_steps=20_000)
+        # round 2: two forked continuations per conversation (each
+        # extending the full round-1 stream with a fresh user turn) plus
+        # a burst of cold one-off prompts placed at the *head* of the
+        # arrival order. The colds both churn the cache (eviction
+        # pressure) and stall FCFS: strict head-of-line admission parks
+        # the warm forks behind the block-hungry cold prompts, while
+        # cache-aware admission floats the forks (cheap — most of their
+        # blocks are already cached) to the front and keeps the decode
+        # batch fed.
+        forks = []
+        for o in outs1:
+            stream = o.prompt_token_ids + o.token_ids
+            for _ in range(2):
+                cont = rng.integers(0, CFG.vocab_size,
+                                    size=int(rng.integers(4, 10))).tolist()
+                forks.append(stream + cont)
+        cold = [rng.integers(0, CFG.vocab_size,
+                             size=int(rng.integers(4, 7)) * bs).tolist()
+                for _ in range(n_convs)]
+        r2_prompts = cold + forks
+        r2_params = ([SamplingParams(max_new_tokens=8)] * len(cold)
+                     + [SamplingParams(max_new_tokens=n_out[n_convs + i // 2])
+                        for i in range(len(forks))])
+        outs2 = z.generate(r2_prompts, r2_params, max_steps=20_000)
+        return outs1 + outs2, time.monotonic() - t0
+
+    # warm the process-wide compile cache with a throwaway engine running
+    # the same workload, then measure a fresh engine of the same serve
+    # signature (compiled steps are shared — docs/PERF.md "Warm starts").
+    # Without this, variant order skews both the clock and the
+    # straggler-aware admission backoff.
+    drive(Zipage(CFG, params_random(), **kw))
+    z = Zipage(CFG, params_random(), **kw)
+    outs, dt = drive(z)
+    metrics = z.metrics
+    steps = z.step_count
+    toks = sum(o.n_tokens for o in outs)
+    tpots = [(o.metrics.t_finish - o.metrics.t_first_token)
+             / (o.n_tokens - 1) for o in outs
+             if o.metrics.t_finish and o.metrics.t_first_token
+             and o.n_tokens > 1]
+    ttfts = [o.metrics.t_first_token - o.metrics.arrival for o in outs
+             if o.metrics.t_first_token is not None]
+    # warm = admitted with a cache hit. Cache-aware admission floats
+    # these ahead of cold prompts, so their queueing delay is the
+    # admission-latency signal; the overall mean mixes in the cold
+    # prompts the policy deliberately deferred.
+    ttfts_warm = [o.metrics.t_first_token - o.metrics.arrival for o in outs
+                  if o.metrics.t_first_token is not None
+                  and o.metrics.n_cached_prompt_tokens > 0]
+    stats = z.scheduler_stats
+    return {
+        "engine": z, "metrics": metrics, "outputs": outs, "wall_s": dt,
+        "tokens": toks, "steps": steps, "tps": toks / dt,
+        "tokens_per_step": toks / max(steps, 1),
+        "tpot_ms": 1e3 * float(np.mean(tpots)) if tpots else float("nan"),
+        "compressions": sum(m["n_compressing"] for m in metrics),
+        "block_util": float(np.mean([m["block_util"] for m in metrics])),
+        "ttft_ms": 1e3 * float(np.mean(ttfts)) if ttfts else float("nan"),
+        "ttft_warm_ms": (1e3 * float(np.mean(ttfts_warm))
+                         if ttfts_warm else float("nan")),
+        "cache": {
+            "prefix_hit_rate": round(
+                stats["prefix_hits"] / max(1, stats["prefix_lookups"]), 3),
+            "prefix_hit_tokens": stats["prefix_hit_tokens"],
+            "prefix_segment_hits": stats["prefix_segment_hits"],
+            "prefix_evictions": stats["prefix_evictions"],
+            "cached_tokens_per_block": round(
+                stats["cached_tokens_per_block"], 3),
+        },
+    }
+
+
+def _measure_prefix_heavy(n_convs):
+    """[(name, result)] for the flat-vs-radix prefix-cache comparison on
+    the multi-turn workload."""
+    return [(name, _run_prefix_heavy(n_convs, **ov))
+            for name, ov in PREFIX_VARIANTS]
+
+
 def _row(name, r):
-    metrics = r["engine"].metrics
+    metrics = r.get("metrics") or r["engine"].metrics
     conc = np.array([m["n_running"] for m in metrics])
     horizons = [m["decode_horizon"] for m in metrics
                 if m.get("decode_horizon", 0) > 0]
-    return {
+    row = {
         "name": name,
         "tps": round(r["tps"], 2),
         "tokens": r["tokens"],
@@ -111,6 +266,11 @@ def _row(name, r):
         if horizons else 0.0,
         "wall_s": round(r["wall_s"], 3),
     }
+    if "cache" in r:                     # prefix-heavy rows (schema v4)
+        row.update(r["cache"])
+        row["ttft_ms"] = round(r["ttft_ms"], 3)
+        row["ttft_warm_ms"] = round(r["ttft_warm_ms"], 3)
+    return row
 
 
 def run():
@@ -138,6 +298,9 @@ def main(argv=None):
     ap.add_argument("--oversubscribe", action="store_true",
                     help="add the oversubscribed swap-vs-recompute "
                          "preemption-mode comparison")
+    ap.add_argument("--prefix-heavy", action="store_true",
+                    help="add the multi-turn prefix-sharing flat-vs-radix "
+                         "cache comparison (docs/CACHING.md)")
     ap.add_argument("--out", default=None, metavar="FILE.json",
                     help="write the JSON report here (default: stdout)")
     args = ap.parse_args(argv)
@@ -145,7 +308,7 @@ def main(argv=None):
     results = {name: _row(name, r)
                for name, r in _measure(8 if args.smoke else 24)}
     report = {
-        "schema": "zipage-bench-concurrency/v3",
+        "schema": "zipage-bench-concurrency/v4",
         "jax": jax.__version__,
         "platform": jax.default_backend(),
         "smoke": args.smoke,
@@ -165,6 +328,21 @@ def main(argv=None):
                 row["tps"] / rec["tps"], 3)
             report[f"oversub_speedup_step_{mode}_vs_recompute"] = round(
                 row["tokens_per_step"] / rec["tokens_per_step"], 3)
+    if args.prefix_heavy:
+        prefix = {name: _row(name, r)
+                  for name, r in _measure_prefix_heavy(8 if args.smoke
+                                                       else 16)}
+        report["results"] += list(prefix.values())
+        flat = prefix["prefix_flat_fcfs"]
+        radix = prefix["prefix_radix_cache_aware"]
+        report["prefix_speedup_tps_radix_vs_flat"] = round(
+            radix["tps"] / flat["tps"], 3)
+        report["prefix_speedup_step_radix_vs_flat"] = round(
+            radix["tokens_per_step"] / flat["tokens_per_step"], 3)
+        report["prefix_ttft_ratio_radix_vs_flat"] = round(
+            radix["ttft_ms"] / flat["ttft_ms"], 3)
+        report["prefix_warm_ttft_ratio_radix_vs_flat"] = round(
+            radix["ttft_warm_ms"] / flat["ttft_warm_ms"], 3)
     text = json.dumps(report, indent=2)
     if args.out:
         with open(args.out, "w") as f:

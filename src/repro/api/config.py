@@ -31,6 +31,24 @@ class CacheConfig:
     n_max: Optional[int] = 4         # block cap; None => full-KV baseline
     window: int = 4                  # observation window w
     prefix_caching: bool = True
+    # prefix-cache index structure (docs/CACHING.md): "radix" (default)
+    # keeps cached blocks in a radix tree over chain hashes — partial-
+    # prefix reuse at block granularity, leaf-first LRU eviction, and
+    # compressed-segment caching; "flat" is the legacy exact-map
+    # behavior kept for byte-for-byte parity with the frozen engine
+    prefix_cache_policy: str = "radix"
+    # LRU high-watermark: cap unreferenced-but-cached blocks at this
+    # fraction of the pool (excess is evicted leaf-first on release);
+    # 1.0 disables the cap — cached blocks are then reclaimed only on
+    # allocation pressure
+    prefix_cache_watermark: float = 1.0
+    # also cache *compressed* prefixes (docs/CACHING.md "Compressed
+    # segments"): a prompt-pure compression's condensed payload is kept
+    # as a cache segment, so a later request with the same long prompt
+    # adopts n_tokens of history for k cache entries. Requires the radix
+    # policy and compression enabled; hits are semantically (not
+    # bit-wise) equivalent to recompute — see the docs caveat.
+    cache_compressed_prefixes: bool = False
     compress: Optional[CompressOptions] = None   # None => window defaults
     max_model_len: int = 512
     # host swap tier: CPU-side block slots backing swap-mode preemption
@@ -50,6 +68,9 @@ class SchedulerConfig:
     async_compression: bool = True
     # admission/preemption policy (repro.core.scheduler.POLICIES):
     # fcfs | priority (Request.priority desc) | srpt (shortest remaining)
+    # | cache_aware (most projected prefix-cache-reusable blocks first,
+    # FCFS tie-break; victims are least-reusable first — docs/CACHING.md
+    # "Cache-aware admission")
     policy: str = "fcfs"
     # victim-order policy for preemption; None => same as `policy`
     preemption: Optional[str] = None
@@ -161,6 +182,9 @@ def build_engine_options(cache: CacheConfig, scheduler: SchedulerConfig,
         window=cache.window,
         scheduling=scheduler.scheduling,
         prefix_caching=cache.prefix_caching,
+        prefix_cache_policy=cache.prefix_cache_policy,
+        prefix_cache_watermark=cache.prefix_cache_watermark,
+        cache_compressed_prefixes=cache.cache_compressed_prefixes,
         async_compression=scheduler.async_compression,
         policy=scheduler.policy,
         preemption=scheduler.preemption,

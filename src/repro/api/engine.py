@@ -193,8 +193,10 @@ class Zipage:
     def scheduler_stats(self) -> Optional[dict]:
         """Last step's scheduler telemetry (docs/SCHEDULER.md): policy,
         admitted/preempted/blocked/finished counts, prefill and scheduled
-        token counts, token-budget utilization, free blocks and the
-        straggler-aware admission scale. None before the first step."""
+        token counts, token-budget utilization, free blocks, the
+        straggler-aware admission scale, and the cumulative prefix-cache
+        counters (docs/CACHING.md "Telemetry"). None before the first
+        step."""
         if not self.engine.metrics:
             return None
         m = self.engine.metrics[-1]
@@ -205,7 +207,11 @@ class Zipage:
             "n_finished", "n_prefill_tokens", "n_scheduled_tokens",
             "token_budget", "budget_util", "free_blocks",
             "admission_scale", "t_host", "t_device",
-            "decode_horizon") if k in m}
+            "decode_horizon",
+            "prefix_cache_policy", "prefix_lookups", "prefix_hits",
+            "prefix_hit_tokens", "prefix_segment_hits",
+            "prefix_evictions", "prefix_cached_blocks",
+            "prefix_cached_tokens", "cached_tokens_per_block") if k in m}
 
     @property
     def step_count(self) -> int:

@@ -120,6 +120,19 @@ class EngineOptions:
     window: int = 4                  # observation window w
     scheduling: str = "hybrid"       # hybrid | constrained
     prefix_caching: bool = True
+    # prefix-cache structure (docs/CACHING.md): "radix" (default) is the
+    # SGLang-style radix tree — longest-prefix match anywhere in the
+    # waiting queue, leaf-first LRU eviction, multi-turn reuse of finished
+    # generations; "flat" is the legacy exact-match hash map, kept for
+    # parity with the frozen pre-radix engine
+    prefix_cache_policy: str = "radix"
+    # cap unreferenced cached blocks at this fraction of the pool (LRU
+    # eviction beyond it); 1.0 = only reclaim under allocation pressure
+    prefix_cache_watermark: float = 1.0
+    # additionally cache compressed prefixes as radix segments other
+    # prompts can adopt (lossy — adopted continuations are not
+    # bit-identical to cold runs; docs/CACHING.md)
+    cache_compressed_prefixes: bool = False
     async_compression: bool = True
     compress: CompressOptions = dataclasses.field(
         default_factory=lambda: CompressOptions(window=4))
@@ -237,6 +250,12 @@ class ZipageEngine:
                 token_budget=opts.token_budget,
                 max_prefill_chunk=opts.max_prefill_chunk,
                 admission_margin=opts.admission_margin,
+                # compressed-prefix caching needs segments to register
+                # (compression on) and hits to be adoptable (prefix on);
+                # outside that it is silently inert, not an error
+                cache_compressed_prefixes=(opts.cache_compressed_prefixes
+                                           and self.compression_enabled
+                                           and prefix_ok),
                 decode_steps=opts.decode_steps,
                 compression_enabled=self.compression_enabled,
                 budget_blocks=self.budget_blocks,
@@ -245,7 +264,9 @@ class ZipageEngine:
             BlockManager(opts.n_total_blocks, b,
                          enable_prefix_cache=prefix_ok,
                          swap_space_blocks=(opts.swap_space_blocks
-                                            if self._swap_ok else 0)))
+                                            if self._swap_ok else 0),
+                         prefix_cache_policy=opts.prefix_cache_policy,
+                         prefix_cache_watermark=opts.prefix_cache_watermark))
         self._decode = _cached_step("decode", cfg, self.spec)
         self._prefill = _cached_step("prefill", cfg, self.spec)
         self._fused_fns: Dict[int, callable] = {}
@@ -419,6 +440,7 @@ class ZipageEngine:
             slot_ids = np.full((P,), -1, np.int32)
             lengths = np.zeros((P,), np.int32)
             start = np.zeros((P,), np.int32)
+            rope = np.zeros((P,), np.int32)
             kw = {}
             if self.cfg.is_enc_dec:
                 kw["frame_embeds"] = jnp.zeros(
@@ -430,7 +452,11 @@ class ZipageEngine:
                 toks[i, :len(chunk)] = chunk
                 slot_ids[i] = r.slot
                 lengths[i] = len(chunk)
-                start[i] = offset[r.rid]
+                # cache-write index vs rope position: identical except
+                # after compressed-prefix adoption, where the payload
+                # condensed pos_gap tokens away (docs/CACHING.md)
+                start[i] = offset[r.rid] - r.pos_gap
+                rope[i] = offset[r.rid]
                 remaining[r.rid] = remaining[r.rid][len(chunk):]
                 offset[r.rid] += len(chunk)
                 r.n_prefilled = offset[r.rid]
@@ -440,7 +466,7 @@ class ZipageEngine:
             logits, self.state = self._prefill(
                 self.params, self.state, jnp.asarray(toks),
                 jnp.asarray(slot_ids), jnp.asarray(lengths),
-                jnp.asarray(start), **kw)
+                jnp.asarray(start), rope_start=jnp.asarray(rope), **kw)
             # only rows finishing their last chunk consume a sample; with
             # no final rows this round, skip sampling entirely — no
             # argmax dispatch, no host sync (ISSUE 4 satellite)
@@ -883,7 +909,8 @@ class ZipageEngine:
         _logits, self.state = self._prefill(
             self.params, self.state, jnp.zeros((P, S), jnp.int32),
             jnp.full((P,), -1, jnp.int32), jnp.zeros((P,), jnp.int32),
-            jnp.zeros((P,), jnp.int32), **kw)
+            jnp.zeros((P,), jnp.int32),
+            rope_start=jnp.zeros((P,), jnp.int32), **kw)
 
     def _run_decode_fused(self, active, plan=None):
         """Fused decode+sample over the scheduler's quiescent horizon: up

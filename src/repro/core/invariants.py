@@ -179,6 +179,64 @@ def _block_refcounts(sched: "Scheduler", out: List[str]) -> None:
                 f"{b} but block_hash[{b}] == {bm.block_hash.get(b)}")
 
 
+def _prefix_tree(sched: "Scheduler", out: List[str]) -> None:
+    """Radix prefix-cache structure: node<->hash<->block bijection, tree
+    linkage, path closure (a referenced node's ancestors stay referenced)
+    and the free-list exclusion of cached payload. Flat policy keeps no
+    tree, so there is nothing to audit."""
+    bm = sched.bm
+    if bm.prefix_cache_policy != "radix":
+        if bm.nodes or bm.segments:
+            out.append(
+                f"flat-policy BlockManager holds {len(bm.nodes)} radix "
+                f"node(s) / {len(bm.segments)} segment(s) — tree state "
+                "leaked across a policy boundary")
+        return
+    raw_free = set(bm.free)
+    if set(bm.nodes) != set(bm.hash_to_block):
+        only_n = sorted(set(bm.nodes) - set(bm.hash_to_block))[:4]
+        only_h = sorted(set(bm.hash_to_block) - set(bm.nodes))[:4]
+        out.append(
+            f"radix node set diverged from hash_to_block (nodes-only "
+            f"{only_n}, hashes-only {only_h}) — register/deregister "
+            "updated one map but not the other")
+    for h, node in bm.nodes.items():
+        b = node.block
+        if bm.hash_to_block.get(h) != b:
+            out.append(
+                f"radix node {h} points at block {b} but hash_to_block "
+                f"maps it to {bm.hash_to_block.get(h)} — node/block "
+                "bijection broken")
+        if bm.node_of_block.get(b) is not node:
+            out.append(
+                f"block {b} of radix node {h} is not node_of_block's "
+                "entry for that block — reverse map stale")
+        if b in raw_free:
+            out.append(
+                f"block {b} backs cached radix node {h} but sits in the "
+                "raw free list — it can be reallocated while the cache "
+                "still advertises its content")
+        parent = node.parent
+        if parent is not None:
+            if parent.children.get(h) is not node:
+                out.append(
+                    f"radix node {h} names a parent that does not list "
+                    "it as a child — tree linkage corrupt")
+            if bm.ref[b] > 0 and bm.ref[parent.block] == 0 \
+                    and parent.block not in bm.cached_free:
+                out.append(
+                    f"radix node {h} (block {b}) is referenced but its "
+                    f"parent block {parent.block} is neither referenced "
+                    "nor cached — path closure broken (eviction can "
+                    "orphan a live suffix)")
+    for b in bm.seg_of_block:
+        if b in raw_free:
+            out.append(
+                f"block {b} is compressed-segment payload "
+                f"({bm.seg_of_block[b]}) but sits in the raw free list — "
+                "segment-vs-pool accounting out of sync")
+
+
 def _swap_pool(sched: "Scheduler", out: List[str]) -> None:
     """Host swap tier: per-rid reservations match the swapped queue and
     partition the host block space with swap_free."""
@@ -262,6 +320,13 @@ def _request_counters(engine, out: List[str]) -> None:
                 "writing past the block table")
         if r.compressed:
             cap = (p.n_max or 0) + max(1, math.ceil(p.window / b))
+            if r.pos_gap:
+                # segment adoption (docs/CACHING.md) marks the request
+                # compressed at admission, but its block table tracks
+                # seq_len like an uncompressed request until its own
+                # first compression fires — allow the seq_len envelope
+                cap = max(cap, -(-(r.seq_len + max(1, p.decode_steps))
+                                 // b))
             if r.n_blocks > cap:
                 out.append(
                     f"rid {r.rid}: compressed but holds {r.n_blocks} "
@@ -346,6 +411,7 @@ def audit_engine(engine) -> List[str]:
     _queue_states(sched, out)
     _slot_pools(sched, out)
     _block_refcounts(sched, out)
+    _prefix_tree(sched, out)
     _swap_pool(sched, out)
     _token_budget(engine, out)
     _request_counters(engine, out)

@@ -47,6 +47,12 @@ class Request:
     seq_len: int = 0                   # cache entries (cache order)
     position: int = 0                  # absolute next position
     n_cached: int = 0                  # prefix-cache hit tokens
+    # compressed-prefix adoption (docs/CACHING.md): token position minus
+    # cache index. 0 normally; a segment hit sets it to the tokens the
+    # compressed payload condensed away (span - k), and the engine's
+    # prefill subtracts it when deriving cache-write indices from token
+    # positions.
+    pos_gap: int = 0
     chain: List[int] = dataclasses.field(default_factory=list)
     n_shared: int = 0                  # shared blocks at admission
     preempt_count: int = 0

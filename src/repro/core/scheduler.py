@@ -26,8 +26,10 @@ sampled — see docs/SCHEDULER.md for the full queue lifecycle.
 
 Pluggable policies (``SchedulerConfig.policy`` on the ``repro.api``
 facade): ``fcfs`` (default — byte-for-byte the pre-extraction engine
-behavior), ``priority`` (``Request.priority`` descending) and ``srpt``
-(shortest remaining work first). Preemption victim order is a policy too
+behavior), ``priority`` (``Request.priority`` descending), ``srpt``
+(shortest remaining work first) and ``cache_aware`` (most reusable
+prefix first, scored by a side-effect-free radix-tree probe —
+docs/CACHING.md). Preemption victim order is a policy too
 (``SchedulerConfig.preemption``; defaults to the admission policy's
 reverse).
 """
@@ -64,7 +66,7 @@ class SchedulerParams:
     async_compression: bool = True
     prefill_rows: int = 4            # admission batch ceiling per step
     # --- policy knobs (SchedulerConfig on the repro.api facade) ---
-    policy: str = "fcfs"             # fcfs | priority | srpt
+    policy: str = "fcfs"             # fcfs | priority | srpt | cache_aware
     preemption: Optional[str] = None  # victim-order policy; None => policy
     # what preemption *does* (docs/SCHEDULER.md "Preemption modes"):
     # "recompute" frees the victim's blocks and re-prefills on
@@ -81,6 +83,13 @@ class SchedulerParams:
     token_budget: Optional[int] = None   # prefill+decode tokens per step
     max_prefill_chunk: Optional[int] = None  # per-request chunk cap per step
     admission_margin: float = 0.0    # fraction of projected growth reserved
+    # cache *compressed* prefixes too (docs/CACHING.md): at a request's
+    # first prompt-pure compression, keep the condensed payload registered
+    # as a radix segment later prompts can adopt wholesale. Requires the
+    # radix prefix-cache policy; off by default because an adopted
+    # continuation is not bit-identical to a cold run (the compression is
+    # lossy).
+    cache_compressed_prefixes: bool = False
     # multi-step decode ceiling (docs/PERF.md): max fused decode+sample
     # iterations per engine step; quiescent_horizon() trims it per request
     decode_steps: int = 1
@@ -199,16 +208,54 @@ class SrptPolicy(SchedulingPolicy):
         return [r for _i, r in order]
 
 
+class CacheAwarePolicy(SchedulingPolicy):
+    """Most-reusable-prefix-first admission (docs/CACHING.md): waiting
+    requests are scored by the prompt tokens a side-effect-free prefix-cache
+    probe (``BlockManager.probe_prefix``) says the pool already holds,
+    highest first, ties broken by arrival — so head-of-line blocking never
+    strands a cheap cache hit behind an expensive miss, and cached blocks
+    become admitted requests before pool pressure evicts them. Victims are
+    FCFS-like (most recently admitted first): the newest request has
+    accumulated the least reusable state. Bound to the engine's block
+    manager at scheduler construction (``bind``); unbound it degrades to
+    plain FCFS ordering."""
+    name = "cache_aware"
+
+    def __init__(self):
+        self.bm: Optional[BlockManager] = None
+        self.allow_compressed = False
+
+    def bind(self, bm: BlockManager, allow_compressed: bool = False) -> None:
+        self.bm = bm
+        self.allow_compressed = allow_compressed
+
+    def _score(self, r: Request) -> int:
+        if self.bm is None:
+            return 0
+        return self.bm.probe_prefix(r.full_prompt,
+                                    allow_compressed=self.allow_compressed)
+
+    def admission_order(self, waiting):
+        return sorted(waiting,
+                      key=lambda r: (-self._score(r), r.arrival, r.rid))
+
+    def victim_order(self, running):
+        return list(reversed(running))
+
+
 POLICIES = {p.name: p for p in (FcfsPolicy(), PriorityPolicy(),
-                                SrptPolicy())}
+                                SrptPolicy(), CacheAwarePolicy())}
 
 
 def make_policy(name: str) -> SchedulingPolicy:
     try:
-        return POLICIES[name]
+        proto = POLICIES[name]
     except KeyError:
         raise ValueError(f"unknown scheduler policy {name!r}; expected one "
                          f"of {tuple(POLICIES)}") from None
+    # a fresh instance per scheduler: stateful policies (cache_aware binds
+    # its engine's block manager) must not leak state across engines
+    return type(proto)()
 
 
 # ----------------------------------------------------------------------
@@ -243,11 +290,20 @@ class Scheduler:
                 "preemption_mode='auto' with swap_space_blocks=0: the "
                 "swap tier is unarmed, every preemption will recompute",
                 stacklevel=2)
+        if params.cache_compressed_prefixes \
+                and bm.prefix_cache_policy != "radix":
+            raise ValueError(
+                "cache_compressed_prefixes=True requires "
+                "prefix_cache_policy='radix' — the flat prefix cache "
+                "cannot index compressed segments")
         self.p = params
         self.bm = bm
         self.policy = make_policy(params.policy)
         self.preempt_policy = make_policy(params.preemption
                                           or params.policy)
+        for pol in (self.policy, self.preempt_policy):
+            if hasattr(pol, "bind"):
+                pol.bind(bm, params.cache_compressed_prefixes)
         self.waiting: Deque[Request] = deque()
         self.running: List[Request] = []      # admission order
         self.swapped: Deque[Request] = deque()   # host swap tier, FIFO
@@ -376,6 +432,7 @@ class Scheduler:
         r.compressed = False
         r.seq_len = r.position = 0
         r.n_cached = 0
+        r.pos_gap = 0
         r.win_count = 0
         r.n_prefilled = r.prefill_target = 0
         r.state = State.WAITING
@@ -615,10 +672,19 @@ class Scheduler:
             if prefill_avail < 1:
                 break                    # no token budget left this step
             if self.p.prefix_ok:
-                shared, n_cached, chain = self.bm.lookup_prefix(prompt)
+                m = self.bm.lookup_prefix_ex(
+                    prompt,
+                    allow_compressed=self.p.cache_compressed_prefixes)
+                shared, n_cached, chain = m.blocks, m.n_tokens, m.chain
+                # a compressed-segment hit covers more tokens than the KV
+                # entries it occupies; the gap shifts every cache index
+                # below the token position for the rest of the request's
+                # life (Request.pos_gap)
+                pos_gap = m.n_tokens - m.n_entries
             else:
                 shared, n_cached, chain = [], 0, []
-            n_new = self._needed_blocks(len(prompt)) - len(shared)
+                pos_gap = 0
+            n_new = self._needed_blocks(len(prompt) - pos_gap) - len(shared)
             # compression-aware admission: beyond the prompt's own blocks,
             # require `admission_margin` of the batch's projected *post-
             # compression* growth to stay free. margin 0.0 (default) is the
@@ -636,6 +702,11 @@ class Scheduler:
                     - self._needed_blocks(len(prompt)))
                 margin = math.ceil(self.p.admission_margin
                                    * (self.projected_growth() + own_growth))
+                # cache-aware refinement: matched blocks are KV the pool
+                # already holds — admitting this request does not compete
+                # with the batch's projected growth for them, so the
+                # reserve shrinks by the hit size
+                margin = max(0, margin - len(shared))
             if not self.bm.can_allocate(n_new, margin=margin):
                 # roll back the prefix refs and stop admitting (strict
                 # head-of-line within the policy order)
@@ -646,7 +717,11 @@ class Scheduler:
             new_blocks = self.bm.allocate(n_new) if n_new else []
             r.blocks = shared + new_blocks
             r.n_cached, r.chain, r.n_shared = n_cached, chain, len(shared)
-            if self.p.prefix_ok and chain:
+            r.pos_gap = pos_gap
+            # an adopted segment's blocks sit below token positions the
+            # chain hashes describe — registering them would serve
+            # compressed KV as raw; only gap-free admissions register
+            if self.p.prefix_ok and chain and pos_gap == 0:
                 self.bm.register_prefix(r.blocks, chain, len(shared))
             r.slot = self.free_slots.pop()
             if self.p.compression_enabled and self.free_qslots \
@@ -654,8 +729,11 @@ class Scheduler:
                 r.qslot = self.free_qslots.pop()
             ring = self.p.ring_blocks
             r.seq_len = (min(len(prompt), ring) if ring
-                         else (0 if self.p.attention_free else len(prompt)))
+                         else (0 if self.p.attention_free
+                               else len(prompt) - pos_gap))
             r.position = len(prompt)
+            if pos_gap:
+                r.compressed = True      # lives under compressed accounting
             r.state = State.RUNNING
             r.n_prefilled = r.n_cached
             r.prefill_target = len(prompt)
@@ -689,20 +767,45 @@ class Scheduler:
         # and preempting a later one would empty the blocks this very loop
         # is about to slice
         no_preempt = frozenset(r.rid for r in ready)
-        for r in ready:
-            shared_idx = [i for i, blk in enumerate(r.blocks)
-                          if self.bm.is_shared(blk)]
-            n_prefix = len(shared_idx)
+        def cow_need(r):
+            # copy-on-write: a block another reader depends on — shared
+            # prefix (ref > 1), cached compressed-segment payload, or a
+            # radix cache registration — must not be overwritten in
+            # place; compression copies into fresh dest blocks instead
+            n_prefix = sum(1 for blk in r.blocks
+                           if self.bm.is_cow_protected(blk))
             need = 0
             if n_prefix:
                 need = min(n_prefix, nb)
-                if self.bm.is_shared(r.blocks[min(nb, r.n_blocks - 1)]):
+                if self.bm.is_cow_protected(
+                        r.blocks[min(nb, r.n_blocks - 1)]):
                     need += 1                      # reserved must be fresh too
+            return n_prefix, need
+
+        for r in ready:
+            n_prefix, need = cow_need(r)
             if need and not self.bm.can_allocate(need) \
                     and not self._preempt_for_blocks(need, r, outs,
                                                      exclude=no_preempt):
-                r.state = State.BLOCKED            # retry next step
-                continue
+                # out of road: no free or evictable block and no
+                # preemptible victim (a whole batch can be compression-
+                # ready at once, and ready peers shield each other). A
+                # protection that exists only for the cache's benefit — a
+                # sole-referenced radix registration, not a segment
+                # payload — is best-effort: drop those registrations and
+                # condense in place (the legacy behavior, minus its stale
+                # entries) rather than deadlock the batch on fresh blocks
+                # that can never materialise.
+                soft = [blk for blk in r.blocks
+                        if self.bm.ref[blk] == 1
+                        and blk in self.bm.block_hash
+                        and blk not in self.bm.seg_of_block]
+                if soft:
+                    self.bm.invalidate_blocks(soft)
+                    n_prefix, need = cow_need(r)
+                if need and not self.bm.can_allocate(need):
+                    r.state = State.BLOCKED        # retry next step
+                    continue
             if n_prefix == 0:
                 dest = r.blocks[:nb]
                 reserved = r.blocks[nb]
@@ -710,7 +813,8 @@ class Scheduler:
             else:
                 fresh = self.bm.allocate(min(n_prefix, nb))
                 dest = fresh + r.blocks[n_prefix:][:nb - len(fresh)]
-                if self.bm.is_shared(r.blocks[min(nb, r.n_blocks - 1)]):
+                if self.bm.is_cow_protected(
+                        r.blocks[min(nb, r.n_blocks - 1)]):
                     reserved = self.bm.allocate(1)[0]
                     keep = set(dest) | {reserved}
                     release = [blk for blk in r.blocks if blk not in keep]
@@ -731,6 +835,8 @@ class Scheduler:
             self.version += 1
         for c in outs.compress:
             r = c.request
+            span = r.seq_len                 # tokens this launch condenses
+            first = not r.compressed
             shared_released = [blk for blk in c.release
                                if self.bm.ref[blk] > 1]
             self.bm.release(c.release)
@@ -740,6 +846,22 @@ class Scheduler:
             r.seq_len = k
             r.compressed = True
             r.n_shared = 0
+            if self.bm.prefix_cache_policy == "radix":
+                # the kernel overwrites dest/reserved in place: any cache
+                # registration naming them would serve condensed KV under a
+                # raw-KV hash — drop it, subtree and all (flat keeps the
+                # legacy behavior for parity with the frozen engine)
+                self.bm.invalidate_blocks(r.blocks)
+                if (self.p.cache_compressed_prefixes and first
+                        and span <= r.prefill_target
+                        and 0 < span // self.p.block_size <= len(r.chain)):
+                    # prompt-pure first compression (no decoded token in
+                    # the span, so the condensed payload and the selection
+                    # that produced it depend only on the prompt): cache it
+                    # as a segment keyed by the span-ending chain hash
+                    self.bm.register_segment(
+                        r.chain[span // self.p.block_size - 1],
+                        list(c.dest), span)
             if self.p.async_compression:
                 r.state = State.COMPRESSING     # sits out this decode step
 
@@ -875,6 +997,7 @@ class Scheduler:
                 continue
             r.finish_reason = reason
             r.truncate_stop()
+            self._register_finished_prefix(r)
             self._release_slots(r)
             r.state = State.FINISHED
             r.t_finish = time.monotonic()
@@ -884,6 +1007,33 @@ class Scheduler:
         outs.n_blocked = sum(1 for r in self.running
                              if r.state == State.BLOCKED)
         return outs.finished
+
+    def _register_finished_prefix(self, r: Request) -> None:
+        """Radix multi-turn reuse (docs/CACHING.md): before a finished
+        request's blocks return to the pool, register its *generated*
+        tokens' full blocks under the extended hash chain. The next turn of
+        the conversation — prompt + this output + a new user message —
+        then longest-prefix matches straight through the generation instead
+        of stopping at the old prompt boundary. Only raw (uncompressed,
+        gap-free) KV is registerable; compressed requests contribute via
+        ``cache_compressed_prefixes`` segments instead."""
+        if (self.bm.prefix_cache_policy != "radix" or not self.p.prefix_ok
+                or r.compressed or r.pos_gap or not r.blocks
+                or self.p.ring_blocks or self.p.attention_free):
+            return
+        b = self.p.block_size
+        stream = r.full_prompt
+        # seq_len counts KV entries actually written; truncate_stop may
+        # have trimmed the stream below it, and the final sampled token's
+        # KV was never written — min() keeps hashes honest
+        n_full = min(min(r.seq_len, len(stream)) // b, r.n_blocks)
+        if n_full <= 0:
+            return
+        h, chain = 0, []
+        for i in range(n_full):
+            h = self.bm.chain_hash(h, tuple(stream[i * b:(i + 1) * b]))
+            chain.append(h)
+        self.bm.register_prefix(r.blocks, chain, 0)
 
     def observe_latency(self, dt: float) -> None:
         """Straggler-aware admission: back off when step latency inflates."""
@@ -922,4 +1072,6 @@ class Scheduler:
                             if outs.token_budget else None),
             "free_blocks": self.bm.num_free,
             "admission_scale": self.admission_scale,
+            # prefix-cache telemetry (cumulative; docs/CACHING.md)
+            **self.bm.cache_stats(),
         }

@@ -442,13 +442,18 @@ def build_swap_in_step(cfg: ArchConfig, spec: ServeSpec):
 
 def build_prefill_step(cfg: ArchConfig, spec: ServeSpec):
     """prefill_step(params, state, tokens, slot_ids, lengths, start_pos,
-    [frame_embeds]) -> (last_logits, new_state).
+    [frame_embeds], [prefix_embeds], [rope_start]) -> (last_logits,
+    new_state).
 
     tokens: (P, S) padded prompts (suffix after any shared prefix);
     slot_ids: (P,) destination slots (-1 = padding row); lengths: (P,) valid
-    suffix length; start_pos: (P,) tokens already cached (prefix-cache hits).
-    The caller must have installed block tables / seq_lens for these slots
-    BEFORE calling (seq_lens[slot] = start_pos + length).
+    suffix length; start_pos: (P,) KV entries already cached (prefix-cache
+    hits) — the cache-write index of each row's first token; rope_start:
+    (P,) the *rotary position* of that token, defaulting to start_pos. The
+    two differ only after a compressed-prefix adoption (docs/CACHING.md),
+    where the cached payload condensed more tokens than the entries it
+    occupies. The caller must have installed block tables / seq_lens for
+    these slots BEFORE calling (seq_lens[slot] = start_pos + length).
     """
     lay = stage_layout(cfg)
     plan = lay["plan"]
@@ -630,7 +635,7 @@ def build_prefill_step(cfg: ArchConfig, spec: ServeSpec):
         return ML.causal_conv1d(p, xw)
 
     def step(params, state, tokens, slot_ids, lengths, start_pos,
-             frame_embeds=None, prefix_embeds=None):
+             frame_embeds=None, prefix_embeds=None, rope_start=None):
         dt = jnp.dtype(spec.dtype)
         P, S = tokens.shape
         x = params["embed"].astype(dt)[tokens]
@@ -641,7 +646,14 @@ def build_prefill_step(cfg: ArchConfig, spec: ServeSpec):
             x = jnp.concatenate([prefix_embeds.astype(dt), x], axis=1)
             S = S + npfx
             lengths = lengths + npfx
-        positions = start_pos[:, None] + jnp.arange(S)[None]
+        # rope_start decouples the absolute token position from the
+        # cache-write index (start_pos): after compressed-prefix adoption
+        # the KV cache holds fewer entries than the prompt has tokens
+        # (Request.pos_gap), so rotary positions run ahead of cache slots.
+        # Default (None) keeps the historical coupled behavior.
+        if rope_start is None:
+            rope_start = start_pos
+        positions = rope_start[:, None] + jnp.arange(S)[None]
         valid = jnp.arange(S)[None] < lengths[:, None]
         memory = None
         if cfg.is_enc_dec:

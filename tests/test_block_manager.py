@@ -78,6 +78,164 @@ def test_property_never_leaks_blocks(ops):
 
 
 # ----------------------------------------------------------------------
+# radix prefix cache (docs/CACHING.md)
+
+
+def rbm(n_blocks=16, block_size=4, **kw):
+    return BlockManager(n_blocks, block_size,
+                        prefix_cache_policy="radix", **kw)
+
+
+@pytest.mark.parametrize("policy", ["flat", "radix"])
+def test_release_cleans_hash_when_cache_disabled(policy):
+    """Regression: freeing a registered block after enable_prefix_cache
+    was toggled off at runtime (snapshot/restore) used to leave a stale
+    hash entry pointing at a raw-free block."""
+    bm = BlockManager(8, 4, prefix_cache_policy=policy)
+    toks = list(range(8))
+    _, _, chain = bm.lookup_prefix(toks)
+    alloc = bm.allocate(2)
+    bm.register_prefix(alloc, chain, 0)
+    bm.enable_prefix_cache = False
+    bm.release(alloc)
+    assert not bm.block_hash and not bm.hash_to_block
+    assert not bm.cached_free and len(bm.free) == 8
+    bm.check_invariants()
+
+
+def test_flat_radix_exact_match_parity():
+    """Both policies give byte-identical results through the legacy
+    exact-match lookup on shared-prefix prompts."""
+    results = {}
+    for policy in ("flat", "radix"):
+        bm = BlockManager(16, 4, prefix_cache_policy=policy)
+        _, _, chain = bm.lookup_prefix(list(range(12)))
+        alloc = bm.allocate(3)
+        bm.register_prefix(alloc, chain, 0)
+        blocks, matched, _ = bm.lookup_prefix(
+            list(range(8)) + [99, 98, 97, 96])
+        results[policy] = (len(blocks), matched,
+                           [alloc.index(b) for b in blocks])
+        bm.release(blocks)
+        bm.release(alloc)
+        bm.check_invariants()
+    assert results["flat"] == results["radix"] == (2, 8, [0, 1])
+
+
+def test_radix_full_hit_capped_one_block():
+    """A match covering the whole prompt is capped one block short so the
+    final prefill chunk still carries a real token (bit-identical hit vs
+    miss streams); the legacy lookup stays uncapped."""
+    bm = rbm()
+    toks = list(range(8))
+    m0 = bm.lookup_prefix_ex(toks)
+    assert m0.n_tokens == 0 and m0.blocks == []
+    alloc = bm.allocate(2)
+    bm.register_prefix(alloc, m0.chain, 0)
+    m = bm.lookup_prefix_ex(toks)
+    assert m.n_tokens == 4 and m.blocks == alloc[:1] and not m.compressed
+    bm.release(m.blocks)
+    blocks, matched, _ = bm.lookup_prefix(toks)     # legacy: uncapped
+    assert matched == 8
+    bm.release(blocks)
+    bm.release(alloc)
+    bm.check_invariants()
+
+
+def test_radix_evicts_leaves_before_shared_prefix():
+    """LRU eviction under the radix policy is leaf-first: the cold end of
+    a cached chain goes before the shared root, even though the root was
+    released (and so parked) earliest."""
+    bm = rbm(n_blocks=6, block_size=2)
+    m = bm.lookup_prefix_ex([1, 2, 3, 4, 5, 6])
+    alloc = bm.allocate(3)
+    bm.register_prefix(alloc, m.chain, 0)
+    bm.release(alloc)                    # root parked first => flat would
+    other = bm.allocate(4)               # evict it; radix must take leaf
+    assert alloc[2] not in bm.block_hash, "leaf should be evicted"
+    assert alloc[0] in bm.block_hash and alloc[1] in bm.block_hash
+    assert bm.probe_prefix([1, 2, 3, 4, 5, 6]) == 4
+    bm.release(other)
+    bm.check_invariants()
+
+
+def test_invalidate_blocks_drops_subtree():
+    bm = rbm(n_blocks=8, block_size=4)
+    m = bm.lookup_prefix_ex(list(range(12)))
+    alloc = bm.allocate(3)
+    bm.register_prefix(alloc, m.chain, 0)
+    bm.release(alloc)
+    bm.invalidate_blocks([alloc[1]])     # mid-chain: child goes too
+    assert alloc[0] in bm.block_hash
+    assert alloc[1] not in bm.block_hash and alloc[2] not in bm.block_hash
+    # orphans left cached_free for the raw free list
+    assert alloc[1] in bm.free and alloc[2] in bm.free
+    assert bm.n_invalidated_blocks == 2
+    bm.check_invariants()
+
+
+def test_segment_register_hit_and_eviction():
+    """Compressed cached prefix: 12 tokens of history served from 8 KV
+    entries; the hit reports the token/entry gap, and allocation pressure
+    evicts the payload all-or-none."""
+    bm = rbm(n_blocks=8, block_size=4)
+    chain = bm._block_chain(list(range(16)))
+    payload = bm.allocate(2)
+    bm.register_segment(chain[2], payload, 12)
+    bm.release(payload)
+    prompt2 = list(range(12)) + [7, 7, 7, 7, 9]
+    m = bm.lookup_prefix_ex(prompt2, allow_compressed=True)
+    assert m.compressed and m.n_tokens == 12 and m.n_entries == 8
+    assert m.blocks == payload
+    assert all(bm.ref[b] == 1 for b in payload)
+    assert bm.cache_stats()["prefix_segment_hits"] == 1
+    assert bm.cache_stats()["cached_tokens_per_block"] == 6.0
+    bm.release(m.blocks)
+    # without the flag the segment is invisible
+    m2 = bm.lookup_prefix_ex(prompt2, allow_compressed=False)
+    assert not m2.compressed and m2.n_tokens == 0
+    bm.check_invariants()
+    bm.allocate(8)                       # pressure: whole segment evicted
+    assert not bm.segments and not bm.seg_of_block
+    bm.check_invariants()
+
+
+def test_probe_prefix_has_no_side_effects():
+    bm = rbm()
+    toks = list(range(12))
+    m = bm.lookup_prefix_ex(toks + [50])
+    alloc = bm.allocate(3)
+    bm.register_prefix(alloc, m.chain, 0)
+    bm.release(alloc)
+    before = (bm.cache_stats(), list(bm.cached_free), list(bm.ref))
+    assert bm.probe_prefix(toks + [50]) == 12
+    assert bm.probe_prefix(toks) == 11   # full-prompt probe capped len-1
+    assert (bm.cache_stats(), list(bm.cached_free), list(bm.ref)) == before
+    bm.check_invariants()
+
+
+def test_watermark_caps_parked_cached_blocks():
+    bm = rbm(n_blocks=8, block_size=4, prefix_cache_watermark=0.25)
+    m = bm.lookup_prefix_ex(list(range(16)) + [77])
+    alloc = bm.allocate(4)
+    bm.register_prefix(alloc, m.chain, 0)
+    bm.release(alloc)
+    assert len(bm.cached_free) <= 2      # int(0.25 * 8)
+    assert bm.n_evicted_blocks >= 2
+    bm.check_invariants()
+
+
+def test_cow_protection_marks_radix_registered_blocks():
+    bm = rbm(n_blocks=8, block_size=4)
+    flat = BlockManager(8, 4)            # flat policy: ref>1 only
+    for b in (bm, flat):
+        m_or_t = b.lookup_prefix(list(range(8)))
+        alloc = b.allocate(2)
+        b.register_prefix(alloc, m_or_t[2], 0)
+        assert b.is_cow_protected(alloc[0]) == (b is bm)
+
+
+# ----------------------------------------------------------------------
 def test_memory_planner_matches_paper_lp():
     cfg = get_config("llama3-8b")
     GB = 1024**3

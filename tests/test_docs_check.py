@@ -1,0 +1,49 @@
+"""tools/docs_check.py link-gate tests: the real repo's docs resolve,
+the docs/*.md glob auto-enrolls new pages (so docs/CACHING.md is gated
+without touching the tool), and a broken link actually fails."""
+import importlib.util
+import sys
+from pathlib import Path
+
+import pytest
+
+_TOOL = Path(__file__).resolve().parent.parent / "tools" / "docs_check.py"
+_spec = importlib.util.spec_from_file_location("docs_check", _TOOL)
+dc = importlib.util.module_from_spec(_spec)
+sys.modules["docs_check"] = dc
+_spec.loader.exec_module(dc)
+
+
+def test_repo_links_resolve():
+    # the same gate CI runs via `make docs-check`
+    assert dc.check_links() == []
+
+
+def test_docs_glob_auto_enrolls_new_pages():
+    names = {p.name for p in dc.DOC_FILES}
+    assert {"README.md", "ROADMAP.md", "CACHING.md",
+            "SCHEDULER.md"} <= names
+
+
+def test_broken_link_is_caught(monkeypatch, tmp_path):
+    bad = tmp_path / "BAD.md"
+    bad.write_text("see [missing](no/such/page.md) "
+                   "and [ok](OK.md#some-anchor)\n")
+    (tmp_path / "OK.md").write_text("fine\n")
+    monkeypatch.setattr(dc, "REPO", tmp_path)
+    monkeypatch.setattr(dc, "DOC_FILES", [bad])
+    errors = dc.check_links()
+    assert len(errors) == 1
+    assert "no/such/page.md" in errors[0] and "BAD.md:1" in errors[0]
+
+
+def test_external_urls_and_anchors_skipped(monkeypatch, tmp_path):
+    md = tmp_path / "DOC.md"
+    md.write_text("[ci](https://example.com/x) [top](#anchor)\n")
+    monkeypatch.setattr(dc, "REPO", tmp_path)
+    monkeypatch.setattr(dc, "DOC_FILES", [md])
+    assert dc.check_links() == []
+
+
+if __name__ == "__main__":
+    pytest.main([__file__, "-q"])

@@ -1,0 +1,307 @@
+"""Radix prefix-cache tests above the block-manager layer
+(docs/CACHING.md): cache-aware admission ordering, margin refinement,
+multi-turn reuse through the engine, hit-vs-miss stream identity, flat-vs-
+radix engine parity, and compressed-segment adoption end to end.
+"""
+import dataclasses
+
+import jax
+import jax.numpy as jnp
+import pytest
+
+from repro.api.config import build_engine_options, route_overrides
+from repro.configs import get_config
+from repro.core.block_manager import BlockManager
+from repro.core.compression import CompressOptions
+from repro.core.engine import EngineOptions, ZipageEngine
+from repro.core.invariants import audit_engine
+from repro.core.request import Request
+from repro.core.scheduler import (POLICIES, Scheduler, SchedulerParams,
+                                  make_policy)
+from repro.models import lm
+
+CFG = dataclasses.replace(get_config("tiny-lm"), dtype="float32")
+PARAMS = lm.init(CFG, jax.random.key(0))
+
+
+def ref_generate(prompt, n_new):
+    toks = list(prompt)
+    for _ in range(n_new):
+        logits = lm.forward(CFG, PARAMS, jnp.asarray([toks]))
+        toks.append(int(jnp.argmax(logits[0, -1])))
+    return toks[len(prompt):]
+
+
+def make_engine(**kw):
+    base = dict(block_size=4, n_total_blocks=64, max_batch=4, m_qslots=4,
+                n_max=3, window=2, max_model_len=256, prefill_rows=2,
+                prefill_len=64, prefix_caching=True,
+                compress=CompressOptions(window=2), temperature=0.0)
+    base.update(kw)
+    return ZipageEngine(CFG, PARAMS, EngineOptions(**base))
+
+
+def run_to_finish(eng, rid, cap=500):
+    while rid not in eng.finished:
+        eng.step()
+        assert eng.step_count < cap
+    return eng.finished[rid]
+
+
+# ----------------------------------------------------------------------
+# pure-host: cache-aware admission
+
+
+def host_sched(**kw):
+    base = dict(block_size=4, max_batch=4, m_qslots=4, n_max=3, window=2,
+                prefill_rows=4, compression_enabled=True, budget_blocks=2,
+                prefix_ok=True, policy="cache_aware")
+    n_blocks = kw.pop("n_blocks", 16)
+    base.update(kw)
+    bm = BlockManager(n_blocks, base["block_size"],
+                      prefix_cache_policy="radix")
+    return Scheduler(SchedulerParams(**base), bm)
+
+
+def waiting_request(rid, prompt, n_out=8, arrival=None):
+    return Request(rid=rid, prompt=list(prompt), max_new_tokens=n_out,
+                   arrival=float(rid if arrival is None else arrival))
+
+
+def warm_cache(bm, tokens):
+    """Register ``tokens``' full blocks and park them unreferenced."""
+    chain = bm._block_chain(tokens)
+    blocks = bm.allocate(len(chain))
+    bm.register_prefix(blocks, chain, 0)
+    bm.release(blocks)
+    return blocks
+
+
+def test_cache_aware_admits_hits_first():
+    s = host_sched()
+    warm_cache(s.bm, list(range(1, 9)))
+    s.add_request(waiting_request(0, range(50, 58)))          # miss, earlier
+    s.add_request(waiting_request(1, list(range(1, 9)) + [9]))  # 8-token hit
+    plan = s.schedule()
+    assert [r.rid for r in plan.admitted] == [1, 0]
+    assert plan.admitted[0].n_cached == 8
+    s.bm.check_invariants()
+
+
+def test_cache_aware_unbound_degrades_to_fcfs():
+    pol = make_policy("cache_aware")
+    reqs = [waiting_request(0, range(8)), waiting_request(1, range(8))]
+    assert [r.rid for r in pol.admission_order(reqs)] == [0, 1]
+
+
+def test_make_policy_returns_fresh_instances():
+    a, b = make_policy("cache_aware"), make_policy("cache_aware")
+    assert a is not b and a is not POLICIES["cache_aware"]
+
+
+def test_compressed_segments_require_radix():
+    with pytest.raises(ValueError):
+        Scheduler(SchedulerParams(cache_compressed_prefixes=True),
+                  BlockManager(16, 4, prefix_cache_policy="flat"))
+
+
+def test_margin_shrinks_by_matched_blocks():
+    """Cache-aware refinement of the compression-aware admission margin:
+    matched blocks are KV the pool already holds, so the reserve shrinks
+    by the hit size — the same request that a cold cache rejects is
+    admitted warm."""
+    prompt = list(range(1, 9))                  # 2 blocks
+
+    def sched_with_running(n_blocks):
+        s = host_sched(policy="fcfs", admission_margin=1.0,
+                       n_blocks=n_blocks, max_prefill_chunk=None)
+        from repro.core.request import State
+        r = Request(rid=99, prompt=list(range(90, 98)), max_new_tokens=20,
+                    arrival=0.0)
+        r.blocks = s.bm.allocate(2)
+        r.slot = s.free_slots.pop()
+        r.state = State.RUNNING
+        r.seq_len = r.position = 8
+        r.n_prefilled = r.prefill_target = 8
+        s.running.append(r)
+        return s
+
+    # pool of 5: the running request holds 2, leaving 3. The candidate
+    # needs 3 blocks plus a margin of 1 (the running request's projected
+    # post-compression growth) — cold that is 4 > 3; warm, 2 matched
+    # blocks cover 2 of the 3 and zero out the margin
+    cold = sched_with_running(n_blocks=5)
+    cold.add_request(waiting_request(0, prompt + [9], n_out=8))
+    warm = sched_with_running(n_blocks=5)
+    warm_cache(warm.bm, prompt)
+    warm.add_request(waiting_request(0, prompt + [9], n_out=8))
+    plan_cold = cold.schedule()
+    plan_warm = warm.schedule()
+    assert len(plan_warm.admitted) == 1, \
+        "matched blocks should offset the admission margin"
+    assert len(plan_cold.admitted) == 0, \
+        "cold cache must hold the same margin back"
+
+
+def test_compression_escapes_cow_deadlock():
+    """A whole batch can be compression-ready at once with every block
+    radix-registered: COW then demands fresh dest blocks, but the pool is
+    exhausted and ready peers shield each other from preemption — the
+    pre-fix planner blocked every request forever. The planner must
+    sacrifice sole-referenced cache registrations and condense in place
+    instead of deadlocking."""
+    from repro.core.request import State
+
+    s = host_sched(policy="fcfs", n_blocks=6)
+    reqs = []
+    for rid in range(2):
+        prompt = list(range(rid * 100 + 1, rid * 100 + 13))   # 3 blocks
+        r = Request(rid=rid, prompt=prompt, max_new_tokens=8,
+                    arrival=float(rid))
+        r.blocks = s.bm.allocate(3)
+        r.chain = s.bm._block_chain(prompt)
+        s.bm.register_prefix(r.blocks, r.chain, 0)
+        r.slot = s.free_slots.pop()
+        r.qslot = s.free_qslots.pop()
+        r.state = State.RUNNING
+        r.seq_len = r.position = 12
+        r.n_prefilled = r.prefill_target = 12
+        r.win_count = s.p.window
+        s.running.append(r)
+        reqs.append(r)
+    assert s.bm.num_free == 0
+    plan = s.schedule()
+    s.plan_compression(plan)
+    assert len(plan.compress) == 2, \
+        "COW fresh-block demand must not deadlock an exhausted pool"
+    assert all(r.state is not State.BLOCKED for r in reqs)
+    s.commit_compression(plan)
+    s.bm.check_invariants()
+
+
+# ----------------------------------------------------------------------
+# engine-level
+
+
+def test_multi_turn_reuse_beyond_prompt():
+    """Register-at-finish: a finished request's prompt *and* generated
+    tokens become reusable, so the next turn of a conversation (prior
+    stream + new user tokens) hits past the original prompt boundary."""
+    eng = make_engine(n_max=6)                  # 24-token cap: no compress
+    prompt = list(range(1, 11))                 # 10 tokens
+    r1 = eng.submit(prompt, 6)
+    req1 = run_to_finish(eng, r1)
+    stream = prompt + req1.output               # 16 tokens
+    r2 = eng.submit(stream + [77, 78], 6)
+    req2 = run_to_finish(eng, r2)
+    # seq 15 entries cached at finish => 3 full blocks = 12 tokens, past
+    # the 10-token prompt
+    assert req2.n_cached == 12 > len(prompt)
+    assert req2.output == ref_generate(stream + [77, 78], 6)
+    stats = eng.metrics[-1]
+    assert stats["prefix_hits"] >= 1 and stats["prefix_hit_tokens"] >= 12
+    assert audit_engine(eng) == []
+
+
+def test_hit_and_miss_streams_bit_identical():
+    """A full-prompt cache hit is capped one block short, so the sampled
+    continuation is bit-identical to the cold run of the same prompt."""
+    eng = make_engine(n_max=6)
+    p = list(range(2, 10))                      # 8 tokens, 2 full blocks
+    r1 = eng.submit(p, 8)
+    cold = run_to_finish(eng, r1).output
+    r2 = eng.submit(p, 8)
+    req2 = run_to_finish(eng, r2)
+    assert req2.n_cached == 4, "full-prompt hit must leave one real chunk"
+    assert req2.output == cold == ref_generate(p, 8)
+    assert audit_engine(eng) == []
+
+
+@pytest.mark.parametrize("n_max", [6, 3])
+def test_radix_and_flat_streams_identical(n_max):
+    """Engine-level parity on a shared-prefix workload. With compression
+    never triggering (n_max=6) flat, radix and the full-KV reference all
+    agree. With compression on (n_max=3) the streams are lossy, so the
+    bar is hit-vs-miss identity: the radix cache-hit run must match a
+    no-cache run of the same requests under the same compression config
+    (flat is excluded there: its in-place compression leaves stale cache
+    entries — the bug the radix policy fixes)."""
+    shared = list(range(1, 13))                 # 3 full blocks of 4
+    outs = {}
+    policies = ("flat", "radix") if n_max == 6 else ("radix",)
+    for pol in policies:
+        eng = make_engine(n_max=n_max, m_qslots=4, prefix_cache_policy=pol)
+        r1 = eng.submit(shared + [30], 10)
+        run_to_finish(eng, r1)
+        rids = [eng.submit(shared + [40 + i], 10) for i in range(2)]
+        eng.run(max_steps=400)
+        outs[pol] = [eng.finished[r].output for r in rids]
+        assert all(eng.finished[r].n_cached >= 12 for r in rids)
+        assert audit_engine(eng) == []
+    if n_max == 6:
+        ref = [ref_generate(shared + [40 + i], 10) for i in range(2)]
+        assert outs["radix"] == ref and outs["flat"] == ref
+    else:
+        miss = make_engine(n_max=n_max, m_qslots=4, prefix_caching=False)
+        r1 = miss.submit(shared + [30], 10)
+        run_to_finish(miss, r1)
+        rids = [miss.submit(shared + [40 + i], 10) for i in range(2)]
+        miss.run(max_steps=400)
+        assert outs["radix"] == [miss.finished[r].output for r in rids]
+
+
+def test_cached_prefix_survives_compression():
+    """The radix policy COW-protects registered blocks: compressing the
+    request that registered them moves its KV to fresh blocks and parks
+    the raw originals in the cache instead of condensing them in place."""
+    eng = make_engine(n_max=3, m_qslots=4)
+    shared = list(range(1, 13))
+    r1 = eng.submit(shared + [30], 25)
+    run_to_finish(eng, r1)
+    assert eng.finished[r1].n_compressions > 0
+    r2 = eng.submit(shared + [40], 8)
+    req2 = run_to_finish(eng, r2)
+    assert req2.n_cached >= 12
+    assert audit_engine(eng) == []
+    # the hit must be invisible in the tokens: same stream as a no-cache
+    # run of the same request under the same compression config
+    miss = make_engine(n_max=3, m_qslots=4, prefix_caching=False)
+    rm = miss.submit(shared + [40], 8)
+    assert req2.output == run_to_finish(miss, rm).output
+
+
+def test_compressed_segment_adoption_end_to_end():
+    """cache_compressed_prefixes: a prompt-pure compression registers its
+    condensed payload as a segment; once the raw-KV chain is gone (here:
+    explicitly invalidated, in production: evicted first since it costs
+    more blocks), the next same-prompt request adopts the segment —
+    16 tokens of history for 8 KV entries — and decodes to completion."""
+    eng = make_engine(n_max=3, m_qslots=4, cache_compressed_prefixes=True)
+    prefix = list(range(1, 17))                 # exactly 4 full blocks
+    r1 = eng.submit(prefix, 10)
+    run_to_finish(eng, r1)
+    assert eng.bm.segments, "prompt-pure compression should cache a segment"
+    eng.bm.invalidate_blocks(list(eng.bm.block_hash))
+    eng.bm.check_invariants()
+    r2 = eng.submit(prefix + [60, 61, 62], 8)
+    req2 = run_to_finish(eng, r2)
+    k = eng.scheduler.p.budget_blocks * eng.opts.block_size
+    assert req2.pos_gap == 16 - k
+    assert req2.compressed and req2.n_cached == 16
+    assert len(req2.output) == 8
+    stats = eng.metrics[-1]
+    assert stats["prefix_segment_hits"] >= 1
+    assert stats["cached_tokens_per_block"] > eng.opts.block_size
+    assert audit_engine(eng) == []
+    eng.bm.check_invariants()
+
+
+def test_api_routes_cache_knobs():
+    cache, sched, runner = route_overrides(
+        prefix_cache_policy="flat", prefix_cache_watermark=0.5,
+        cache_compressed_prefixes=False, policy="cache_aware")
+    opts = build_engine_options(cache, sched, runner)
+    assert opts.prefix_cache_policy == "flat"
+    assert opts.prefix_cache_watermark == 0.5
+    assert opts.cache_compressed_prefixes is False
+    assert opts.policy == "cache_aware"

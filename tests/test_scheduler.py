@@ -219,7 +219,7 @@ def test_policy_admission_order():
     assert [r.rid for r in fcfs.admission_order(reqs)] == [0, 1, 2]
     assert [r.rid for r in prio.admission_order(reqs)] == [1, 2, 0]
     assert [r.rid for r in srpt.admission_order(reqs)] == [1, 0, 2]
-    assert set(POLICIES) == {"fcfs", "priority", "srpt"}
+    assert set(POLICIES) == {"fcfs", "priority", "srpt", "cache_aware"}
 
 
 def test_token_budget_plans_partial_prefill():
@@ -388,7 +388,11 @@ def test_fcfs_parity_with_legacy_engine():
               n_max=3, window=4, scheduling="hybrid", prefix_caching=True,
               async_compression=True, max_model_len=256, prefill_rows=2,
               prefill_len=32, compress=CompressOptions(window=4),
-              temperature=0.0)
+              temperature=0.0,
+              # the frozen engine predates the radix cache and always
+              # builds a flat-policy BlockManager; pin the new engine to
+              # flat so the comparison is byte-for-byte legacy semantics
+              prefix_cache_policy="flat")
     reqs = _mixed_workload(np.random.default_rng(7))
     old = LegacyZipageEngine(CFG, PARAMS, EngineOptions(**kw))
     new = ZipageEngine(CFG, PARAMS, EngineOptions(**kw))

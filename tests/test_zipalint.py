@@ -272,6 +272,30 @@ def test_zpl004_quiet_when_documented_consumed_and_routed():
                     rule="ZPL004") == []
 
 
+def test_zpl004_any_docs_page_counts_as_documentation():
+    # the corpus is the union of all doc pages, so a knob documented only
+    # in a subsystem page (e.g. docs/CACHING.md) is covered without
+    # repeating it in API.md
+    src = (_conf_src()
+           + "def build_engine_options(c):\n"
+           + "    return dict(block_size=c.block_size)\n")
+    mods = {_CONF: src,
+            "src/repro/core/engine.py": "def f(c):\n    return c.block_size\n"}
+    assert findings(mods, docs={"CACHING.md": "knobs: `block_size`"},
+                    rule="ZPL004") == []
+
+
+def test_zpl004_corpus_auto_enrolls_new_docs_pages():
+    # load_context globs docs/*.md — a new page joins the ZPL004 corpus
+    # with no tool change; the cache knobs added with docs/CACHING.md
+    # are documented by exactly that enrollment
+    ctx = zl.load_context(zl.REPO)
+    assert "CACHING.md" in ctx.docs
+    for field in ("prefix_cache_policy", "prefix_cache_watermark",
+                  "cache_compressed_prefixes"):
+        assert f"`{field}`" in ctx.docs["CACHING.md"]
+
+
 # ----------------------------------------------------------------------
 # ZPL005 engine sync discipline
 

@@ -3,7 +3,7 @@
 table and gate on decode-throughput regressions (``make bench-trend``).
 
 CI uploads ``bench-concurrency-smoke.json`` (schema
-``zipage-bench-concurrency/v1|v2``) and ``bench-kernels-smoke.json``
+``zipage-bench-concurrency/v1..v4``) and ``bench-kernels-smoke.json``
 (``zipage-bench-kernels/v1``) for every PR (ROADMAP "Multi-backend bench
 trajectory"). Feed this tool those artifacts **in chronological order**
 (oldest first — e.g. a ``bench-history/`` directory of downloaded
@@ -29,7 +29,8 @@ from pathlib import Path
 
 CONCURRENCY_SCHEMAS = ("zipage-bench-concurrency/v1",
                        "zipage-bench-concurrency/v2",
-                       "zipage-bench-concurrency/v3")
+                       "zipage-bench-concurrency/v3",
+                       "zipage-bench-concurrency/v4")
 KERNELS_SCHEMAS = ("zipage-bench-kernels/v1",)
 
 #: (result name, human label) series the regression gate watches; a
@@ -90,6 +91,42 @@ def concurrency_table(points):
             f"| {fmt(z.get('mean_decode_horizon'))} "
             f"| {fmt(sw.get('tps'))} "
             f"| {fmt(d.get('oversub_speedup_step_swap_vs_recompute'))} |")
+    return lines
+
+
+def prefix_table(points):
+    """v4 ``--prefix-heavy`` rows: radix+cache-aware vs flat+FCFS on the
+    multi-turn prefix-sharing workload (docs/CACHING.md). Only emitted
+    when at least one point carries the rows."""
+    pts = [pt for pt in points
+           if _result(pt["data"], "prefix_radix_cache_aware")]
+    if not pts:
+        return []
+    lines = [
+        "## Prefix-cache trajectory (bench_concurrency --prefix-heavy)",
+        "",
+        "| point | radix tok/s | flat tok/s | speedup | step speedup "
+        "| warm ttft ratio | radix hit rate | flat hit rate | evictions "
+        "| seg hits | cached tok/blk |",
+        "|---|---|---|---|---|---|---|---|---|---|---|",
+    ]
+    for pt in pts:
+        d = pt["data"]
+        radix = _result(d, "prefix_radix_cache_aware")
+        flat = _result(d, "prefix_flat_fcfs")
+        comp = _result(d, "prefix_radix_compressed")
+        fmt = lambda v: "-" if v is None else f"{v}"  # noqa: E731
+        lines.append(
+            f"| {pt['label']} | {fmt(radix.get('tps'))} "
+            f"| {fmt(flat.get('tps'))} "
+            f"| {fmt(d.get('prefix_speedup_tps_radix_vs_flat'))} "
+            f"| {fmt(d.get('prefix_speedup_step_radix_vs_flat'))} "
+            f"| {fmt(d.get('prefix_warm_ttft_ratio_radix_vs_flat'))} "
+            f"| {fmt(radix.get('prefix_hit_rate'))} "
+            f"| {fmt(flat.get('prefix_hit_rate'))} "
+            f"| {fmt(radix.get('prefix_evictions'))} "
+            f"| {fmt(comp.get('prefix_segment_hits'))} "
+            f"| {fmt(comp.get('cached_tokens_per_block'))} |")
     return lines
 
 
@@ -156,6 +193,9 @@ def main(argv=None):
     lines = ["# Bench trajectory", ""]
     if concurrency:
         lines += concurrency_table(concurrency) + [""]
+        pfx = prefix_table(concurrency)
+        if pfx:
+            lines += pfx + [""]
     if kernels:
         lines += kernels_table(kernels) + [""]
     ok, gate_msg = check_regression(concurrency, args.max_regression)
