@@ -1,8 +1,9 @@
 PYTHON ?= python
 export PYTHONPATH := src$(if $(PYTHONPATH),:$(PYTHONPATH))
 
-.PHONY: test test-fast test-sanitize lint zipalint docs-check quickstart \
-	bench bench-kernels bench-concurrency bench-trend install-dev
+.PHONY: test test-fast test-sanitize test-soak lint zipalint docs-check \
+	quickstart bench bench-kernels bench-concurrency bench-quality \
+	bench-trend eval-smoke install-dev
 
 # tier-1 verify (ROADMAP.md). Local default is fail-fast; CI overrides
 # PYTEST_ARGS (e.g. --junitxml=...) and drops -x so junit reports are
@@ -35,6 +36,13 @@ docs-check:
 test-fast:
 	$(PYTHON) -m pytest -q tests/test_api.py tests/test_engine.py tests/test_scheduler.py tests/test_block_manager.py
 
+# randomized engine soak: seeded fuzz workloads across the scheduler
+# policy x preemption-mode x fused-horizon matrix with ZIPAGE_SANITIZE=1
+# armed (the tests arm it themselves), plus the prefix-cache property
+# tests (hypothesis when installed, seeded soak otherwise)
+test-soak:
+	$(PYTHON) -m pytest -q $(PYTEST_ARGS) tests/test_soak.py tests/test_prefix_cache_prop.py
+
 quickstart:
 	$(PYTHON) examples/quickstart.py
 
@@ -57,9 +65,20 @@ bench-concurrency:
 # oversubscribed points exist) vs the previous point. CI seeds
 # bench-history/ from the last successful main run's artifact; locally,
 # drop downloaded per-PR artifacts there to grow the trajectory.
-BENCH_TREND_FILES ?= $(sort $(wildcard bench-history/*.json)) bench-concurrency-smoke.json bench-kernels-smoke.json
+BENCH_TREND_FILES ?= $(sort $(wildcard bench-history/*.json)) bench-concurrency-smoke.json bench-kernels-smoke.json $(wildcard eval-smoke.json) $(wildcard bench-quality-smoke.json)
 bench-trend:
 	$(PYTHON) tools/bench_trend.py $(BENCH_TREND_FILES) --out BENCH_TREND.md
+
+# scoring-ablation quality proxy (top-1 agreement vs full-KV) — CI
+# uploads the JSON next to the eval report (docs/EVAL.md)
+bench-quality:
+	$(PYTHON) -m benchmarks.bench_quality_proxy --smoke --out bench-quality-smoke.json
+
+# seeded reasoning eval across compression budgets (docs/EVAL.md): tiny-lm
+# trained on the task distribution, accuracy scored vs Full-KV, emitted as
+# the byte-deterministic zipage-eval/v1 JSON CI gates via bench-trend
+eval-smoke:
+	$(PYTHON) -m repro.eval --smoke --out eval-smoke.json
 
 install-dev:
 	pip install -r requirements-dev.txt

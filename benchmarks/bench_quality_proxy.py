@@ -1,6 +1,29 @@
 """Paper Tab. 2 / App. C.8: scoring-function ablations via the quality proxy
 (top-1 agreement with full-KV greedy decode on the same trained tiny model;
-DESIGN.md §7 explains why pass@1 is not reproducible offline)."""
+DESIGN.md §7 explains why pass@1 is not reproducible offline).
+
+Usable two ways:
+
+  * ``python -m benchmarks.run bench_quality_proxy`` — legacy CSV rows via
+    ``run()`` (name,us_per_step,derived);
+  * ``python -m benchmarks.bench_quality_proxy [--smoke] [--out FILE.json]``
+    — JSON for the per-PR quality trajectory (CI's bench-smoke artifact),
+    same envelope as ``bench_kernels.py``:
+
+      {"schema": "zipage-bench-quality/v1", "jax": ..., "platform": ...,
+       "smoke": bool, "results": [{"name", "top1_agreement",
+       "compressions", "steps", "tokens", "us_per_step"}, ...]}
+
+    ``top1_agreement`` is scored over the *reference* (full-KV) stream
+    length — a variant that stops early is penalised for the tokens it
+    never produced, not scored on its shared prefix. ``tools/bench_trend.py``
+    accumulates these JSONs across PRs into the quality table next to the
+    ``zipage-eval/v1`` accuracy numbers (docs/EVAL.md).
+"""
+import argparse
+import json
+import sys
+
 import numpy as np
 
 from benchmarks.common import params_trained, run_engine, workload
@@ -23,24 +46,74 @@ VARIANTS = {
 
 
 def agreement(a, b):
-    n = min(len(a), len(b))
-    return float(np.mean([a[i] == b[i] for i in range(n)])) if n else 0.0
+    """Top-1 agreement of stream ``a`` against reference ``b``, scored
+    over the reference length: positions ``a`` never produced count as
+    disagreement. (The old ``min(len(a), len(b))`` truncation silently
+    inflated agreement whenever a compressed variant finished early.)"""
+    if not len(b):
+        return 1.0
+    hits = sum(1 for i in range(len(b)) if i < len(a) and a[i] == b[i])
+    return hits / len(b)
 
 
-def run():
-    rows = []
+def _measure(n_requests):
+    """[(name, top1_agreement, engine result)] for every variant."""
     rng = np.random.default_rng(4)
     params = params_trained()
-    reqs = workload("amc", 10, rng)
+    reqs = workload("amc", n_requests, rng)
     full = run_engine(reqs, params=params, n_max=None)
     ref = {r: full["done"][r].token_ids for r in full["rids"]}
+    rows = []
     for name, opts in VARIANTS.items():
         r = run_engine(reqs, params=params, n_max=3, window=4,
                        compress=opts)
         agr = float(np.mean([agreement(r["done"][a].token_ids, ref[b])
                              for a, b in zip(r["rids"], full["rids"])]))
-        rows.append((f"quality/{name}",
-                     1e6 * r["wall_s"] / max(r["steps"], 1),
-                     f"top1_agreement={agr:.3f};"
-                     f"compressions={r['compressions']}"))
+        rows.append((name, agr, r))
     return rows
+
+
+def run():
+    return [(f"quality/{name}",
+             1e6 * r["wall_s"] / max(r["steps"], 1),
+             f"top1_agreement={agr:.3f};compressions={r['compressions']}")
+            for name, agr, r in _measure(10)]
+
+
+def main(argv=None):
+    import jax
+
+    ap = argparse.ArgumentParser(description=__doc__.splitlines()[0])
+    ap.add_argument("--smoke", action="store_true",
+                    help="small request count (CI bench-smoke)")
+    ap.add_argument("--out", default=None, metavar="FILE.json",
+                    help="write the JSON report here (default: stdout)")
+    args = ap.parse_args(argv)
+
+    report = {
+        "schema": "zipage-bench-quality/v1",
+        "jax": jax.__version__,
+        "platform": jax.default_backend(),
+        "smoke": args.smoke,
+        "results": [
+            {"name": name,
+             "top1_agreement": round(agr, 4),
+             "compressions": r["compressions"],
+             "steps": r["steps"],
+             "tokens": sum(len(o.token_ids) for o in r["done"].values()),
+             "us_per_step": round(1e6 * r["wall_s"]
+                                  / max(r["steps"], 1), 1)}
+            for name, agr, r in _measure(6 if args.smoke else 10)],
+    }
+    text = json.dumps(report, indent=2)
+    if args.out:
+        with open(args.out, "w") as f:
+            f.write(text + "\n")
+        print(f"wrote {args.out}", file=sys.stderr)
+    else:
+        print(text)
+    return 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())

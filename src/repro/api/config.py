@@ -94,6 +94,21 @@ class SchedulerConfig:
     # projected *post-compression* block growth that must stay free when
     # admitting. 0.0 => the paper's greedy admit-then-preempt behavior.
     admission_margin: float = 0.0
+    # quality-aware compression planning (docs/EVAL.md): feed the
+    # per-request scoring telemetry back into the planner — candidates
+    # compress lowest-redundancy-first, default-policy requests defer
+    # compression by `compression_deferral` blocks past n_max while at
+    # least `quality_defer_min_free` pool blocks stay free, and requests
+    # whose normalized window-attention entropy is
+    # >= `quality_entropy_threshold` are shielded from preemption while
+    # an unshielded victim exists. False => the planner is bit-identical
+    # to the pre-quality scheduler (per-request
+    # SamplingParams.compression_policy "protect"/"aggressive" still
+    # apply).
+    quality_aware: bool = False
+    compression_deferral: int = 2
+    quality_defer_min_free: int = 16
+    quality_entropy_threshold: float = 0.85
 
 
 #: kernel backends accepted by ``ModelRunnerConfig.kernel_backend``:
@@ -194,6 +209,10 @@ def build_engine_options(cache: CacheConfig, scheduler: SchedulerConfig,
         token_budget=scheduler.token_budget,
         max_prefill_chunk=scheduler.max_prefill_chunk,
         admission_margin=scheduler.admission_margin,
+        quality_aware=scheduler.quality_aware,
+        compression_deferral=scheduler.compression_deferral,
+        quality_defer_min_free=scheduler.quality_defer_min_free,
+        quality_entropy_threshold=scheduler.quality_entropy_threshold,
         compress=compress,
         max_model_len=cache.max_model_len,
         prefill_rows=runner.prefill_rows,

@@ -208,6 +208,8 @@ class Zipage:
             "token_budget", "budget_util", "free_blocks",
             "admission_scale", "t_host", "t_device",
             "decode_horizon",
+            "quality_aware", "n_comp_default", "n_comp_protect",
+            "n_comp_aggressive", "n_comp_deferred",
             "prefix_cache_policy", "prefix_lookups", "prefix_hits",
             "prefix_hit_tokens", "prefix_segment_hits",
             "prefix_evictions", "prefix_cached_blocks",

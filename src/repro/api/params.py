@@ -2,7 +2,11 @@
 
 ``SamplingParams`` lives next to the device sampler in
 ``repro.core.sampling`` (the engine consumes it directly); the public
-import path is this module / ``repro.api``.
+import path is this module / ``repro.api``. Besides sampling and
+termination, it carries the request's ``compression_policy``
+(``"default" | "protect" | "aggressive"`` — docs/EVAL.md), the
+per-request intent the scheduler's quality-aware compression planner
+consumes.
 """
 from repro.core.sampling import SamplingParams  # noqa: F401
 

@@ -39,9 +39,11 @@ class CompressOptions:
 
 def _score_one(cfg, opts, q_win, entries, fscore, valid, seq_len, hist_len,
                block_size, precomputed=None):
-    """Scores for one request, one layer. Returns (final_scores, new_F);
-    both (T, h_s) with h_s = h_kv (GQA) or 1 (MLA). ``precomputed`` carries
-    (s_attn, red_raw) from the batched Pallas kernels when backend=pallas."""
+    """Scores for one request, one layer. Returns (final_scores, new_F,
+    stats); scores/F are (T, h_s) with h_s = h_kv (GQA) or 1 (MLA), stats
+    is the (2,) ``scoring.quality_stats`` telemetry vector. ``precomputed``
+    carries (s_attn, red_raw) from the batched Pallas kernels when
+    backend=pallas."""
     is_mla = cfg.attn_type == "mla"
     if precomputed is not None:
         s, red_raw = precomputed
@@ -54,14 +56,7 @@ def _score_one(cfg, opts, q_win, entries, fscore, valid, seq_len, hist_len,
     else:
         s = scoring.attention_scores(q_win, entries, valid, seq_len)
         red_entries = entries
-    if opts.use_global and opts.alpha > 0:
-        s = scoring.global_score_update(s, fscore, hist_len, opts.alpha)
-    new_f = s
-    if opts.pooling == "always":
-        s = scoring.max_pool_scores(s, valid, kernel=opts.pool_kernel)
-    elif opts.pooling == "first":
-        pooled = scoring.max_pool_scores(s, valid, kernel=opts.pool_kernel)
-        s = jnp.where(hist_len == 0, pooled, s)
+    attn_raw = s
     if opts.redundancy != "none":
         if precomputed is not None:
             raw = red_raw
@@ -74,10 +69,20 @@ def _score_one(cfg, opts, q_win, entries, fscore, valid, seq_len, hist_len,
                                           p_thresh=opts.p_thresh)
         red = scoring.redundancy_softmax(raw, valid, tau=opts.tau)
     else:
+        raw = jnp.zeros_like(s)
         red = jnp.zeros_like(s)
+    stats = scoring.quality_stats(attn_raw, raw, valid, seq_len)
+    if opts.use_global and opts.alpha > 0:
+        s = scoring.global_score_update(s, fscore, hist_len, opts.alpha)
+    new_f = s
+    if opts.pooling == "always":
+        s = scoring.max_pool_scores(s, valid, kernel=opts.pool_kernel)
+    elif opts.pooling == "first":
+        pooled = scoring.max_pool_scores(s, valid, kernel=opts.pool_kernel)
+        s = jnp.where(hist_len == 0, pooled, s)
     final = scoring.combine_scores(s, red, valid, opts.window, seq_len,
                                    lam=opts.lam)
-    return final, new_f
+    return final, new_f, stats
 
 
 def _compact_pool(pool, src_bt, src_cache, dest_slots):
@@ -95,7 +100,8 @@ def _compact_pool(pool, src_bt, src_cache, dest_slots):
 
 def build_compress_fn(cfg, *, block_size, max_blocks, budget_blocks,
                       opts: CompressOptions):
-    """Returns compress(pools, qwin, req) -> (new_pools, new_seq_lens).
+    """Returns compress(pools, qwin, req) -> (new_pools, new_seq_lens,
+    stats).
 
     pools: {"k","v","f"} with (L, N, b, h, d) ×2 + (L, N, b, h)  (GQA), or
            {"kv","f"} with (L, N, b, r+dr) + (L, N, b, 1)        (MLA).
@@ -154,9 +160,9 @@ def build_compress_fn(cfg, *, block_size, max_blocks, budget_blocks,
             entries = gather_entries(key_pool, bt[None])[0]
             fscore = gather_entries(pool_slices["f"], bt[None])[0]
             valid = jnp.arange(T) < seq_len
-            final, new_f = _score_one(cfg, opts, q_win, entries, fscore,
-                                      valid, seq_len, hist_len, b,
-                                      precomputed=pre)
+            final, new_f, stats = _score_one(cfg, opts, q_win, entries,
+                                             fscore, valid, seq_len,
+                                             hist_len, b, precomputed=pre)
             tag = scoring.topk_tag(final, k_keep)         # (T, h_s)
             # stable keep-first sort == survivors in original cache order
             order_keep = jnp.argsort(~tag.T, axis=-1, stable=True)
@@ -165,14 +171,14 @@ def build_compress_fn(cfg, *, block_size, max_blocks, budget_blocks,
             dest_flat = (jnp.repeat(dslots, b) * b
                          + jnp.tile(jnp.arange(b), budget_blocks))
             dest_flat = jnp.where(qslot >= 0, dest_flat, 2**30)
-            return src_cache, dest_flat, new_f
+            return src_cache, dest_flat, new_f, stats
 
         if use_pallas:
-            src_cache, dest_flat, new_f = jax.vmap(per_req)(
+            src_cache, dest_flat, new_f, stats = jax.vmap(per_req)(
                 src_bt, dest_bt, qslots, seq_lens, hist_lens,
                 (pre_s, pre_r))
         else:
-            src_cache, dest_flat, new_f = jax.vmap(per_req)(
+            src_cache, dest_flat, new_f, stats = jax.vmap(per_req)(
                 src_bt, dest_bt, qslots, seq_lens, hist_lens)
 
         # Apply moves sequentially (scan) — vmapping full-pool functional
@@ -202,18 +208,22 @@ def build_compress_fn(cfg, *, block_size, max_blocks, budget_blocks,
 
         pools_out, _ = jax.lax.scan(
             apply_one, pool_slices, (src_bt, src_cache, dest_flat, new_f))
-        return pools_out
+        return pools_out, stats
 
     def compress(pools, qwin, req):
+        """-> (new_pools, new_seq_lens, stats) where stats is (n, 2)
+        per-request quality telemetry (``scoring.quality_stats``, averaged
+        across layers; garbage on padding rows)."""
         qslots, seq_lens = req[2], req[3]
 
         def scan_body(_, xs):
             pool_slices, qwin_l = xs
             return None, one_layer(pool_slices, qwin_l, req)
 
-        _, new_pools = jax.lax.scan(scan_body, None, (pools, qwin))
+        _, (new_pools, stats_l) = jax.lax.scan(scan_body, None,
+                                               (pools, qwin))
         new_seq = jnp.where(qslots >= 0, jnp.int32(k_keep),
                             seq_lens.astype(jnp.int32))
-        return new_pools, new_seq
+        return new_pools, new_seq, stats_l.mean(axis=0)
 
     return compress

@@ -152,6 +152,15 @@ class EngineOptions:
     token_budget: Optional[int] = None   # prefill+decode tokens per step
     max_prefill_chunk: Optional[int] = None  # per-request chunk cap per step
     admission_margin: float = 0.0    # fraction of projected growth reserved
+    # quality-aware compression planning (docs/EVAL.md; SchedulerConfig on
+    # the facade): order candidates lowest-redundancy-first, defer
+    # default-policy compressions while the pool has headroom, and shield
+    # high-attention-entropy requests from preemption. Off by default —
+    # the planner is then bit-identical to the pre-quality scheduler.
+    quality_aware: bool = False
+    compression_deferral: int = 2
+    quality_defer_min_free: int = 16
+    quality_entropy_threshold: float = 0.85
     # decode hot-path knobs (docs/PERF.md; ModelRunnerConfig on the facade):
     # fuse_sampling runs the per-slot sampler inside the jitted decode step
     # (no (B, V) logits materialisation, tokens stay on device);
@@ -250,6 +259,10 @@ class ZipageEngine:
                 token_budget=opts.token_budget,
                 max_prefill_chunk=opts.max_prefill_chunk,
                 admission_margin=opts.admission_margin,
+                quality_aware=opts.quality_aware,
+                compression_deferral=opts.compression_deferral,
+                quality_defer_min_free=opts.quality_defer_min_free,
+                quality_entropy_threshold=opts.quality_entropy_threshold,
                 # compressed-prefix caching needs segments to register
                 # (compression on) and hits to be adoptable (prefix on);
                 # outside that it is silently inert, not an error
@@ -297,6 +310,11 @@ class ZipageEngine:
         self._rid = 0
         self._rng = np.random.default_rng(opts.seed)
         self._sampler = _sampler_jit()
+        # quality telemetry in flight: (rids, device stats) from the last
+        # compression launch, fetched lazily at the START of the next step
+        # — by then the step's token fetch has already synced the device,
+        # so the read is free and async compression keeps its overlap
+        self._pending_quality = None
         self.metrics: List[dict] = []
         self.step_count = 0
         self.swap_pool: Optional[Dict[str, np.ndarray]] = None
@@ -562,8 +580,10 @@ class ZipageEngine:
         pools = self.state["pools"]
         req = (jnp.asarray(src_bt), jnp.asarray(dest_bt), jnp.asarray(qslots),
                jnp.asarray(seq_lens), jnp.asarray(hist))
-        new_pools, _ = self._compress_fn(n)(pools, self.state["qwin"], req)
+        new_pools, _, qstats = self._compress_fn(n)(pools,
+                                                    self.state["qwin"], req)
         self.state["pools"] = new_pools
+        self._pending_quality = ([c.request.rid for c in planned], qstats)
         self.scheduler.commit_compression(outs)
         if self.opts.measure_phases or not self.opts.async_compression:
             self._block_ready(self.state["pools"])
@@ -963,12 +983,36 @@ class ZipageEngine:
                     break
 
     # ------------------------------------------------------------------
+    def _drain_quality_stats(self):
+        """Write the previous step's compression quality telemetry back
+        onto the still-live requests (Request.redundancy /
+        Request.attn_entropy — the scheduler's quality-aware planning
+        signal, docs/EVAL.md). Runs at step start: the previous step's
+        token fetch already synced the device, so this host read costs
+        nothing and never blocks an in-flight async compression."""
+        pq = self._pending_quality
+        if pq is None:
+            return
+        self._pending_quality = None
+        rids, dev = pq
+        stats = np.asarray(self._fetch(dev))
+        live = {r.rid: r for r in self.scheduler.running}
+        for sw in self.scheduler.swapped:
+            live[sw.rid] = sw
+        for i, rid in enumerate(rids):
+            r = live.get(rid)
+            if r is None:
+                continue
+            r.redundancy = float(stats[i, 0])
+            r.attn_entropy = float(stats[i, 1])
+
     def step(self):
         """One serving step: ask the scheduler for a plan, execute it.
         All admission/preemption/compression-planning decisions are the
         scheduler's (repro.core.scheduler); this loop only sequences the
         device work."""
         t0 = time.monotonic()
+        self._drain_quality_stats()
         self._t_blocked = 0.0
         self._step_decoded = 0
         self._last_horizon = 0
@@ -1054,6 +1098,8 @@ class ZipageEngine:
                 "n_swapped_out": self.scheduler.n_swapped_out,
                 "n_swapped_in": self.scheduler.n_swapped_in,
                 "swap_bytes": self.scheduler.swap_bytes,
+                "n_comp_by_policy": self.scheduler.n_comp_by_policy,
+                "n_comp_deferred": self.scheduler.n_comp_deferred,
             }),
             "requests": copy.deepcopy({
                 "waiting": list(self.scheduler.waiting),
@@ -1083,6 +1129,13 @@ class ZipageEngine:
         sched.n_swapped_out = h.get("n_swapped_out", 0)
         sched.n_swapped_in = h.get("n_swapped_in", 0)
         sched.swap_bytes = h.get("swap_bytes", 0)
+        sched.n_comp_by_policy = dict(h.get(
+            "n_comp_by_policy",
+            {"default": 0, "protect": 0, "aggressive": 0}))
+        sched.n_comp_deferred = h.get("n_comp_deferred", 0)
+        # in-flight quality telemetry references pre-snapshot device
+        # buffers; the requests it describes were deep-copied anyway
+        self._pending_quality = None
         self._rid, self.step_count = h["rid"], h["step"]
         r = copy.deepcopy(snap["requests"])
         sched.waiting = deque(r["waiting"])

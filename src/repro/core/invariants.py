@@ -319,7 +319,13 @@ def _request_counters(engine, out: List[str]) -> None:
                 f"{r.n_blocks} block(s) x {b} capacity — decode is "
                 "writing past the block table")
         if r.compressed:
-            cap = (p.n_max or 0) + max(1, math.ceil(p.window / b))
+            # the quality-aware planner legitimately lets a request run
+            # past n_max before compressing (compression_deferral /
+            # "protect" policy — docs/EVAL.md), so audit against the
+            # scheduler's worst-case per-request cap, not the global n_max
+            n_cap = (sched._n_max_cap(r, worst_case=True)
+                     if p.n_max is not None else 0)
+            cap = n_cap + max(1, math.ceil(p.window / b))
             if r.pos_gap:
                 # segment adoption (docs/CACHING.md) marks the request
                 # compressed at admission, but its block table tracks
@@ -330,8 +336,8 @@ def _request_counters(engine, out: List[str]) -> None:
             if r.n_blocks > cap:
                 out.append(
                     f"rid {r.rid}: compressed but holds {r.n_blocks} "
-                    f"blocks > n_max={p.n_max} + in-flight allowance "
-                    f"{cap - (p.n_max or 0)} — compression failed to "
+                    f"blocks > per-request cap {n_cap} + in-flight "
+                    f"allowance {cap - n_cap} — compression failed to "
                     "release its sources (paper block cap violated)")
         else:
             cap = -(-(r.seq_len + max(1, p.decode_steps)) // b)

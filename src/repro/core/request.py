@@ -70,6 +70,15 @@ class Request:
     n_compressions: int = 0            # compression events undergone
     comp_blocks_freed: int = 0         # blocks released by those events
 
+    # quality telemetry from the last compression launch (written back by
+    # the engine one step later, once the stats fetch is free): mean raw
+    # redundancy over retained entries and normalized window-attention
+    # entropy in [0, 1]. None until the request first compresses. The
+    # scheduler's quality-aware planner (docs/EVAL.md) orders candidates
+    # and shields eviction victims with these.
+    redundancy: Optional[float] = None
+    attn_entropy: Optional[float] = None
+
     # metrics
     t_first_token: Optional[float] = None
     t_finish: Optional[float] = None

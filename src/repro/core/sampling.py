@@ -33,6 +33,12 @@ class SamplingParams:
     output); ``None`` disables eos detection entirely — there is no ``-1``
     sentinel in this API. ``seed`` drives the per-request PRNG stream;
     ``logprobs`` requests the sampled token's logprob at each position.
+
+    ``compression_policy`` states the request's KV-compression intent
+    (docs/EVAL.md): ``"default"`` follows the engine-wide budget,
+    ``"protect"`` defers compression and shields the request from
+    preemption while memory allows, ``"aggressive"`` compresses at the
+    earliest opportunity and volunteers first for preemption.
     """
     temperature: float = 0.0
     top_k: int = 0
@@ -42,10 +48,16 @@ class SamplingParams:
     eos_ids: Optional[Tuple[int, ...]] = None
     seed: int = 0
     logprobs: bool = False
+    compression_policy: str = "default"
 
     def __post_init__(self):
         if self.max_new_tokens < 1:
             raise ValueError("max_new_tokens must be >= 1")
+        if self.compression_policy not in ("default", "protect",
+                                           "aggressive"):
+            raise ValueError(
+                "compression_policy must be one of "
+                "'default' | 'protect' | 'aggressive'")
         if not (0.0 < self.top_p <= 1.0):
             raise ValueError("top_p must be in (0, 1]")
         # normalize stop/eos to hashable tuples (lists are convenient at

@@ -93,6 +93,21 @@ class SchedulerParams:
     # multi-step decode ceiling (docs/PERF.md): max fused decode+sample
     # iterations per engine step; quiescent_horizon() trims it per request
     decode_steps: int = 1
+    # --- quality-aware compression (docs/EVAL.md) ---
+    # feed the per-request scoring telemetry (Request.redundancy /
+    # Request.attn_entropy, written back by the engine after each
+    # compression launch) back into planning: candidates compress
+    # lowest-redundancy-first, "default"-policy requests defer compression
+    # by `compression_deferral` blocks past n_max while the pool keeps
+    # `quality_defer_min_free` blocks free, and requests whose window
+    # attention entropy is >= `quality_entropy_threshold` are shielded
+    # from preemption while an unshielded victim exists. Off by default:
+    # the planner is then byte-identical to the pre-quality scheduler.
+    quality_aware: bool = False
+    compression_deferral: int = 2    # extra blocks past n_max before a
+    #                                  deferring request must compress
+    quality_defer_min_free: int = 16  # free-pool floor for deferral
+    quality_entropy_threshold: float = 0.85  # normalized entropy in [0,1]
     # --- model/engine-derived flags ---
     compression_enabled: bool = True
     budget_blocks: int = 3           # n_max - 1 (compression destination)
@@ -276,6 +291,10 @@ class Scheduler:
             raise ValueError("admission_margin must be >= 0")
         if params.decode_steps < 1:
             raise ValueError("decode_steps must be >= 1")
+        if params.compression_deferral < 0:
+            raise ValueError("compression_deferral must be >= 0")
+        if params.quality_defer_min_free < 0:
+            raise ValueError("quality_defer_min_free must be >= 0")
         if params.preemption_mode not in ("recompute", "swap", "auto"):
             raise ValueError(
                 f"unknown preemption_mode {params.preemption_mode!r}; "
@@ -321,6 +340,13 @@ class Scheduler:
         self.n_swapped_out = 0
         self.n_swapped_in = 0
         self.swap_bytes = 0
+        # cumulative quality telemetry (stats(); docs/EVAL.md): compression
+        # events by SamplingParams.compression_policy, plus (request, step)
+        # instances where the quality planner deferred a base-rule-due
+        # compression
+        self.n_comp_by_policy = {"default": 0, "protect": 0,
+                                 "aggressive": 0}
+        self.n_comp_deferred = 0
         self.free_slots = list(range(params.max_batch - 1, -1, -1))
         self.free_qslots = list(range(params.m_qslots - 1, -1, -1))
         # straggler-aware admission: EWMA of step latency vs baseline
@@ -371,12 +397,17 @@ class Scheduler:
             return self.p.ring_blocks
         return -(-n_tokens // self.p.block_size)
 
-    def _projected_blocks(self, n_tokens: int) -> int:
+    def _projected_blocks(self, n_tokens: int,
+                          r: Optional[Request] = None) -> int:
         """Steady-state footprint of ``n_tokens``: with compression on, the
-        block cap bounds it — the paper's lever for admission (§4.3)."""
+        block cap bounds it — the paper's lever for admission (§4.3). With
+        a request in hand the cap is its *effective* one (``_n_max_cap``),
+        so a deferring ``protect`` request projects the extra blocks it
+        will actually hold."""
         raw = self._needed_blocks(n_tokens)
         if self.p.compression_enabled and self.p.n_max is not None:
-            return min(raw, self.p.n_max)
+            cap = self.p.n_max if r is None else self._n_max_cap(r)
+            return min(raw, cap)
         return raw
 
     def projected_growth(self) -> int:
@@ -388,7 +419,8 @@ class Scheduler:
         for r in self.running:
             final_len = len(r.prompt) + len(r.output) \
                 + max(0, r.max_new_tokens - len(r.output))
-            total += max(0, self._projected_blocks(final_len) - r.n_blocks)
+            total += max(0,
+                         self._projected_blocks(final_len, r) - r.n_blocks)
         return total
 
     def _release_slots(self, r: Request) -> None:
@@ -402,6 +434,66 @@ class Scheduler:
         if r.qslot >= 0:
             self.free_qslots.append(r.qslot)
         r.slot = r.qslot = -1
+
+    # ------------------------------------------------------------------
+    # quality-aware compression planning (docs/EVAL.md)
+
+    @staticmethod
+    def _comp_policy(r: Request) -> str:
+        """The request's ``SamplingParams.compression_policy``."""
+        return r.sampling.compression_policy
+
+    def _n_max_cap(self, r: Request, worst_case: bool = False) -> int:
+        """Effective block cap at which ``r``'s compression comes due.
+
+        ``aggressive`` compresses at the paper's base cap ``n_max``;
+        ``protect`` always defers by ``2 * compression_deferral`` extra
+        blocks (per-request intent needs no global knob); ``default``
+        defers by ``compression_deferral`` only when the planner is
+        ``quality_aware`` *and* the pool has headroom
+        (``quality_defer_min_free`` free blocks) — so the default path is
+        bit-identical to the base rule unless opted in. Callers guarantee
+        ``compression_enabled`` (n_max is not None).
+
+        ``worst_case`` ignores the instantaneous pool headroom and
+        returns the static envelope — what the sanitizer audits against,
+        since a request deferred while the pool had headroom legitimately
+        holds its extra blocks for a step or two after the pool fills."""
+        n_max = self.p.n_max
+        pol = self._comp_policy(r)
+        if pol == "aggressive":
+            return n_max
+        if pol == "protect":
+            return n_max + 2 * self.p.compression_deferral
+        if self.p.quality_aware \
+                and (worst_case
+                     or self.bm.num_free >= self.p.quality_defer_min_free):
+            return n_max + self.p.compression_deferral
+        return n_max
+
+    def _compression_due(self, r: Request) -> bool:
+        """The single compression-trigger predicate shared by
+        ``plan_compression`` (ready filter) and ``schedule_decode`` (the
+        "compression will handle it" block gate) — keeping the two phases
+        consistent by construction."""
+        return (self.p.compression_enabled and r.qslot >= 0
+                and r.seq_len == r.n_blocks * self.p.block_size
+                and r.win_count >= self.p.window
+                and r.n_blocks >= self._n_max_cap(r))
+
+    def _victim_shielded(self, r: Request) -> bool:
+        """Whether eviction should pass over ``r`` while an unshielded
+        victim exists: explicit per-request intent (``protect``), or —
+        under the quality-aware planner — measured high attention entropy
+        (eviction of spread-attention requests is what degrades reasoning
+        traces; docs/EVAL.md). ``aggressive`` requests volunteered, so
+        telemetry never shields them."""
+        pol = self._comp_policy(r)
+        if pol == "protect":
+            return True
+        return (self.p.quality_aware and pol != "aggressive"
+                and r.attn_entropy is not None
+                and r.attn_entropy >= self.p.quality_entropy_threshold)
 
     def _preempt_mode(self, r: Request) -> str:
         """Resolve what preemption does to this victim (docs/SCHEDULER.md).
@@ -483,12 +575,35 @@ class Scheduler:
 
     def _find_victim(self, requester: Request,
                      exclude: frozenset = frozenset()) -> Optional[Request]:
+        """§4.3/§4.4 victim tiers, in two passes: the first skips quality-
+        shielded requests (``_victim_shielded``), the second admits them —
+        shielding redirects pressure, it never deadlocks it. With no
+        shielded or ``aggressive`` request present both passes reduce to
+        the pre-quality search exactly."""
+        victim = self._find_victim_pass(requester, exclude, shielded=True)
+        if victim is None:
+            victim = self._find_victim_pass(requester, exclude,
+                                            shielded=False)
+        return victim
+
+    def _find_victim_pass(self, requester: Request, exclude: frozenset,
+                          shielded: bool) -> Optional[Request]:
         """§4.3/§4.4 victim tiers — slotless first under hybrid scheduling,
         then uncompressed under prefix caching — ordered within each tier
-        by the preemption policy. ``exclude`` holds requests that must not
+        by the preemption policy (``aggressive``-policy volunteers
+        stable-partitioned first). ``exclude`` holds requests that must not
         be preempted (e.g. peers already planned into this step's
-        compression set, whose block lists a launch still references)."""
+        compression set, whose block lists a launch still references);
+        ``shielded=True`` additionally passes over quality-shielded
+        requests."""
         order = self.preempt_policy.victim_order(self.running)
+        if any(self._comp_policy(r) == "aggressive" for r in order):
+            order = ([r for r in order
+                      if self._comp_policy(r) == "aggressive"]
+                     + [r for r in order
+                        if self._comp_policy(r) != "aggressive"])
+        if shielded:
+            order = [r for r in order if not self._victim_shielded(r)]
         if self.p.scheduling == "hybrid":
             for r in order:
                 if r is requester or r.rid in exclude \
@@ -754,13 +869,29 @@ class Scheduler:
         if not self.p.compression_enabled:
             return
         b = self.p.block_size
-        ready = [r for r in self.running
-                 if r.state in (State.RUNNING, State.BLOCKED)
-                 and not r.prefill_pending
-                 and r.qslot >= 0
-                 and r.n_blocks >= self.p.n_max
-                 and r.seq_len == r.n_blocks * b
-                 and r.win_count >= self.p.window]
+        eligible = [r for r in self.running
+                    if r.state in (State.RUNNING, State.BLOCKED)
+                    and not r.prefill_pending
+                    and r.qslot >= 0
+                    and r.seq_len == r.n_blocks * b
+                    and r.win_count >= self.p.window]
+        ready = [r for r in eligible if self._compression_due(r)]
+        # quality telemetry: base-rule-due candidates the effective cap
+        # (_n_max_cap) let keep their full KV another step
+        self.n_comp_deferred += sum(
+            1 for r in eligible
+            if r.n_blocks >= self.p.n_max and not self._compression_due(r))
+        if self.p.quality_aware and len(ready) > 1:
+            # lowest-redundancy-first within each policy class (ROADMAP
+            # item 5 / docs/EVAL.md): aggressive volunteers lead, protect
+            # trails; un-measured requests (no telemetry yet) keep their
+            # running-order position at the back of their class
+            rank = {"aggressive": 0, "default": 1, "protect": 2}
+            ready = [r for _i, r in sorted(
+                enumerate(ready),
+                key=lambda ir: (rank[self._comp_policy(ir[1])],
+                                ir[1].redundancy is None,
+                                ir[1].redundancy or 0.0, ir[0]))]
         nb = self.p.budget_blocks
         # compression-ready peers are off-limits for preemption here: an
         # earlier launch in this set still references their block lists,
@@ -842,6 +973,7 @@ class Scheduler:
             self.bm.release(c.release)
             r.n_compressions += 1
             r.comp_blocks_freed += len(c.release) - len(shared_released)
+            self.n_comp_by_policy[self._comp_policy(r)] += 1
             r.blocks = list(c.dest) + [c.reserved]
             r.seq_len = k
             r.compressed = True
@@ -899,9 +1031,7 @@ class Scheduler:
                 r.state = State.BLOCKED
                 continue
             if r.seq_len == r.n_blocks * b:      # last block full
-                if (self.p.compression_enabled and r.qslot >= 0
-                        and r.n_blocks >= self.p.n_max
-                        and r.win_count >= self.p.window):
+                if self._compression_due(r):
                     # compression will handle it (was detected this step or
                     # will be next step); skip decode if it somehow races
                     r.state = State.BLOCKED
@@ -1072,6 +1202,14 @@ class Scheduler:
                             if outs.token_budget else None),
             "free_blocks": self.bm.num_free,
             "admission_scale": self.admission_scale,
+            # quality-aware compression telemetry (cumulative;
+            # docs/EVAL.md): events by SamplingParams.compression_policy
+            # plus quality-planner deferrals
+            "quality_aware": self.p.quality_aware,
+            "n_comp_default": self.n_comp_by_policy["default"],
+            "n_comp_protect": self.n_comp_by_policy["protect"],
+            "n_comp_aggressive": self.n_comp_by_policy["aggressive"],
+            "n_comp_deferred": self.n_comp_deferred,
             # prefix-cache telemetry (cumulative; docs/CACHING.md)
             **self.bm.cache_stats(),
         }

@@ -160,6 +160,30 @@ def combine_scores(attn_s, red_dist, valid, win_len, seq_len, *, lam):
     return jnp.where(valid[:, None], s, -jnp.inf)
 
 
+def quality_stats(attn_s, red_raw, valid, seq_len):
+    """Per-request quality telemetry for the scheduler (docs/EVAL.md).
+
+    attn_s: (T, h) raw window-attention distribution (pre global-update /
+    pooling); red_raw: (T, h) raw redundancy row-sums (zeros when
+    redundancy scoring is off). Returns (2,) float32:
+    ``[mean raw redundancy over valid entries, normalized attention
+    entropy in [0, 1]]``. High entropy = attention spread over the whole
+    sequence (eviction is risky); high redundancy = many near-duplicate
+    entries (compression is cheap).
+    """
+    v = valid[:, None]
+    n_valid = jnp.maximum(valid.sum(), 1)
+    red_mean = jnp.where(v, red_raw, 0.0).sum() / (
+        n_valid * red_raw.shape[1])
+    p = jnp.where(v, attn_s, 0.0)
+    p = p / jnp.maximum(p.sum(axis=0, keepdims=True), 1e-12)
+    ent = -jnp.where(v & (p > 0), p * jnp.log(jnp.maximum(p, 1e-12)),
+                     0.0).sum(axis=0)                       # (h,)
+    ent_norm = ent.mean() / jnp.log(jnp.maximum(seq_len, 2).astype(
+        jnp.float32))
+    return jnp.stack([red_mean, ent_norm]).astype(jnp.float32)
+
+
 def topk_tag(scores, k):
     """Boolean keep-tag per head: top-k along the sequence dim. (T, h)->(T, h)."""
     T, h = scores.shape

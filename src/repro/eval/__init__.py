@@ -1,0 +1,18 @@
+"""``repro.eval`` — seeded reasoning eval harness (docs/EVAL.md).
+
+An LM-eval-harness-style generation-task runner over deterministic
+synthetic reasoning traces (associative recall, running-sum arithmetic
+chains, copy chains — every example has a checkable final answer), small
+enough to train and serve tiny-lm on a CPU CI worker. It reports
+accuracy-vs-throughput across compression budgets (``n_max`` × window,
+against the Full-KV baseline) and emits a ``zipage-eval/v1`` JSON that
+``tools/bench_trend.py`` gates across PRs — turning the paper's "~95% of
+Full-KV quality" claim into a tracked number.
+
+Run it:
+
+    python -m repro.eval --smoke --out eval-smoke.json
+"""
+from repro.eval.tasks import TASK_KINDS, make_example, train_batch  # noqa
+from repro.eval.runner import (  # noqa: F401
+    EVAL_SCHEMA, run_eval, token_agreement, trained_params)

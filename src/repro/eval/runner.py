@@ -1,0 +1,202 @@
+"""Eval runner: train tiny-lm on the task distribution, serve the eval
+set across compression budgets, score against Full-KV (docs/EVAL.md).
+
+Every number in the emitted ``zipage-eval/v1`` report is deterministic —
+seeded data, greedy decoding, and *step-count-based* throughput proxies
+(tokens/step, compressions, block utilization) instead of wall-clock —
+so two runs of ``python -m repro.eval --smoke`` produce byte-identical
+JSON and ``tools/bench_trend.py`` can gate accuracy across PRs.
+"""
+from __future__ import annotations
+
+import dataclasses
+import json
+from typing import List, Optional, Sequence, Tuple
+
+import numpy as np
+
+from repro.configs import get_config
+from repro.eval import tasks
+
+EVAL_SCHEMA = "zipage-eval/v1"
+
+CFG = dataclasses.replace(get_config("tiny-lm"), dtype="float32")
+
+#: (row name, n_max, window, quality_aware). Full-KV must stay first —
+#: it is the reference the other rows are scored against. The ``_qa`` row
+#: runs the same budget with the quality-aware planner on, demonstrating
+#: the telemetry feedback loop on the same traces.
+BUDGETS_SMOKE: Tuple = (
+    ("full_kv", None, 4, False),
+    ("n2_w4", 2, 4, False),
+    ("n3_w4", 3, 4, False),
+    ("n4_w4", 4, 4, False),
+    ("n3_w4_qa", 3, 4, True),
+)
+BUDGETS_FULL: Tuple = BUDGETS_SMOKE + (
+    ("n3_w8", 3, 8, False),
+    ("n4_w8", 4, 8, False),
+)
+
+#: serving config shared by every row (only n_max / window / the quality
+#: knobs vary): pool sized so the Full-KV baseline never preempts, prefix
+#: caching off so rows share nothing, float32 + greedy for determinism
+ENGINE_KW = dict(
+    block_size=8, n_total_blocks=192, max_batch=16, m_qslots=16,
+    scheduling="hybrid", prefix_caching=False, async_compression=True,
+    max_model_len=256, prefill_rows=4, prefill_len=64,
+    fuse_sampling=True, decode_steps=4, dtype="float32")
+
+TRAIN_SEQ_LEN = 80
+TRAIN_BATCH = 16
+
+_train_cache = {}
+
+
+def trained_params(train_steps: int = 300, seed: int = 0):
+    """tiny-lm briefly trained on the eval task distribution (disjoint
+    seed namespace from the eval set — ``tasks.train_batch``), cached
+    process-wide per (steps, seed)."""
+    import jax
+    import jax.numpy as jnp
+    from repro.models import lm
+    from repro.training import optimizer as opt
+    from repro.training.train_loop import build_train_step
+
+    key = (train_steps, seed)
+    if key not in _train_cache:
+        adamw = opt.AdamWConfig(lr=3e-3, warmup_steps=20,
+                                total_steps=train_steps)
+        step = jax.jit(build_train_step(CFG, adamw, vocab_chunk=64))
+        params = lm.init(CFG, jax.random.key(seed))
+        state = opt.init_opt_state(params)
+        for i in range(train_steps):
+            batch = jax.tree.map(jnp.asarray, tasks.train_batch(
+                i, seq_len=TRAIN_SEQ_LEN, batch=TRAIN_BATCH, seed=seed))
+            params, state, _, _m = step(params, state, None, batch)
+        _train_cache[key] = params
+    return _train_cache[key]
+
+
+def token_agreement(pred: Sequence[int], ref: Sequence[int]) -> float:
+    """Top-1 agreement scored over the *reference* length: positions the
+    candidate never produced count as disagreement, so a stream that
+    stops early is penalised rather than scored on its shared prefix
+    (the ``benchmarks/bench_quality_proxy.py`` fix, same semantics)."""
+    if not ref:
+        return 1.0
+    hits = sum(1 for i, t in enumerate(ref)
+               if i < len(pred) and pred[i] == t)
+    return hits / len(ref)
+
+
+def _round(x: float, nd: int = 6) -> float:
+    return round(float(x), nd)
+
+
+def _run_budget(params, examples, *, name: str, n_max: Optional[int],
+                window: int, quality_aware: bool) -> dict:
+    """Serve the eval set under one compression budget; returns the
+    result row (reference-relative fields filled in by ``run_eval``)."""
+    from repro.api import SamplingParams, Zipage
+
+    kw = dict(ENGINE_KW, n_max=n_max, window=window)
+    if quality_aware:
+        kw.update(quality_aware=True, quality_defer_min_free=8)
+    z = Zipage(CFG, params, **kw)
+    prompts = [p for _k, p, _a in examples]
+    sp = [SamplingParams(max_new_tokens=len(a), seed=0)
+          for _k, _p, a in examples]
+    outs = z.generate(prompts, sp, max_steps=20_000)
+
+    per_task = {k: [0, 0] for k in tasks.TASK_KINDS}
+    n_correct, tok_hits, tok_total = 0, 0, 0
+    preds = []
+    for (kind, _prompt, answer), out in zip(examples, outs):
+        pred = list(out.token_ids)
+        preds.append(pred)
+        exact = pred == list(answer)
+        n_correct += exact
+        per_task[kind][0] += exact
+        per_task[kind][1] += 1
+        tok_hits += sum(1 for i, t in enumerate(answer)
+                        if i < len(pred) and pred[i] == t)
+        tok_total += len(answer)
+    st = z.scheduler_stats
+    finished = z.engine.scheduler.finished
+    return {
+        "name": name,
+        "n_max": n_max,
+        "window": window,
+        "quality_aware": quality_aware,
+        "n": len(examples),
+        "n_correct": n_correct,
+        "accuracy": _round(n_correct / len(examples)),
+        "token_accuracy": _round(tok_hits / max(tok_total, 1)),
+        "accuracy_by_task": {
+            k: _round(c / max(n, 1)) for k, (c, n) in per_task.items()},
+        # deterministic throughput proxies (no wall-clock — docstring)
+        "steps": z.step_count,
+        "tokens": sum(o.n_tokens for o in outs),
+        "tokens_per_step": _round(
+            sum(o.n_tokens for o in outs) / max(z.step_count, 1), 4),
+        "compressions": sum(r.n_compressions for r in finished.values()),
+        "n_comp_deferred": st["n_comp_deferred"],
+        "block_util": _round(np.mean([m["block_util"]
+                                      for m in z.metrics]), 4),
+        "_preds": preds,
+    }
+
+
+def run_eval(*, seed: int = 0, n_requests: int = 18,
+             train_steps: int = 300, full: bool = False,
+             smoke: bool = True) -> dict:
+    """Train, serve every budget row, score against the Full-KV
+    reference; returns the ``zipage-eval/v1`` report dict."""
+    budgets = BUDGETS_FULL if full else BUDGETS_SMOKE
+    examples = tasks.eval_set(n_requests, seed)
+    params = trained_params(train_steps, seed)
+    rows = [
+        _run_budget(params, examples, name=name, n_max=n_max,
+                    window=window, quality_aware=qa)
+        for name, n_max, window, qa in budgets]
+    ref = rows[0]
+    for row in rows:
+        row["agreement_vs_full"] = _round(float(np.mean(
+            [token_agreement(p, rp)
+             for p, rp in zip(row["_preds"], ref["_preds"])])))
+        row["accuracy_vs_full"] = (
+            _round(row["accuracy"] / ref["accuracy"])
+            if ref["accuracy"] else None)
+    for row in rows:
+        del row["_preds"]
+    return {
+        "schema": EVAL_SCHEMA,
+        "model": "tiny-lm",
+        "smoke": bool(smoke),
+        "config": {
+            "seed": seed,
+            "n_requests": n_requests,
+            "train_steps": train_steps,
+            "tasks": list(tasks.TASK_KINDS),
+            "block_size": ENGINE_KW["block_size"],
+        },
+        "results": rows,
+    }
+
+
+def render_report(report: dict) -> str:
+    """Byte-stable JSON serialization (sorted keys, trailing newline)."""
+    return json.dumps(report, indent=2, sort_keys=True) + "\n"
+
+
+def summary_table(report: dict) -> List[str]:
+    lines = ["| budget | acc | tok acc | vs full | agree | tok/step "
+             "| compressions |",
+             "|---|---|---|---|---|---|---|"]
+    for r in report["results"]:
+        lines.append(
+            f"| {r['name']} | {r['accuracy']} | {r['token_accuracy']} "
+            f"| {r['accuracy_vs_full']} | {r['agreement_vs_full']} "
+            f"| {r['tokens_per_step']} | {r['compressions']} |")
+    return lines

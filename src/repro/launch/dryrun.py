@@ -293,7 +293,7 @@ def lower_compress(cfg, cell, mesh):
     req_p = (P(dspec), P(dspec), P(dspec), P(dspec), P(dspec))
     smap = pallas_compat.shard_map(fn, mesh=mesh,
                                    in_specs=(pool_p, qwin_p, req_p),
-                                   out_specs=(pool_p, P(dspec)),
+                                   out_specs=(pool_p, P(dspec), P(dspec)),
                                    axis_names=frozenset(daxes), check=False)
     jitted = jax.jit(smap, donate_argnums=(0,))
     with pallas_compat.mesh_context(mesh):

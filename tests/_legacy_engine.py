@@ -435,7 +435,7 @@ class LegacyZipageEngine:
         pools = self.state["pools"]
         req = (jnp.asarray(src_bt), jnp.asarray(dest_bt), jnp.asarray(qslots),
                jnp.asarray(seq_lens), jnp.asarray(hist))
-        new_pools, _ = self._compress_fn(n)(pools, self.state["qwin"], req)
+        new_pools, *_ = self._compress_fn(n)(pools, self.state["qwin"], req)
         self.state["pools"] = new_pools
         # host bookkeeping is deterministic — apply immediately
         k = self.budget_blocks * self.opts.block_size

@@ -35,7 +35,7 @@ def test_compress_fn_backend_parity():
                                pooling="first", backend=backend)
         fn = jax.jit(build_compress_fn(cfg, block_size=b, max_blocks=mb,
                                        budget_blocks=bb, opts=opts))
-        new_pools, new_seq = fn(pools, qwin, req)
+        new_pools, new_seq, _ = fn(pools, qwin, req)
         outs[backend] = (jax.tree.map(np.asarray, new_pools),
                          np.asarray(new_seq))
     for key in ("k", "v", "f"):
@@ -66,7 +66,7 @@ def test_compress_fn_backend_parity_flash():
                                pooling="none", backend=backend)
         fn = jax.jit(build_compress_fn(cfg, block_size=b, max_blocks=mb,
                                        budget_blocks=bb, opts=opts))
-        new_pools, _ = fn(pools, qwin, req)
+        new_pools, _, _ = fn(pools, qwin, req)
         outs[backend] = jax.tree.map(np.asarray, new_pools)
     for key in ("k", "v"):
         np.testing.assert_allclose(outs["jnp"][key], outs["pallas-interpret"][key],

@@ -116,3 +116,83 @@ def test_trend_unknown_schema_skipped(tmp_path):
     good = write(tmp_path, "good.json", conc_point(100.0))
     assert bench_trend.main([bad, good]) == 0
     assert bench_trend.main([bad]) == 2   # nothing recognised
+
+
+def eval_point(full_acc, n4_acc, n4_vs_full=None):
+    """A zipage-eval/v1 point (repro.eval --smoke; docs/EVAL.md)."""
+    def row(name, acc, **kw):
+        return dict({"name": name, "accuracy": acc,
+                     "token_accuracy": acc, "agreement_vs_full": 0.9,
+                     "tokens_per_step": 5.0, "compressions": 4}, **kw)
+    return {
+        "schema": "zipage-eval/v1", "model": "tiny-lm", "smoke": True,
+        "config": {"seed": 0},
+        "results": [
+            row("full_kv", full_acc, accuracy_vs_full=1.0, compressions=0),
+            row("n2_w4", round(n4_acc - 0.1, 3)),
+            row("n3_w4", round(n4_acc - 0.05, 3)),
+            row("n4_w4", n4_acc,
+                accuracy_vs_full=n4_vs_full
+                or (round(n4_acc / full_acc, 3) if full_acc else None)),
+            row("n3_w4_qa", round(n4_acc - 0.02, 3)),
+        ],
+    }
+
+
+def quality_point(top1):
+    return {
+        "schema": "zipage-bench-quality/v1", "jax": "0", "platform": "cpu",
+        "smoke": True,
+        "results": [
+            {"name": "full_kv", "top1_agreement": 1.0, "compressions": 0,
+             "steps": 40, "tokens": 60, "us_per_step": 100.0},
+            {"name": "paper_c8", "top1_agreement": top1, "compressions": 6,
+             "steps": 40, "tokens": 60, "us_per_step": 90.0},
+        ],
+    }
+
+
+def test_quality_table_renders(tmp_path):
+    files = [write(tmp_path, "000-eval.json", eval_point(0.34, 0.30)),
+             write(tmp_path, "000-quality.json", quality_point(0.97)),
+             write(tmp_path, "001-eval.json", eval_point(0.34, 0.32))]
+    out = tmp_path / "TREND.md"
+    assert bench_trend.main(files + ["--out", str(out)]) == 0
+    text = out.read_text()
+    assert "Reasoning-quality trajectory" in text
+    assert "| 0.34 |" in text and "| 0.97 |" in text
+    # second eval row has no paired quality point: column renders '-'
+    assert "000-eval" in text and "001-eval" in text
+
+
+def test_accuracy_gate_fails_on_drop(tmp_path):
+    # full-KV accuracy drops 5 points > the 2-point default ceiling
+    files = [write(tmp_path, "000-eval.json", eval_point(0.34, 0.30)),
+             write(tmp_path, "001-eval.json", eval_point(0.29, 0.30))]
+    assert bench_trend.main(files) == 1
+    # the n4 budget series gates independently of the full-KV anchor
+    files = [write(tmp_path, "000-eval.json", eval_point(0.34, 0.30)),
+             write(tmp_path, "002-eval.json", eval_point(0.34, 0.25))]
+    assert bench_trend.main(files) == 1
+    # a within-tolerance wiggle passes; a looser ceiling admits the drop
+    files = [write(tmp_path, "000-eval.json", eval_point(0.34, 0.30)),
+             write(tmp_path, "003-eval.json", eval_point(0.325, 0.285))]
+    assert bench_trend.main(files) == 0
+    files = [write(tmp_path, "000-eval.json", eval_point(0.34, 0.30)),
+             write(tmp_path, "004-eval.json", eval_point(0.29, 0.25))]
+    assert bench_trend.main(files + ["--max-accuracy-drop", "0.1"]) == 0
+
+
+def test_accuracy_gate_single_point_and_mixed_history(tmp_path):
+    # one eval point: trivially green, and eval-only input is recognised
+    only = [write(tmp_path, "only-eval.json", eval_point(0.34, 0.30))]
+    assert bench_trend.main(only) == 0
+    # eval history mixes with concurrency history; the tps gate and the
+    # accuracy gate fail independently
+    files = [write(tmp_path, "000-conc.json", conc_point(100.0)),
+             write(tmp_path, "000-eval.json", eval_point(0.34, 0.30)),
+             write(tmp_path, "001-conc.json", conc_point(100.0)),
+             write(tmp_path, "001-eval.json", eval_point(0.20, 0.30))]
+    assert bench_trend.main(files) == 1
+    files[3] = write(tmp_path, "001-eval.json", eval_point(0.34, 0.30))
+    assert bench_trend.main(files) == 0

@@ -57,7 +57,7 @@ def run_compress(cfg, pools, qwin, src_bt, dest_bt, seq_lens, hist_lens,
     jp = {k: jnp.asarray(v) for k, v in pools.items()}
     req = (jnp.asarray(src_bt), jnp.asarray(dest_bt), jnp.asarray(qslots),
            jnp.asarray(seq_lens), jnp.asarray(hist_lens))
-    new_pools, new_seq = fn(jp, jnp.asarray(qwin), req)
+    new_pools, new_seq, _ = fn(jp, jnp.asarray(qwin), req)
     return {k: np.asarray(v) for k, v in new_pools.items()}, np.asarray(new_seq)
 
 
@@ -163,7 +163,7 @@ def test_kept_set_matches_topk_of_scores():
     valid = np.arange(T) < seq_len
     ring = qwin[0, 0]
     order = (seq_len - w + np.arange(w)) % w
-    final, _ = _score_one(cfg, opts, jnp.asarray(ring[order]),
+    final, _, _ = _score_one(cfg, opts, jnp.asarray(ring[order]),
                           jnp.asarray(entries), jnp.asarray(fscore),
                           jnp.asarray(valid), seq_len, 0, b)
     want_keep = np.asarray(scoring.topk_tag(final, bb * b))

@@ -1,0 +1,131 @@
+"""The seeded reasoning eval harness (repro.eval; docs/EVAL.md).
+
+Fast host-only tests for the task generators, scoring helpers and the
+fixed ``agreement()`` in benchmarks/bench_quality_proxy.py, plus one
+small end-to-end determinism test: two ``run_eval`` invocations must
+render byte-identical ``zipage-eval/v1`` JSON (the property the CI
+accuracy gate relies on).
+"""
+import json
+
+import numpy as np
+import pytest
+
+from benchmarks.bench_quality_proxy import agreement
+from repro.eval import runner, tasks
+from repro.eval.runner import render_report, run_eval, token_agreement
+
+# ----------------------------------------------------------------------
+# task generators
+
+
+def test_eval_set_deterministic_and_prefix_stable():
+    a = tasks.eval_set(9, seed=0)
+    assert a == tasks.eval_set(9, seed=0)
+    assert a != tasks.eval_set(9, seed=1)
+    # per-example seed namespace: resizing the set never reshuffles it
+    assert tasks.eval_set(6, seed=0) == a[:6]
+    assert [k for k, _, _ in a] == list(tasks.TASK_KINDS) * 3
+
+
+def test_recall_answer_is_queried_value():
+    for i in range(5):
+        rng = np.random.default_rng(np.random.SeedSequence([7, 1, i]))
+        prompt, answer = tasks.make_example("recall", rng)
+        assert len(answer) == 1
+        q_key = prompt[-2]
+        pairs = {prompt[j + 1]: prompt[j + 3]
+                 for j in range(0, 4 * tasks.RECALL_PAIRS, 4)}
+        assert answer[0] == pairs[q_key]
+
+
+def test_chain_add_answer_is_running_sum_trace():
+    rng = np.random.default_rng(np.random.SeedSequence([7, 1, 1]))
+    prompt, answer = tasks.make_example("chain_add", rng)
+    assert len(answer) == tasks.CHAIN_DELTAS
+    # digits follow every DMARK: first the start value, then the deltas
+    digits = [prompt[j + 1] - tasks.DIGIT0
+              for j, t in enumerate(prompt) if t == tasks.DMARK]
+    acc = digits[0]
+    for d, a in zip(digits[1:], answer):
+        acc = (acc + d) % 10
+        assert a == tasks.DIGIT0 + acc
+
+
+def test_chain_copy_answer_is_prompt_payload():
+    rng = np.random.default_rng(np.random.SeedSequence([7, 1, 2]))
+    prompt, answer = tasks.make_example("chain_copy", rng)
+    assert answer == prompt[1:1 + tasks.COPY_LEN]
+    assert len(answer) == tasks.COPY_LEN
+
+
+def test_unknown_kind_raises():
+    with pytest.raises(ValueError, match="unknown eval task kind"):
+        tasks.make_example("sudoku", np.random.default_rng(0))
+
+
+def test_train_batch_masks_loss_to_answer_positions():
+    b = tasks.train_batch(3, seq_len=64, batch=4, seed=0)
+    b2 = tasks.train_batch(3, seq_len=64, batch=4, seed=0)
+    assert all(np.array_equal(b[k], b2[k]) for k in b)
+    assert b["tokens"].shape == (4, 64) and b["labels"].shape == (4, 64)
+    scored = b["labels"] != tasks.IGNORE
+    assert 0 < scored.sum() < scored.size // 2
+    # the mask only hides positions, it never rewrites targets: every
+    # scored label is the stream's next token (tokens is rows[:, :-1],
+    # labels is rows[:, 1:] masked)
+    rows_i, cols = np.nonzero(scored[:, :-1])
+    assert np.array_equal(b["labels"][rows_i, cols],
+                          b["tokens"][rows_i, cols + 1])
+    # prompt noise (irreducible entropy) is never a target
+    assert not np.isin(b["labels"][scored],
+                       np.arange(tasks.NOISE0,
+                                 tasks.NOISE0 + tasks.N_NOISE)).any()
+
+
+# ----------------------------------------------------------------------
+# scoring helpers — incl. the agreement() truncation-bug regression
+
+
+def test_agreement_scores_over_reference_length():
+    assert agreement([1, 2, 3, 4], [1, 2, 3, 4]) == 1.0
+    # the old min(len(a), len(b)) truncation returned 1.0 here
+    assert agreement([1, 2], [1, 2, 3, 4]) == 0.5
+    assert agreement([], [1, 2]) == 0.0
+    assert agreement([9, 2, 9, 4], [1, 2, 3, 4]) == 0.5
+    # extra predicted tokens beyond the reference don't score either way
+    assert agreement([1, 2, 3, 4, 5, 6], [1, 2, 3, 4]) == 1.0
+    assert agreement([1, 2], []) == 1.0
+
+
+def test_token_agreement_matches_semantics():
+    assert token_agreement([1, 2], [1, 2, 3, 4]) == 0.5
+    assert token_agreement([5], [5]) == 1.0
+    assert token_agreement([], []) == 1.0
+
+
+# ----------------------------------------------------------------------
+# end-to-end determinism (small budget: cached trained params make the
+# second run serving-only)
+
+
+def test_eval_report_deterministic_and_schema_shaped():
+    kw = dict(seed=0, n_requests=6, train_steps=40)
+    r1 = run_eval(**kw)
+    r2 = run_eval(**kw)
+    s1, s2 = render_report(r1), render_report(r2)
+    assert s1 == s2                       # byte-for-byte, what CI gates
+    report = json.loads(s1)
+    assert report["schema"] == runner.EVAL_SCHEMA
+    names = [row["name"] for row in report["results"]]
+    assert names[0] == "full_kv" and len(names) >= 4
+    full = report["results"][0]
+    assert full["compressions"] == 0
+    if full["accuracy"]:
+        assert full["accuracy_vs_full"] == 1.0
+    assert full["agreement_vs_full"] == 1.0
+    for row in report["results"]:
+        # no wall-clock fields anywhere — the determinism precondition
+        assert not any("time" in k or "us_" in k for k in row)
+        assert row["n"] == 6
+        assert set(row["accuracy_by_task"]) == set(tasks.TASK_KINDS)

@@ -1,0 +1,229 @@
+"""Quality-aware compression planner tests (docs/EVAL.md).
+
+Two layers:
+  * pure-host unit tests driving ``Scheduler`` directly — the effective
+    per-request cap (``_n_max_cap`` incl. the sanitizer's worst-case
+    envelope), the shared due-predicate, victim shielding, the
+    lowest-redundancy-first candidate order, and the deferral counter;
+  * engine-level tests through the tiny LM — ``default`` policy is
+    bit-identical to omitting the field, "protect"/"aggressive"
+    measurably shift per-request compression counts and land in the
+    right ``scheduler_stats`` buckets, and ``quality_aware=True``
+    defers compressions under pool headroom.
+"""
+import dataclasses
+
+import jax
+import pytest
+
+from repro.api import SamplingParams, Zipage
+from repro.configs import get_config
+from repro.core.block_manager import BlockManager
+from repro.core.request import Request, State
+from repro.core.scheduler import Scheduler, SchedulerOutputs, SchedulerParams
+from repro.models import lm
+
+CFG = dataclasses.replace(get_config("tiny-lm"), dtype="float32")
+PARAMS = lm.init(CFG, jax.random.key(0))
+
+
+# ----------------------------------------------------------------------
+# pure-host unit tests (no model, no device steps)
+
+
+def make_sched(n_blocks=64, block_size=4, **kw):
+    base = dict(block_size=block_size, max_batch=4, m_qslots=4, n_max=3,
+                window=2, prefill_rows=4, compression_enabled=True,
+                budget_blocks=2, prefix_ok=False)
+    base.update(kw)
+    return Scheduler(SchedulerParams(**base),
+                     BlockManager(n_blocks, block_size,
+                                  enable_prefix_cache=False))
+
+
+def running_request(s, rid, *, policy="default", n_blocks=4,
+                    redundancy=None, attn_entropy=None):
+    """Fabricate a fully-prefilled RUNNING request holding ``n_blocks``
+    exactly-full blocks, i.e. compression-eligible modulo its cap."""
+    r = Request(rid=rid, prompt=[1, 2, 3], max_new_tokens=8,
+                arrival=float(rid),
+                sampling=SamplingParams(compression_policy=policy))
+    r.blocks = s.bm.allocate(n_blocks)
+    r.state = State.RUNNING
+    r.slot = s.free_slots.pop()
+    r.qslot = s.free_qslots.pop()
+    r.seq_len = n_blocks * s.p.block_size
+    r.position = r.seq_len
+    r.win_count = s.p.window
+    r.redundancy = redundancy
+    r.attn_entropy = attn_entropy
+    s.running.append(r)
+    return r
+
+
+def test_n_max_cap_per_policy():
+    s = make_sched(n_blocks=16, quality_aware=True, compression_deferral=2,
+                   quality_defer_min_free=8)
+    default = running_request(s, 0, n_blocks=1)
+    protect = running_request(s, 1, policy="protect", n_blocks=1)
+    aggressive = running_request(s, 2, policy="aggressive", n_blocks=1)
+    # headroom (13 free >= 8): default defers by compression_deferral
+    assert s._n_max_cap(default) == 5
+    assert s._n_max_cap(protect) == 7       # n_max + 2*deferral, always
+    assert s._n_max_cap(aggressive) == 3    # base rule, always
+    # drain the pool below the floor: the default-policy deferral vanishes,
+    # the explicit-intent caps don't
+    s.bm.allocate(10)
+    assert s.bm.num_free < s.p.quality_defer_min_free
+    assert s._n_max_cap(default) == 3
+    assert s._n_max_cap(protect) == 7
+    assert s._n_max_cap(aggressive) == 3
+    # the sanitizer audits against the static envelope: headroom-blind
+    assert s._n_max_cap(default, worst_case=True) == 5
+    assert s._n_max_cap(protect, worst_case=True) == 7
+    assert s._n_max_cap(aggressive, worst_case=True) == 3
+
+
+def test_n_max_cap_quality_off_is_base_rule():
+    s = make_sched(n_blocks=16, compression_deferral=2)
+    assert s._n_max_cap(running_request(s, 0, n_blocks=1)) == 3
+    assert s._n_max_cap(running_request(s, 1, policy="aggressive",
+                                        n_blocks=1)) == 3
+    # protect is per-request intent — honored even with the planner off
+    assert s._n_max_cap(running_request(s, 2, policy="protect",
+                                        n_blocks=1)) == 7
+
+
+def test_compression_due_tracks_effective_cap():
+    s = make_sched(n_blocks=64, quality_aware=True, compression_deferral=1,
+                   quality_defer_min_free=8)
+    at_base = running_request(s, 0, n_blocks=3)     # n_max, deferred
+    at_cap = running_request(s, 1, n_blocks=4)      # n_max + deferral
+    agg = running_request(s, 2, policy="aggressive", n_blocks=3)
+    assert not s._compression_due(at_base)
+    assert s._compression_due(at_cap)
+    assert s._compression_due(agg)
+    # losing the qslot or an unfilled last block disarms the trigger
+    at_cap.qslot = -1
+    assert not s._compression_due(at_cap)
+
+
+def test_victim_shielding_matrix():
+    s = make_sched(n_blocks=32, quality_aware=True,
+                   quality_entropy_threshold=0.8)
+    spread = running_request(s, 0, n_blocks=1, attn_entropy=0.9)
+    peaked = running_request(s, 1, n_blocks=1, attn_entropy=0.3)
+    unmeasured = running_request(s, 2, n_blocks=1)
+    volunteer = running_request(s, 3, policy="aggressive", n_blocks=1,
+                                attn_entropy=0.95)
+    assert s._victim_shielded(spread)
+    assert not s._victim_shielded(peaked)
+    assert not s._victim_shielded(unmeasured)
+    assert not s._victim_shielded(volunteer)      # intent beats telemetry
+
+    off = make_sched(n_blocks=32, quality_entropy_threshold=0.8)
+    assert not off._victim_shielded(
+        running_request(off, 0, n_blocks=1, attn_entropy=0.9))
+    assert off._victim_shielded(
+        running_request(off, 1, policy="protect", n_blocks=1))
+
+
+def test_candidate_order_lowest_redundancy_first():
+    s = make_sched(n_blocks=64, quality_aware=True, compression_deferral=1,
+                   quality_defer_min_free=8)
+    running_request(s, 0, n_blocks=4, redundancy=0.9)
+    running_request(s, 1, policy="aggressive", n_blocks=4)
+    running_request(s, 2, n_blocks=4, redundancy=0.1)
+    running_request(s, 3, policy="protect", n_blocks=5, redundancy=0.0)
+    outs = SchedulerOutputs()
+    s.plan_compression(outs)
+    # aggressive volunteer leads, defaults lowest-redundancy-first,
+    # protect trails even at the lowest measured redundancy
+    assert [c.request.rid for c in outs.compress] == [1, 2, 0, 3]
+
+
+def test_candidate_order_unchanged_without_quality():
+    s = make_sched(n_blocks=64)
+    running_request(s, 0, n_blocks=4, redundancy=0.9)
+    running_request(s, 1, policy="aggressive", n_blocks=4, redundancy=0.5)
+    running_request(s, 2, n_blocks=4, redundancy=0.1)
+    outs = SchedulerOutputs()
+    s.plan_compression(outs)
+    assert [c.request.rid for c in outs.compress] == [0, 1, 2]
+
+
+def test_deferral_counter_counts_base_rule_due():
+    s = make_sched(n_blocks=64, quality_aware=True, compression_deferral=1,
+                   quality_defer_min_free=0)
+    running_request(s, 0, n_blocks=3)               # due at 4: deferred
+    running_request(s, 1, n_blocks=4)               # at effective cap
+    outs = SchedulerOutputs()
+    s.plan_compression(outs)
+    assert [c.request.rid for c in outs.compress] == [1]
+    assert s.n_comp_deferred == 1
+    # cumulative across steps, and exposed through stats()
+    s.plan_compression(SchedulerOutputs())
+    assert s.n_comp_deferred == 2
+    assert s.stats(SchedulerOutputs())["n_comp_deferred"] == 2
+
+
+def test_sampling_params_rejects_unknown_policy():
+    with pytest.raises(ValueError, match="compression_policy"):
+        SamplingParams(compression_policy="bogus")
+
+
+# ----------------------------------------------------------------------
+# engine-level: policy plumbing api -> engine -> scheduler -> telemetry
+
+ENGINE_KW = dict(block_size=4, n_total_blocks=48, max_batch=2, m_qslots=2,
+                 n_max=3, window=2, max_model_len=128, prefill_rows=2,
+                 prefill_len=32, dtype="float32")
+PROMPT = list(range(1, 13))
+
+
+def _run_policy(policy, **engine_kw):
+    kw = dict(ENGINE_KW, **engine_kw)
+    z = Zipage(CFG, PARAMS, **kw)
+    sp = SamplingParams(max_new_tokens=40, compression_policy=policy)
+    outs = z.generate([PROMPT], [sp], max_steps=400)
+    stats = z.scheduler_stats
+    (req,) = z.engine.scheduler.finished.values()
+    return outs[0].token_ids, req.n_compressions, stats
+
+
+def test_default_policy_is_the_default():
+    """``compression_policy="default"`` must be indistinguishable from
+    omitting the field — the pre-PR stream, token for token."""
+    z = Zipage(CFG, PARAMS, **ENGINE_KW)
+    base = z.generate([PROMPT], [SamplingParams(max_new_tokens=40)],
+                      max_steps=400)
+    toks, _, stats = _run_policy("default")
+    assert toks == base[0].token_ids
+    assert stats["quality_aware"] is False
+    assert stats["n_comp_deferred"] == 0
+    assert stats["n_comp_protect"] == stats["n_comp_aggressive"] == 0
+    assert stats["n_comp_default"] > 0
+
+
+def test_policy_shifts_compression_counts():
+    _, n_default, s_default = _run_policy("default")
+    _, n_protect, s_protect = _run_policy("protect")
+    _, n_aggressive, s_aggressive = _run_policy("aggressive")
+    # protect defers to n_max + 2*deferral: measurably fewer compressions
+    assert n_protect < n_default
+    assert n_aggressive >= n_protect
+    assert n_default > 0 and n_protect >= 0
+    # and every event lands in its policy's stats bucket
+    assert s_protect["n_comp_protect"] == n_protect
+    assert s_protect["n_comp_default"] == 0
+    assert s_aggressive["n_comp_aggressive"] == n_aggressive
+    assert s_aggressive["n_comp_default"] == 0
+
+
+def test_quality_aware_defers_under_headroom():
+    _, n_base, _ = _run_policy("default")
+    _, n_qa, s_qa = _run_policy("default", quality_aware=True,
+                                quality_defer_min_free=0)
+    assert s_qa["quality_aware"] is True
+    assert n_qa < n_base                  # effective cap n_max + deferral
+    assert s_qa["n_comp_deferred"] > 0

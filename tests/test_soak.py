@@ -1,0 +1,146 @@
+"""Randomized engine soak under the runtime sanitizer (``make test-soak``).
+
+Seeded fuzz workloads — mixed prompt lengths (some sharing prefixes),
+mixed output lengths, mixed sampling params and compression policies,
+mid-flight aborts — served across the scheduler-policy × preemption-mode
+× fused-decode-horizon matrix with ``ZIPAGE_SANITIZE=1`` armed, so every
+step runs the whole-engine invariant audit (repro.core.invariants). At
+drain the pool must be byte-clean: no leaked blocks, slots, qslots or
+swap reservations. One combo additionally snapshots mid-soak and checks
+the restore replays to identical outputs.
+
+Small pool + tiny blocks + window=2 on purpose: maximum churn per step
+(compression, preemption, swap, prefix eviction all fire) at CPU-CI
+cost. The tests arm the sanitizer themselves (monkeypatch, before engine
+construction), so they audit under plain ``make test`` too; ``make
+test-soak`` runs just this module for a focused loop."""
+import dataclasses
+
+import jax
+import numpy as np
+import pytest
+
+from repro.configs import get_config
+from repro.core import invariants
+from repro.core.compression import CompressOptions
+from repro.core.engine import EngineOptions, ZipageEngine
+from repro.core.sampling import SamplingParams
+from repro.models import lm
+
+CFG = dataclasses.replace(get_config("tiny-lm"), dtype="float32")
+PARAMS = lm.init(CFG, jax.random.key(0))
+
+#: (id, engine-option overrides) — one row per scheduler-policy ×
+#: preemption-mode × decode-horizon × cache-structure combination
+COMBOS = [
+    ("fcfs_recompute_h1_flat", dict(
+        policy="fcfs", preemption_mode="recompute", decode_steps=1,
+        prefix_cache_policy="flat")),
+    ("priority_swap_h4_radix", dict(
+        policy="priority", preemption_mode="swap", decode_steps=4,
+        prefix_cache_policy="radix", swap_space_blocks=16)),
+    ("srpt_auto_h8_watermark", dict(
+        policy="srpt", preemption_mode="auto", decode_steps=8,
+        prefix_cache_policy="radix", prefix_cache_watermark=0.5,
+        swap_space_blocks=16)),
+    ("cache_aware_auto_h4_segments", dict(
+        policy="cache_aware", preemption_mode="auto", decode_steps=4,
+        prefix_cache_policy="radix", cache_compressed_prefixes=True,
+        token_budget=48, swap_space_blocks=16, quality_aware=True,
+        quality_defer_min_free=4)),
+]
+
+
+def make_engine(**kw):
+    base = dict(block_size=4, n_total_blocks=40, max_batch=8, m_qslots=4,
+                n_max=3, window=2, compress=CompressOptions(window=2),
+                max_model_len=128, prefill_rows=2, prefill_len=32,
+                fuse_sampling=True, async_compression=True, dtype="float32")
+    base.update(kw)
+    return ZipageEngine(CFG, PARAMS, EngineOptions(**base))
+
+
+def fuzz_params(rng):
+    """Random per-request sampling: greedy / seeded top-k / seeded
+    top-p, random compression policy, occasional eos."""
+    style = int(rng.integers(0, 3))
+    kw = dict(
+        max_new_tokens=int(rng.integers(4, 25)),
+        seed=int(rng.integers(0, 2**31 - 1)),
+        compression_policy=("default", "protect",
+                           "aggressive")[int(rng.integers(0, 3))])
+    if style == 1:
+        kw.update(temperature=0.8, top_k=8)
+    elif style == 2:
+        kw.update(temperature=1.0, top_p=0.9)
+    return SamplingParams(**kw)
+
+
+def fuzz_prompt(rng):
+    """Random prompt, ~1/3 extending one of a few shared stems so the
+    prefix cache and cache_aware admission have something to chew on."""
+    stems = {0: [3, 1, 4, 1, 5, 9, 2, 6], 1: [2, 7, 1, 8, 2, 8]}
+    tail = [int(t) for t in rng.integers(1, 50, size=rng.integers(1, 12))]
+    pick = int(rng.integers(0, 3))
+    return stems.get(pick, []) + tail
+
+
+def drain_and_audit(eng, rids):
+    done = eng.run(max_steps=4000)
+    leaked = [rid for rid in rids if rid not in done]
+    assert not leaked, f"requests never finished: {leaked}"
+    assert not eng.scheduler.running and not eng.scheduler.waiting
+    assert not eng.scheduler.swapped
+    assert eng.bm.num_free == eng.opts.n_total_blocks
+    assert len(eng.scheduler.free_slots) == eng.opts.max_batch
+    assert len(eng.scheduler.free_qslots) == eng.opts.m_qslots
+    assert not eng.bm.swapped and eng.bm.swap_util == 0.0
+    eng.bm.check_invariants()
+    assert invariants.audit_engine(eng) == []
+    return done
+
+
+@pytest.mark.parametrize("combo_id,overrides", COMBOS,
+                         ids=[c[0] for c in COMBOS])
+def test_soak_fuzz_matrix(monkeypatch, combo_id, overrides):
+    monkeypatch.setenv("ZIPAGE_SANITIZE", "1")   # before construction
+    eng = make_engine(**overrides)
+    assert eng.sanitize is True
+    rng = np.random.default_rng(abs(hash(combo_id)) % (2**31))
+    rids = []
+    # three admission waves with interleaved stepping + one mid-wave abort
+    for wave in range(3):
+        for _ in range(5):
+            rids.append(eng.add_request(
+                fuzz_prompt(rng), fuzz_params(rng),
+                priority=int(rng.integers(0, 3))))
+        for _ in range(int(rng.integers(2, 6))):
+            eng.step()
+        if wave == 1:
+            victim = rids[int(rng.integers(0, len(rids)))]
+            if eng.abort(victim):
+                rids.remove(victim)
+    drain_and_audit(eng, rids)
+
+
+def test_soak_snapshot_restore_roundtrip(monkeypatch):
+    """Mid-soak snapshot under the sanitizer: restoring into a fresh
+    engine and draining must reproduce the original outputs exactly."""
+    monkeypatch.setenv("ZIPAGE_SANITIZE", "1")
+    overrides = COMBOS[1][1]
+    eng = make_engine(**overrides)
+    rng = np.random.default_rng(7)
+    rids = [eng.add_request(fuzz_prompt(rng), fuzz_params(rng),
+                            priority=int(rng.integers(0, 3)))
+            for _ in range(10)]
+    for _ in range(6):
+        eng.step()
+    snap = eng.snapshot()
+    done_a = drain_and_audit(eng, rids)
+    out_a = {rid: done_a[rid].output for rid in rids}
+
+    eng2 = make_engine(**overrides)
+    eng2.restore(snap)
+    done_b = drain_and_audit(eng2, rids)
+    out_b = {rid: done_b[rid].output for rid in rids}
+    assert out_a == out_b

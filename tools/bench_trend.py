@@ -12,13 +12,20 @@ artifacts plus the freshly produced smoke JSON):
     python tools/bench_trend.py bench-history/*.json \\
         bench-concurrency-smoke.json --out BENCH_TREND.md
 
+CI also uploads ``eval-smoke.json`` (``zipage-eval/v1``, the seeded
+reasoning eval — docs/EVAL.md) and ``bench-quality-smoke.json``
+(``zipage-bench-quality/v1``, top-1 agreement of the scoring ablations);
+both land in the reasoning-quality trajectory table.
+
 Output: a markdown trajectory table per benchmark kind. Exit status: 1 if
 the newest concurrency point's zipage decode throughput (``tps``) — or,
 once oversubscribed points exist (schema v3), the swap-mode decode
 throughput (``oversub_swap``) — dropped more than ``--max-regression``
-(default 0.25, i.e. 25%) below the previous point's; 0 otherwise (a
-single point trivially passes). Stdlib only — safe to run anywhere CI
-can run python.
+(default 0.25, i.e. 25%) below the previous point's, **or** the newest
+eval point's accuracy (Full-KV or the headline ``n4_w4`` budget) dropped
+more than ``--max-accuracy-drop`` (default 0.02, i.e. 2 points) below
+the previous eval point's; 0 otherwise (a single point trivially
+passes). Stdlib only — safe to run anywhere CI can run python.
 """
 from __future__ import annotations
 
@@ -32,17 +39,24 @@ CONCURRENCY_SCHEMAS = ("zipage-bench-concurrency/v1",
                        "zipage-bench-concurrency/v3",
                        "zipage-bench-concurrency/v4")
 KERNELS_SCHEMAS = ("zipage-bench-kernels/v1",)
+EVAL_SCHEMAS = ("zipage-eval/v1",)
+QUALITY_SCHEMAS = ("zipage-bench-quality/v1",)
 
 #: (result name, human label) series the regression gate watches; a
 #: series only gates between consecutive points that both report it, so
 #: pre-v3 history mixes fine with v3 points
 GATED_SERIES = (("zipage", "zipage"), ("oversub_swap", "swap-mode"))
 
+#: eval budget rows whose accuracy the quality gate watches (the Full-KV
+#: anchor and the paper's headline "~95% of Full-KV" budget)
+GATED_EVAL_SERIES = (("full_kv", "full-KV accuracy"),
+                     ("n4_w4", "n4 accuracy"))
+
 
 def load_points(paths):
-    """Split the input files into (concurrency, kernels) point lists,
-    keeping argument order (= chronological order)."""
-    concurrency, kernels, skipped = [], [], []
+    """Split the input files into (concurrency, kernels, evals, quality)
+    point lists, keeping argument order (= chronological order)."""
+    concurrency, kernels, evals, quality, skipped = [], [], [], [], []
     for p in paths:
         path = Path(p)
         try:
@@ -56,9 +70,13 @@ def load_points(paths):
             concurrency.append(point)
         elif schema in KERNELS_SCHEMAS:
             kernels.append(point)
+        elif schema in EVAL_SCHEMAS:
+            evals.append(point)
+        elif schema in QUALITY_SCHEMAS:
+            quality.append(point)
         else:
             skipped.append(f"{p}: unknown schema {schema!r}")
-    return concurrency, kernels, skipped
+    return concurrency, kernels, evals, quality, skipped
 
 
 def _result(data, name):
@@ -156,6 +174,70 @@ def kernels_table(points):
     return lines
 
 
+def quality_table(eval_points, quality_points):
+    """Reasoning-quality trajectory: eval accuracy per budget
+    (``zipage-eval/v1``, docs/EVAL.md) plus the top-1 agreement of the
+    paper's scoring config from ``zipage-bench-quality/v1`` points with a
+    matching position in history (quality column '-' when absent)."""
+    if not eval_points and not quality_points:
+        return []
+    lines = [
+        "## Reasoning-quality trajectory (repro.eval + "
+        "bench_quality_proxy)",
+        "",
+        "| point | full-KV acc | n2 acc | n3 acc | n4 acc | n3+qa acc "
+        "| n4 vs full | n3 agree | paper_c8 top-1 |",
+        "|---|---|---|---|---|---|---|---|---|",
+    ]
+    fmt = lambda v: "-" if v is None else f"{v}"  # noqa: E731
+    n_rows = max(len(eval_points), len(quality_points))
+    for i in range(n_rows):
+        ev = eval_points[i] if i < len(eval_points) else None
+        qp = quality_points[i] if i < len(quality_points) else None
+        label = (ev or qp)["label"]
+        row = {}
+        if ev is not None:
+            row = {r.get("name"): r
+                   for r in ev["data"].get("results", [])}
+        n4 = row.get("n4_w4", {})
+        agr = None
+        if qp is not None:
+            agr = _result(qp["data"], "paper_c8").get("top1_agreement")
+        lines.append(
+            f"| {label} "
+            f"| {fmt(row.get('full_kv', {}).get('accuracy'))} "
+            f"| {fmt(row.get('n2_w4', {}).get('accuracy'))} "
+            f"| {fmt(row.get('n3_w4', {}).get('accuracy'))} "
+            f"| {fmt(n4.get('accuracy'))} "
+            f"| {fmt(row.get('n3_w4_qa', {}).get('accuracy'))} "
+            f"| {fmt(n4.get('accuracy_vs_full'))} "
+            f"| {fmt(row.get('n3_w4', {}).get('agreement_vs_full'))} "
+            f"| {fmt(agr)} |")
+    return lines
+
+
+def check_accuracy(eval_points, max_accuracy_drop):
+    """(ok, message) for the newest vs previous eval accuracy per gated
+    budget row — fails when accuracy drops by more than
+    ``max_accuracy_drop`` (absolute points, default 0.02: the ISSUE's
+    '>2-point drop') below the previous history point."""
+    ok, msgs = True, []
+    for result_name, label in GATED_EVAL_SERIES:
+        acc = [(pt["label"],
+                _result(pt["data"], result_name).get("accuracy"))
+               for pt in eval_points]
+        acc = [(lbl, a) for lbl, a in acc if a is not None]
+        if len(acc) < 2:
+            msgs.append(f"{label}: <2 points, trivially OK")
+            continue
+        (prev_label, prev), (cur_label, cur) = acc[-2], acc[-1]
+        floor = prev - max_accuracy_drop
+        msgs.append(f"{label}: {cur_label} {cur} vs {prev_label} {prev} "
+                    f"(floor {floor:.3f})")
+        ok = ok and cur >= floor
+    return ok, "accuracy gate: " + "; ".join(msgs)
+
+
 def check_regression(points, max_regression):
     """(ok, message) for the newest vs previous decode tps, across every
     gated series (plain zipage + v3's swap-mode oversubscribed run). Each
@@ -187,9 +269,14 @@ def main(argv=None):
                     help="fail when the newest zipage tps drops more than "
                          "this fraction below the previous point "
                          "(default: 0.25)")
+    ap.add_argument("--max-accuracy-drop", type=float, default=0.02,
+                    help="fail when the newest eval point's accuracy "
+                         "(full-KV or n4 budget) drops more than this "
+                         "many absolute points below the previous one "
+                         "(default: 0.02)")
     args = ap.parse_args(argv)
 
-    concurrency, kernels, skipped = load_points(args.files)
+    concurrency, kernels, evals, quality, skipped = load_points(args.files)
     lines = ["# Bench trajectory", ""]
     if concurrency:
         lines += concurrency_table(concurrency) + [""]
@@ -198,8 +285,12 @@ def main(argv=None):
             lines += pfx + [""]
     if kernels:
         lines += kernels_table(kernels) + [""]
+    qt = quality_table(evals, quality)
+    if qt:
+        lines += qt + [""]
     ok, gate_msg = check_regression(concurrency, args.max_regression)
-    lines += [f"_{gate_msg}_", ""]
+    acc_ok, acc_msg = check_accuracy(evals, args.max_accuracy_drop)
+    lines += [f"_{gate_msg}_", "", f"_{acc_msg}_", ""]
     text = "\n".join(lines)
     if args.out:
         Path(args.out).write_text(text)
@@ -208,13 +299,15 @@ def main(argv=None):
         print(text)
     for s in skipped:
         print(f"bench-trend: skipped {s}", file=sys.stderr)
-    if not concurrency and not kernels:
+    if not concurrency and not kernels and not evals and not quality:
         print("bench-trend: no recognised bench JSONs", file=sys.stderr)
         return 2
-    if not ok:
-        print(f"bench-trend: FAIL — {gate_msg}", file=sys.stderr)
+    if not ok or not acc_ok:
+        failed = "; ".join(m for okk, m in
+                           ((ok, gate_msg), (acc_ok, acc_msg)) if not okk)
+        print(f"bench-trend: FAIL — {failed}", file=sys.stderr)
         return 1
-    print(f"bench-trend: OK — {gate_msg}", file=sys.stderr)
+    print(f"bench-trend: OK — {gate_msg}; {acc_msg}", file=sys.stderr)
     return 0
 
 
