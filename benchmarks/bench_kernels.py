@@ -13,9 +13,16 @@ Usable two ways:
   * ``python -m benchmarks.bench_kernels [--smoke] [--out FILE.json]`` —
     JSON for the per-PR bench trajectory (CI's bench-smoke artifact):
 
-      {"schema": "zipage-bench-kernels/v1", "jax": ..., "platform": ...,
+      {"schema": "zipage-bench-kernels/v2", "jax": ..., "platform": ...,
        "smoke": bool, "results": [{"name", "backend", "us_per_call"}, ...],
+       "long_context": {"seq_lens", "block_size", "max_blocks",
+                        "pages_visited", "pages_dense", "pages_ratio"},
        "e2e": {"backend", "wall_s", "tokens", "tokens_per_s", "parity"}}
+
+    v2 adds the ragged decode kernel rows (``ragged_attention`` and the
+    4k+ mixed-length ``*_long`` pair) and the ``long_context`` DMA
+    footprint summary (pages_visited = sum(ceil(seq_len/b)) vs the dense
+    grid's B*max_blocks).
 
 ``--smoke`` shrinks shapes/iteration counts so the job stays in CI budget.
 """
@@ -65,6 +72,8 @@ def kernel_results(smoke=False):
                                 for _ in range(hkv)]).astype(np.int32))
     cases = [
         ("paged_attention", ops.paged_decode_attention, (q, kp, vp, bt, sl)),
+        ("ragged_attention", ops.ragged_decode_attention,
+         (q, kp, vp, bt, sl)),
         ("paged_score", ops.score_logits, (qw, kp, bt, sl)),
         ("lightning_redundancy", ops.lightning_redundancy, (kp, bt, sl)),
         ("flash_redundancy", ops.flash_redundancy, (kp, bt, sl)),
@@ -76,6 +85,50 @@ def kernel_results(smoke=False):
             us = timed(fn, *args, iters=iters, backend=backend)
             out.append((name, backend, us))
     return out
+
+
+def long_context_results(smoke=False):
+    """Long-context mixed-length decode point (4k+ tokens): dense vs
+    ragged at a table width where the dense grid's pool-wide iteration
+    hurts, plus the analytic DMA footprint the ragged kernel pays.
+
+    Returns ``(rows, summary)``: rows are (name, backend, us_per_call)
+    entries for the results list; the summary carries
+    ``pages_visited = sum(ceil(seq_len / b))``, the dense grid's
+    ``pages_dense = B * max_blocks`` and their ratio."""
+    iters = 1 if smoke else 3
+    hq, hkv, d = 8, 2, 32
+    b, mb = 64, 64                                   # 4096-token table
+    B = 4
+    seq_lens = np.array([4096, 512, 64, 0], np.int32)
+    N = int(sum(-(-s // b) for s in seq_lens)) + 1   # page 0 stays unused
+    rng = np.random.default_rng(17)
+    q = jnp.asarray(rng.normal(size=(B, hq, d)), jnp.float32)
+    kp = jnp.asarray(rng.normal(size=(N, b, hkv, d)), jnp.float32)
+    vp = jnp.asarray(rng.normal(size=(N, b, hkv, d)), jnp.float32)
+    bt = np.full((B, mb), -1, np.int32)
+    pool = list(rng.permutation(np.arange(1, N)))
+    for i, s in enumerate(seq_lens):
+        for j in range(-(-int(s) // b)):
+            bt[i, j] = pool.pop()
+    bt_trim, _width = ops.trim_block_tables(bt, seq_lens, b)
+    sl = jnp.asarray(seq_lens)
+    rows = []
+    for backend in BACKENDS:
+        rows.append(("paged_attention_long", backend, timed(
+            ops.paged_decode_attention, q, kp, vp, jnp.asarray(bt), sl,
+            iters=iters, backend=backend)))
+        rows.append(("ragged_attention_long", backend, timed(
+            ops.ragged_decode_attention, q, kp, vp, jnp.asarray(bt_trim),
+            sl, iters=iters, backend=backend)))
+    visited = int(sum(-(-int(s) // b) for s in seq_lens))
+    dense = B * mb
+    summary = {
+        "seq_lens": seq_lens.tolist(), "block_size": b, "max_blocks": mb,
+        "pages_visited": visited, "pages_dense": dense,
+        "pages_ratio": round(visited / dense, 4),
+    }
+    return rows, summary
 
 
 def e2e_result(smoke=False):
@@ -128,16 +181,19 @@ def main(argv=None):
                     help="skip the end-to-end Zipage.generate() run")
     args = ap.parse_args(argv)
 
+    rows = kernel_results(smoke=args.smoke)
+    long_rows, long_summary = long_context_results(smoke=args.smoke)
     report = {
-        "schema": "zipage-bench-kernels/v1",
+        "schema": "zipage-bench-kernels/v2",
         "jax": jax.__version__,
         "platform": jax.default_backend(),
         "smoke": args.smoke,
         "results": [
             {"name": name, "backend": backend,
              "us_per_call": round(us, 1)}
-            for name, backend, us in kernel_results(smoke=args.smoke)
+            for name, backend, us in rows + long_rows
         ],
+        "long_context": long_summary,
     }
     if not args.no_e2e:
         report["e2e"] = e2e_result(smoke=args.smoke)

@@ -116,6 +116,9 @@ class SchedulerConfig:
 #: (decode attention only)
 KERNEL_BACKENDS = _kernel_ops.BACKENDS + ("chunked",)
 
+#: decode kernel families accepted by ``ModelRunnerConfig.decode_kernel``
+DECODE_KERNELS = ("ragged", "dense")
+
 
 @dataclasses.dataclass(frozen=True)
 class ModelRunnerConfig:
@@ -129,6 +132,12 @@ class ModelRunnerConfig:
     # "pallas-interpret" forces the Pallas kernels through the interpreter
     # (CPU correctness path — slow, never auto-selected)
     kernel_backend: str = "auto"
+    # decode kernel family (docs/KERNELS.md "Ragged decode"): "ragged"
+    # scales each slot's attention work with its live page count —
+    # padded and evicted pages are never fetched; "dense" restores the
+    # pool-wide-grid kernel. Token streams are bit-identical either way,
+    # so this is a fallback/ablation switch, not a numerics choice.
+    decode_kernel: str = "ragged"
     # decode hot path (docs/PERF.md): fuse_sampling runs the per-slot
     # sampler inside the jitted decode step (tokens never leave the
     # device between steps); decode_steps > 1 additionally runs up to
@@ -177,6 +186,10 @@ def build_engine_options(cache: CacheConfig, scheduler: SchedulerConfig,
         raise ValueError(
             f"unknown kernel_backend {runner.kernel_backend!r}; expected "
             f"one of {KERNEL_BACKENDS}")
+    if runner.decode_kernel not in DECODE_KERNELS:
+        raise ValueError(
+            f"unknown decode_kernel {runner.decode_kernel!r}; expected "
+            f"one of {DECODE_KERNELS}")
     compress = cache.compress
     if compress is None:
         compress = CompressOptions(window=cache.window)
@@ -220,5 +233,6 @@ def build_engine_options(cache: CacheConfig, scheduler: SchedulerConfig,
         dtype=runner.dtype,
         measure_phases=runner.measure_phases,
         kernel_backend=runner.kernel_backend,
+        decode_kernel=runner.decode_kernel,
         fuse_sampling=runner.fuse_sampling,
         decode_steps=runner.decode_steps)

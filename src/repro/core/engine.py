@@ -181,6 +181,11 @@ class EngineOptions:
     # Drives ServeSpec.attn_backend and — when compress.backend is left at
     # "auto" — the compression kernels too.
     kernel_backend: str = "auto"
+    # decode kernel family (ServeSpec.decode_kernel): "ragged" makes
+    # per-slot attention work proportional to the slot's live block count
+    # (padded/evicted pages never fetched); "dense" is the pool-wide-grid
+    # fallback. Streams are bit-identical either way (docs/KERNELS.md).
+    decode_kernel: str = "ragged"
 
 
 class ZipageEngine:
@@ -207,7 +212,8 @@ class ZipageEngine:
             n_total_blocks=opts.n_total_blocks, m_qslots=opts.m_qslots,
             window=opts.window, prefill_rows=opts.prefill_rows,
             prefill_len=opts.prefill_len, dtype=opts.dtype,
-            attn_backend=opts.kernel_backend)
+            attn_backend=opts.kernel_backend,
+            decode_kernel=opts.decode_kernel)
         if opts.decode_steps > 1 and not opts.fuse_sampling:
             raise ValueError("decode_steps > 1 requires fuse_sampling")
         prefix_ok = (opts.prefix_caching and not cfg.attention_free
@@ -283,8 +289,8 @@ class ZipageEngine:
         self._decode = _cached_step("decode", cfg, self.spec)
         self._prefill = _cached_step("prefill", cfg, self.spec)
         self._fused_fns: Dict[int, callable] = {}
-        self._compress_fns: Dict[int, callable] = {}
-        self._comp_bufs: Dict[int, tuple] = {}
+        self._compress_fns: Dict[tuple, callable] = {}
+        self._comp_bufs: Dict[tuple, tuple] = {}
         # host mirrors of the device tables (rebuilt from scheduler state
         # before each push)
         self.host_bt = np.full((opts.max_batch, self.max_blocks), -1, np.int32)
@@ -306,6 +312,8 @@ class ZipageEngine:
         self._t_blocked = 0.0
         self._step_decoded = 0
         self._last_horizon = 0
+        self._step_pages_visited = 0
+        self._step_pages_dense = 0
 
         self._rid = 0
         self._rng = np.random.default_rng(opts.seed)
@@ -506,17 +514,24 @@ class ZipageEngine:
     # ------------------------------------------------------------------
     # plan execution: compression
 
-    def _comp_buffers(self, n):
-        """Pre-allocated padded host buffers for a bucket-``n`` launch
-        (re-filled with defaults on reuse — cheap next to a realloc)."""
-        bufs = self._comp_bufs.get(n)
+    def _comp_buffers(self, n, width=None):
+        """Pre-allocated padded host buffers for a bucket-``(n, width)``
+        launch (re-filled with defaults on reuse — cheap next to a
+        realloc). ``width`` is the trimmed block-table width
+        (kernels.ops.block_table_width): the compression pre-pass kernels
+        run dense grids over the table, so handing them a pool-wide
+        ``max_blocks`` table makes every launch pay for pages no victim
+        owns."""
+        if width is None:
+            width = self.max_blocks
+        bufs = self._comp_bufs.get((n, width))
         if bufs is None:
-            bufs = (np.full((n, self.max_blocks), -1, np.int32),
+            bufs = (np.full((n, width), -1, np.int32),
                     np.full((n, self.budget_blocks), -1, np.int32),
                     np.full((n,), -1, np.int32),
                     np.zeros((n,), np.int32),
                     np.zeros((n,), np.int32))
-            self._comp_bufs[n] = bufs
+            self._comp_bufs[(n, width)] = bufs
         else:
             src_bt, dest_bt, qslots, seq_lens, hist = bufs
             src_bt.fill(-1)
@@ -526,38 +541,49 @@ class ZipageEngine:
             hist.fill(0)
         return bufs
 
-    def _compress_fn(self, n):
-        """Compiled compression executable for bucket size ``n``, shared
-        process-wide across engines with the same signature."""
-        fn = self._compress_fns.get(n)
+    def _compress_fn(self, n, width=None):
+        """Compiled compression executable for bucket size ``n`` at
+        trimmed table width ``width``, shared process-wide across engines
+        with the same signature."""
+        if width is None:
+            width = self.max_blocks
+        fn = self._compress_fns.get((n, width))
         if fn is not None:
             return fn
         key = (self.cfg, self.spec, self.opts.compress,
-               self.budget_blocks, n)
+               self.budget_blocks, n, width)
         fn = _COMPRESS_CACHE.get(key)
         if fn is None:
             jitted = jax.jit(build_compress_fn(
                 self.cfg, block_size=self.opts.block_size,
-                max_blocks=self.max_blocks,
+                max_blocks=width,
                 budget_blocks=self.budget_blocks, opts=self.opts.compress))
             try:
                 sds = lambda x: jax.ShapeDtypeStruct(x.shape, x.dtype)  # noqa: E731
-                req = tuple(sds(a) for a in self._comp_buffers(n))
+                req = tuple(sds(a) for a in self._comp_buffers(n, width))
                 fn = jitted.lower(jax.tree.map(sds, self.state["pools"]),
                                   sds(self.state["qwin"]), req).compile()
             except Exception:        # pragma: no cover - jax-version drift
                 fn = jitted          # fall back to compile-on-first-call
             _COMPRESS_CACHE[key] = fn
-        self._compress_fns[n] = fn
+        self._compress_fns[(n, width)] = fn
         return fn
+
+    def _comp_width(self, max_used_blocks) -> int:
+        """Bucketed trimmed table width for a compression launch."""
+        from repro.kernels import ops as kops
+        return kops.block_table_width(max_used_blocks, self.max_blocks)
 
     def _warm_compression(self):
         """Compile the n ∈ {1, 2, 4} compression buckets (and allocate
         their padded host buffers) before serving starts, so the first
-        compression-bearing steps don't stall mid-serve on trace+compile."""
+        compression-bearing steps don't stall mid-serve on trace+compile.
+        Victims carry ~n_max blocks when compression fires, so warm the
+        matching trimmed table width."""
+        width = self._comp_width(self.opts.n_max or 1)
         for n in (1, 2, 4):
             if n <= max(1, self.opts.m_qslots):
-                self._compress_fn(n)
+                self._compress_fn(n, width)
 
     def _launch_compression(self, outs: SchedulerOutputs):
         """Dispatch the compression kernel over the planned launches, then
@@ -568,7 +594,8 @@ class ZipageEngine:
         n = 1
         while n < len(planned):
             n *= 2
-        src_bt, dest_bt, qslots, seq_lens, hist = self._comp_buffers(n)
+        width = self._comp_width(max(c.request.n_blocks for c in planned))
+        src_bt, dest_bt, qslots, seq_lens, hist = self._comp_buffers(n, width)
         for i, c in enumerate(planned):
             r = c.request
             src_bt[i, :r.n_blocks] = r.blocks
@@ -580,8 +607,8 @@ class ZipageEngine:
         pools = self.state["pools"]
         req = (jnp.asarray(src_bt), jnp.asarray(dest_bt), jnp.asarray(qslots),
                jnp.asarray(seq_lens), jnp.asarray(hist))
-        new_pools, _, qstats = self._compress_fn(n)(pools,
-                                                    self.state["qwin"], req)
+        new_pools, _, qstats = self._compress_fn(n, width)(
+            pools, self.state["qwin"], req)
         self.state["pools"] = new_pools
         self._pending_quality = ([c.request.rid for c in planned], qstats)
         self.scheduler.commit_compression(outs)
@@ -809,9 +836,22 @@ class ZipageEngine:
         self.host_pos[r.slot] = r.position
         self._step_decoded += 1
 
+    def _track_pages(self, active, caps, k):
+        """Accumulate the step's page-visit telemetry (docs/PERF.md): the
+        ragged decode kernel DMAs ``ceil(attend_len / b)`` pages per row
+        per sub-step, while a dense-grid launch pays ``max_blocks`` for
+        every slot — active or not — every sub-step. Pure host arithmetic
+        from scheduler state; no device traffic."""
+        b = self.opts.block_size
+        for r, c in zip(active, caps):
+            self._step_pages_visited += sum(
+                -(-(r.seq_len + j + 1) // b) for j in range(c))
+        self._step_pages_dense += k * self.opts.max_batch * self.max_blocks
+
     def _run_decode(self, active):
         if not active:
             return
+        self._track_pages(active, [1] * len(active), 1)
         mask = np.zeros((self.opts.max_batch,), bool)
         for r in active:
             mask[r.slot] = True
@@ -943,6 +983,7 @@ class ZipageEngine:
             return
         K, caps = self.scheduler.quiescent_horizon(active, plan)
         self._last_horizon = K
+        self._track_pages(active, caps, K)
         self._push_host_state()
         self._push_sampling_state(active)
         samp = self._sampling_tensors()
@@ -1016,6 +1057,8 @@ class ZipageEngine:
         self._t_blocked = 0.0
         self._step_decoded = 0
         self._last_horizon = 0
+        self._step_pages_visited = 0
+        self._step_pages_dense = 0
         self.step_count += 1
         plan = self.scheduler.schedule(self.step_count)
         t_admit = time.monotonic()
@@ -1059,6 +1102,10 @@ class ZipageEngine:
             "block_util": used / self.opts.n_total_blocks,
             "tokens": self._step_decoded + len(plan.admitted),
             "decode_horizon": self._last_horizon,
+            # ragged-kernel DMA footprint vs what a dense grid would pay
+            # this step (docs/PERF.md "Pages visited")
+            "pages_visited": self._step_pages_visited,
+            "pages_dense": self._step_pages_dense,
         }
         entry.update(self.scheduler.stats(plan,
                                           n_decoded=self._step_decoded))

@@ -113,7 +113,11 @@ def paged_decode_attention(q, k_pool, v_pool, block_tables, seq_lens,
     mask = jnp.arange(T)[None, :] < seq_lens[:, None]  # (B, T)
     s = jnp.where(mask[:, None, None], s, NEG_INF)
     p = jax.nn.softmax(s, -1)
-    o = jnp.einsum("bhgt,bthd->bhgd", p, vs.astype(jnp.float32))
+    # masked positions carry zero probability, but the gathered V there is
+    # pool garbage (negative table entries gather page 0) and 0·NaN = NaN
+    # would leak through the contraction — zero the masked V lanes
+    vs = jnp.where(mask[..., None, None], vs.astype(jnp.float32), 0.0)
+    o = jnp.einsum("bhgt,bthd->bhgd", p, vs)
     return o.reshape(B, hq, d).astype(q.dtype)
 
 
@@ -148,10 +152,13 @@ def paged_decode_attention_chunked(q, k_pool, v_pool, block_tables, seq_lens,
         m_new = jnp.maximum(m, s.max(-1))
         p = jnp.exp(s - m_new[..., None])
         p = jnp.where(mask[:, None, None], p, 0.0)
+        # p is 0 on masked lanes but the page holds garbage there
+        # (0·NaN = NaN): zero masked V before the contraction
+        vs = jnp.where(mask[..., None, None], vs.astype(jnp.float32), 0.0)
         corr = jnp.exp(m - m_new)
         l_new = l * corr + p.sum(-1)
         acc_new = acc * corr[..., None] + jnp.einsum(
-            "bhgc,bchd->bhgd", p, vs.astype(jnp.float32))
+            "bhgc,bchd->bhgd", p, vs)
         return (m_new, l_new, acc_new), None
 
     m0 = jnp.full((B, hkv, g), NEG_INF, jnp.float32)
@@ -191,7 +198,8 @@ def paged_decode_attention_mla(q_nope_abs, q_rope, kv_pool, block_tables,
     mask = jnp.arange(T)[None, :] < seq_lens[:, None]
     s = jnp.where(mask[:, None], s, NEG_INF)
     p = jax.nn.softmax(s, -1)
-    o = jnp.einsum("bht,bte->bhe", p, entries.astype(jnp.float32))
+    ent_o = jnp.where(mask[..., None], entries.astype(jnp.float32), 0.0)
+    o = jnp.einsum("bht,bte->bhe", p, ent_o)
     return o[..., :r].astype(q_nope_abs.dtype)
 
 
@@ -219,5 +227,7 @@ def paged_prefill_attention(q, k_pool, v_pool, block_tables, q_start,
         mask &= kpos[:, None] > qpos[..., None] - local_window
     s = jnp.where(mask[:, None, None], s, NEG_INF)
     p = jax.nn.softmax(s, -1)
-    o = jnp.einsum("bhgst,bthd->bshgd", p, vs.astype(jnp.float32))
+    kv_valid = kpos < kv_lens[:, None]                             # (B, T)
+    vs = jnp.where(kv_valid[..., None, None], vs.astype(jnp.float32), 0.0)
+    o = jnp.einsum("bhgst,bthd->bshgd", p, vs)
     return o.reshape(B, S, hq, d).astype(q.dtype)

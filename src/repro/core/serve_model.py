@@ -47,6 +47,13 @@ class ServeSpec:
     # repro.kernels.ops backend name — auto | jnp | pallas-interpret |
     # pallas-tpu (+ deprecated alias "pallas"). Resolved once at trace time.
     attn_backend: str = "auto"
+    # decode kernel family: "ragged" (length-aware — per-slot work scales
+    # with the slot's live block count, docs/KERNELS.md "Ragged decode")
+    # or "dense" (every slot pays pool-wide max_blocks). Token streams are
+    # bit-identical between the two on every backend; the knob exists as a
+    # fallback/ablation switch. Ignored by the "chunked" attn_backend and
+    # by MLA models (latent-cache decode has its own path).
+    decode_kernel: str = "ragged"
     # KV-head replication for TP > h_kv (vLLM-style): pools store
     # h_kv * kv_replication head slots laid out repeat-consecutive
     # [kv0, kv0, ..., kv1, kv1, ...] so model-shard s's q-head group maps to
@@ -190,6 +197,10 @@ def _decode_attn(cfg, spec, p, x, carry, a_idx, write_pos, attend_len,
         if spec.attn_backend == "chunked":
             o = paged.paged_decode_attention_chunked(q, k_l, v_l, bt,
                                                      attend_len)
+        elif spec.decode_kernel == "ragged":
+            from repro.kernels import ops as kops
+            o = kops.ragged_decode_attention(q, k_l, v_l, bt, attend_len,
+                                             backend=spec.attn_backend)
         else:
             from repro.kernels import ops as kops
             backend = kops.resolve_backend(spec.attn_backend)
@@ -763,5 +774,9 @@ def _paged_prefill_mla(q_full, kv_pool, bt, q_start, kv_lens, r, scale):
         (kpos[:, None] < kv_lens[:, None, None])
     s = jnp.where(mask[:, None], s, paged.NEG_INF)
     pr = jax.nn.softmax(s, -1)
-    o = jnp.einsum("bhst,bte->bshe", pr, entries.astype(jnp.float32))
+    # entries past kv_lens are pool garbage gathered through clamped -1
+    # table slots; pr is 0 there but 0·NaN = NaN — zero them first
+    kv_valid = kpos < kv_lens[:, None]                  # (P, T)
+    ent_o = jnp.where(kv_valid[..., None], entries.astype(jnp.float32), 0.0)
+    o = jnp.einsum("bhst,bte->bshe", pr, ent_o)
     return o[..., :r].astype(q_full.dtype)

@@ -20,9 +20,10 @@ import functools
 
 import jax
 import jax.numpy as jnp
+import numpy as np
 
 from repro.kernels import compaction, paged_attention as pa, paged_score, \
-    redundancy
+    ragged_paged_attention as rpa, redundancy
 from repro.kernels import pallas_compat, ref
 from repro.core import paged as paged_ref
 
@@ -53,6 +54,37 @@ def _interpret(backend: str) -> bool:
 
 
 # ----------------------------------------------------------------------
+# host-side block-table width trim (shared by every dense-grid caller)
+
+
+def block_table_width(max_used_blocks, table_width, *, bucket=True,
+                      min_width=1):
+    """Width policy for host-side block-table trims: the batch's max used
+    block count, optionally rounded up to a power of two so only
+    O(log table_width) widths are ever traced/compiled, capped at the
+    table's own width."""
+    w = max(int(min_width), int(max_used_blocks))
+    if bucket:
+        w = 1 << max(0, w - 1).bit_length()
+    return min(w, int(table_width))
+
+
+def trim_block_tables(block_tables, seq_lens, block_size, *, bucket=True,
+                      min_width=1):
+    """Slice ``block_tables`` (host-side, numpy) to the batch's max used
+    block count before dispatch, so dense-grid kernels (paged_score,
+    redundancy, the dense decode kernel) stop iterating pool-wide
+    ``max_blocks``. Returns ``(trimmed_view, width)``. Call with concrete
+    host arrays — inside jit the width would be traced and useless."""
+    bt = np.asarray(block_tables)
+    sl = np.asarray(seq_lens)
+    used = int(-(-sl.max(initial=0) // block_size)) if sl.size else 0
+    width = block_table_width(used, bt.shape[1], bucket=bucket,
+                              min_width=min_width)
+    return bt[:, :width], width
+
+
+# ----------------------------------------------------------------------
 # dispatch wrappers: resolve once, then jit with the canonical name static
 
 
@@ -70,6 +102,29 @@ def _paged_decode_attention(q, k_pages, v_pages, block_tables, seq_lens, *,
                                   seq_lens, interpret=_interpret(backend))
     return paged_ref.paged_decode_attention(q, k_pages, v_pages,
                                             block_tables, seq_lens)
+
+
+def ragged_decode_attention(q, k_pages, v_pages, block_tables, seq_lens,
+                            backend="auto"):
+    """Length-aware decode attention (docs/KERNELS.md "Ragged decode"):
+    per-slot work proportional to the slot's live block count; rows with
+    ``seq_len == 0`` return exact zeros. The jnp path shares the dense
+    reference math (bit-identical for live rows), so flipping
+    ragged<->dense never changes a token stream."""
+    return _ragged_decode_attention(q, k_pages, v_pages, block_tables,
+                                    seq_lens,
+                                    backend=resolve_backend(backend))
+
+
+@functools.partial(jax.jit, static_argnames=("backend",))
+def _ragged_decode_attention(q, k_pages, v_pages, block_tables, seq_lens, *,
+                             backend):
+    if _is_pallas(backend):
+        return rpa.ragged_paged_attention(q, k_pages, v_pages, block_tables,
+                                          seq_lens,
+                                          interpret=_interpret(backend))
+    return ref.ragged_paged_attention_ref(q, k_pages, v_pages, block_tables,
+                                          seq_lens)
 
 
 def score_logits(q_win, k_pages, block_tables, seq_lens, backend="auto"):

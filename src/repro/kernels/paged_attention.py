@@ -51,6 +51,10 @@ def _kernel(block_tables, seq_lens,      # scalar prefetch
     m_new = jnp.maximum(m_prev, s.max(axis=1, keepdims=True))
     p = jnp.exp(s - m_new)
     p = jnp.where(valid, p, 0.0)
+    # p is 0 on masked lanes, but padded -1 table entries DMA real page 0
+    # and partial blocks hold stale pool data past seq_len — 0·NaN = NaN,
+    # so zero the masked V lanes before the contraction
+    v = jnp.where(valid.reshape(block_size, 1), v, 0.0)
     corr = jnp.exp(m_prev - m_new)
     l_s[...] = l_s[...] * corr + p.sum(axis=1, keepdims=True)
     acc_s[...] = acc_s[...] * corr + jax.lax.dot_general(

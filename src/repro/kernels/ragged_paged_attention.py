@@ -1,0 +1,176 @@
+"""Pallas TPU kernel: ragged paged decode attention (ROADMAP item 4).
+
+The dense kernel (``paged_attention.py``) runs a ``(B, h_kv, max_blocks)``
+grid: every slot pays the pool-wide table width in DMA'd page stripes and
+``-1`` padding entries are clamped to real page 0 before the mask kills
+their contribution. This kernel makes the per-slot work proportional to
+the slot's *live* block count instead:
+
+  * the grid drops to ``(B, max_blocks)`` with the block dim sequential;
+    per-slot block counts ``nb = ceil(seq_len / b)`` are scalar-prefetched
+    and gate every compute step with ``@pl.when(i < nb[ib])``,
+  * the K/V ``index_map`` reads a table whose padded tail is clamped to
+    the row's *last live* block — consecutive grid steps that map the same
+    page issue no new DMA (Mosaic's revisit elision), so padded and
+    evicted blocks are never fetched. Page 0 is mapped only when a row is
+    fully inactive (``seq_len == 0``, no live block to clamp to) and even
+    then never read: the row's output is written as exact zeros,
+  * GQA head tiling: one grid step DMAs the whole ``(b, h_kv·d)``
+    contiguous page stripe once and contracts *all* ``h_q = h_kv·g`` query
+    heads against it in a single kv-head-batched MXU op — the dense
+    kernel's per-head ``(g, d)`` slivers (g = 4–8 for the 8B-class
+    configs) and its ``h_kv`` strided sub-stripe DMAs per page collapse
+    into one fused ``(h_kv·g, d)·(d, b)`` pass per page.
+
+Per-block online-softmax math is identical to the dense kernel, so for
+rows with ``seq_len > 0`` the two kernels are bit-identical (a skipped
+block is exactly the dense kernel's no-op update: ``corr = 1``, zero
+probability mass); ``seq_len == 0`` rows return exact zeros instead of
+the dense reference's garbage. Compressed rows need nothing special:
+compression shrinks ``seq_lens`` (their rotary positions run ahead via
+``Request.pos_gap``, which is applied outside the kernel), so fewer pages
+are visited — the memory win becomes a decode-latency win.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+from jax.experimental import pallas as pl
+
+from repro.kernels import pallas_compat
+
+NEG_INF = -1e30
+
+
+def _kernel(bt, nb, seq_lens,            # scalar prefetch
+            q_ref, k_ref, v_ref,         # VMEM tiles
+            o_ref,                       # output tile
+            m_s, l_s, acc_s,             # scratch
+            *, block_size, scale):
+    ib = pl.program_id(0)
+    i = pl.program_id(1)
+
+    @pl.when(i == 0)
+    def _init():
+        m_s[...] = jnp.full_like(m_s, NEG_INF)
+        l_s[...] = jnp.zeros_like(l_s)
+        acc_s[...] = jnp.zeros_like(acc_s)
+        # rows with no live blocks never reach _finish: define their
+        # output as exact zeros (the jnp oracle matches this contract)
+        o_ref[...] = jnp.zeros_like(o_ref)
+
+    hkv, g = q_ref.shape[1], q_ref.shape[2]
+
+    @pl.when(i < nb[ib])
+    def _compute():
+        q = q_ref[0].astype(jnp.float32)                # (hkv, g, d)
+        k = k_ref[0].astype(jnp.float32)                # (b, hkv, d)
+        v = v_ref[0].astype(jnp.float32)                # (b, hkv, d)
+        if g > 1:
+            # GQA: all h_q heads against the whole page in one
+            # kv-head-batched MXU pass
+            s = jax.lax.dot_general(
+                q, k, (((2,), (2,)), ((0,), (1,))),
+                preferred_element_type=jnp.float32) * scale  # (hkv, g, b)
+            kpos = i * block_size + jax.lax.broadcasted_iota(
+                jnp.int32, (1, 1, block_size), 2)
+            valid = kpos < seq_lens[ib]
+            s = jnp.where(valid, s, NEG_INF)
+
+            m_prev = m_s[...]
+            m_new = jnp.maximum(m_prev, s.max(axis=2, keepdims=True))
+            p = jnp.exp(s - m_new)
+            p = jnp.where(valid, p, 0.0)
+            # a partially-filled last block holds stale pool data past
+            # seq_len (NaNs included); p is 0 there but 0·NaN = NaN, so
+            # zero V too
+            v = jnp.where(valid.reshape(block_size, 1, 1), v, 0.0)
+            corr = jnp.exp(m_prev - m_new)
+            l_s[...] = l_s[...] * corr + p.sum(axis=2, keepdims=True)
+            acc_s[...] = acc_s[...] * corr + jax.lax.dot_general(
+                p, v, (((2,), (0,)), ((0,), (1,))),
+                preferred_element_type=jnp.float32)
+            m_s[...] = m_new
+        else:
+            # MHA (g == 1): the batched form is a stack of (1, d) matvecs
+            # — no MXU win, and XLA lowers stacked small ops differently
+            # from the dense kernel's per-head 2D graph, breaking bitwise
+            # identity. Unroll heads with the dense kernel's exact ops so
+            # every shape stays bit-identical to the dense path.
+            kpos = i * block_size + jax.lax.broadcasted_iota(
+                jnp.int32, (1, block_size), 1)
+            valid = kpos < seq_lens[ib]
+            for h in range(hkv):
+                s = jax.lax.dot_general(
+                    q[h], k[:, h], (((1,), (1,)), ((), ())),
+                    preferred_element_type=jnp.float32) * scale  # (g, b)
+                s = jnp.where(valid, s, NEG_INF)
+                m_prev = m_s[h]
+                m_new = jnp.maximum(m_prev, s.max(axis=1, keepdims=True))
+                p = jnp.exp(s - m_new)
+                p = jnp.where(valid, p, 0.0)
+                vh = jnp.where(valid.reshape(block_size, 1), v[:, h], 0.0)
+                corr = jnp.exp(m_prev - m_new)
+                l_s[h] = l_s[h] * corr + p.sum(axis=1, keepdims=True)
+                acc_s[h] = acc_s[h] * corr + jax.lax.dot_general(
+                    p, vh, (((1,), (0,)), ((), ())),
+                    preferred_element_type=jnp.float32)
+                m_s[h] = m_new
+
+    @pl.when(i == nb[ib] - 1)
+    def _finish():
+        o_ref[0] = (acc_s[...] /
+                    jnp.maximum(l_s[...], 1e-30)).astype(o_ref.dtype)
+
+
+def ragged_paged_attention(q, k_pages, v_pages, block_tables, seq_lens, *,
+                           interpret=True):
+    """q: (B, h_q, d); pools: (N, b, h_kv, d); block_tables: (B, mb) with
+    ``-1`` padding; seq_lens: (B,). Returns (B, h_q, d); rows with
+    ``seq_len == 0`` are exact zeros."""
+    B, hq, d = q.shape
+    N, b, hkv, _ = k_pages.shape
+    g = hq // hkv
+    mb = block_tables.shape[1]
+    scale = 1.0 / np.sqrt(d)
+    qr = q.reshape(B, hkv, g, d)
+    seq_lens = seq_lens.astype(jnp.int32)
+    nb = (seq_lens + (b - 1)) // b                       # live blocks/row
+    # clamp the padded tail to each row's last live block so revisited
+    # steps issue no DMA; only fully-inactive rows (nb == 0, all -1) fall
+    # back to page 0, and those never read or write from it
+    col = jnp.minimum(jnp.arange(mb, dtype=jnp.int32)[None, :],
+                      jnp.maximum(nb - 1, 0)[:, None])
+    bt = jnp.take_along_axis(block_tables.astype(jnp.int32), col, axis=1)
+    bt = jnp.maximum(bt, 0)
+
+    grid_spec = pallas_compat.prefetch_grid_spec(
+        num_scalar_prefetch=3,
+        grid=(B, mb),
+        in_specs=[
+            pl.BlockSpec((1, hkv, g, d),
+                         lambda ib, i, bt, nb, sl: (ib, 0, 0, 0)),
+            pl.BlockSpec((1, b, hkv, d),
+                         lambda ib, i, bt, nb, sl: (bt[ib, i], 0, 0, 0)),
+            pl.BlockSpec((1, b, hkv, d),
+                         lambda ib, i, bt, nb, sl: (bt[ib, i], 0, 0, 0)),
+        ],
+        out_specs=pl.BlockSpec((1, hkv, g, d),
+                               lambda ib, i, bt, nb, sl: (ib, 0, 0, 0)),
+        scratch_shapes=[
+            pallas_compat.vmem_scratch((hkv, g, 1), jnp.float32),
+            pallas_compat.vmem_scratch((hkv, g, 1), jnp.float32),
+            pallas_compat.vmem_scratch((hkv, g, d), jnp.float32),
+        ],
+    )
+    out = pallas_compat.pallas_call(
+        functools.partial(_kernel, block_size=b, scale=scale),
+        grid_spec=grid_spec,
+        out_shape=jax.ShapeDtypeStruct((B, hkv, g, d), q.dtype),
+        dimension_semantics=("parallel", "arbitrary"),
+        interpret=interpret,
+    )(bt, nb, seq_lens, qr, k_pages, v_pages)
+    return out.reshape(B, hq, d)

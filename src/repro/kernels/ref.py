@@ -10,6 +10,18 @@ from repro.core.paged import gather_entries, paged_decode_attention  # noqa: F40
 from repro.core import scoring
 
 
+def ragged_paged_attention_ref(q, k_pages, v_pages, block_tables, seq_lens):
+    """Oracle for kernels.ragged_paged_attention: identical math to the
+    dense reference (masked lanes carry exactly zero V, so the two are
+    bit-identical for rows with ``seq_len > 0``); rows with
+    ``seq_len == 0`` return exact zeros — the ragged kernel's contract for
+    inactive slots."""
+    out = paged_decode_attention(q, k_pages, v_pages, block_tables,
+                                 seq_lens)
+    return jnp.where((seq_lens > 0)[:, None, None], out,
+                     jnp.zeros_like(out))
+
+
 def paged_score_logits_ref(q_win, k_pages, block_tables, seq_lens):
     """Oracle for kernels.paged_score.paged_score_logits."""
     n, w, hq, d = q_win.shape

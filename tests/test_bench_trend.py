@@ -196,3 +196,55 @@ def test_accuracy_gate_single_point_and_mixed_history(tmp_path):
     assert bench_trend.main(files) == 1
     files[3] = write(tmp_path, "001-eval.json", eval_point(0.34, 0.30))
     assert bench_trend.main(files) == 0
+
+def kernels_v2_point(dense_us=5000.0, ragged_us=4000.0):
+    """Schema-v2 point: the ragged decode rows plus the long-context DMA
+    footprint summary (ISSUE 9)."""
+    return {
+        "schema": "zipage-bench-kernels/v2", "jax": "0", "platform": "cpu",
+        "smoke": True,
+        "results": [
+            {"name": "paged_attention", "backend": "jnp",
+             "us_per_call": 50.0},
+            {"name": "ragged_attention", "backend": "jnp",
+             "us_per_call": 45.0},
+            {"name": "paged_attention_long", "backend": "jnp",
+             "us_per_call": dense_us},
+            {"name": "ragged_attention_long", "backend": "jnp",
+             "us_per_call": ragged_us},
+        ],
+        "long_context": {"seq_lens": [4096, 512, 64, 0], "block_size": 64,
+                         "max_blocks": 64, "pages_visited": 73,
+                         "pages_dense": 256, "pages_ratio": 0.2852},
+    }
+
+
+def test_kernels_v2_speedup_column_and_gate(tmp_path):
+    """The v2 kernels table grows the derived ragged-vs-dense speedup
+    row, and the kernel gate compares the newest two speedup ratios."""
+    files = [write(tmp_path, "000-k.json", kernels_v2_point(5000, 4000)),
+             write(tmp_path, "001-k.json", kernels_v2_point(5200, 4100))]
+    out = tmp_path / "TREND.md"
+    assert bench_trend.main(files + ["--out", str(out)]) == 0
+    text = out.read_text()
+    assert "ragged_attention_long/jnp" in text
+    assert "ragged-vs-dense (long, jnp)" in text
+    assert "1.25x" in text and "1.27x" in text
+    # newest speedup collapsing below the floor fails the gate
+    files[1] = write(tmp_path, "001-k.json", kernels_v2_point(5000, 5600))
+    assert bench_trend.main(files) == 1
+    # looser threshold passes again
+    assert bench_trend.main(files + ["--max-regression", "0.5"]) == 0
+
+
+def test_kernels_v1_history_mixes_with_v2(tmp_path):
+    """v1 history (no long-context rows) must neither break the table nor
+    trip the kernel gate: the series gates only between points that both
+    carry it."""
+    files = [write(tmp_path, "000-k.json", kernels_point()),
+             write(tmp_path, "001-k.json", kernels_v2_point())]
+    out = tmp_path / "TREND.md"
+    assert bench_trend.main(files + ["--out", str(out)]) == 0
+    text = out.read_text()
+    assert "scoring/jnp" in text and "ragged_attention_long/jnp" in text
+    assert "trivially OK" in text

@@ -1,0 +1,205 @@
+"""Ragged paged decode attention (ISSUE 9): parity, bitwise identity,
+the padded-entry page-0 convention, and the host-side table trim.
+
+The ragged kernel's contract is strict: for rows with ``seq_len > 0`` it
+is *bit-identical* to the dense kernel on every backend (flipping
+ragged<->dense must never change a token stream), rows with
+``seq_len == 0`` return exact zeros, and page 0 — the dense path's
+clamp target for ``-1`` padding — is never read, so a poisoned page 0
+cannot leak into any output."""
+import dataclasses
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.configs import get_config
+from repro.core import paged
+from repro.core.compression import CompressOptions
+from repro.core.engine import EngineOptions, ZipageEngine
+from repro.core.sampling import SamplingParams
+from repro.kernels import ops
+from repro.models import lm
+
+BACKENDS = ("jnp", "pallas-interpret")
+
+# GQA shapes from the 8B-class configs: MHA, g=4, and a wide g=4 head
+# count (plus tiny-lm's g=2 exercised by the engine tests below)
+GQA_SHAPES = [(4, 4), (8, 2), (32, 8)]
+
+# ragged length mixes: inactive slots (0), sub-block rows, block-aligned
+# rows, full-table rows and compressed-style short rows (compression
+# shrinks seq_len while rotary positions run ahead via Request.pos_gap —
+# from the kernel's point of view that is just a shorter row)
+LENGTH_MIXES = [
+    [0, 1, 7, 24, 13],
+    [24, 24, 24, 24, 24],
+    [0, 0, 0, 0, 0],
+    [3, 8, 9, 16, 0],
+    [1, 2, 3, 4, 5],
+]
+
+
+def make_case(hq, hkv, seq_lens, seed=0, d=16, b=4, mb=6, n_pages=64,
+              dtype=np.float32):
+    rng = np.random.default_rng(seed)
+    B = len(seq_lens)
+    q = rng.normal(size=(B, hq, d)).astype(dtype)
+    kp = rng.normal(size=(n_pages, b, hkv, d)).astype(dtype)
+    vp = rng.normal(size=(n_pages, b, hkv, d)).astype(dtype)
+    sl = np.asarray(seq_lens, np.int32)
+    bt = np.full((B, mb), -1, np.int32)
+    pool = list(rng.permutation(np.arange(1, n_pages)))  # never page 0
+    for i in range(B):
+        for j in range(-(-int(sl[i]) // b)):
+            bt[i, j] = pool.pop()
+    return q, kp, vp, bt, sl
+
+
+@pytest.mark.parametrize("hq,hkv", GQA_SHAPES)
+@pytest.mark.parametrize("mix", range(len(LENGTH_MIXES)))
+def test_ragged_parity_jnp_vs_interpret(hq, hkv, mix):
+    q, kp, vp, bt, sl = make_case(hq, hkv, LENGTH_MIXES[mix], seed=mix)
+    out = {be: np.asarray(ops.ragged_decode_attention(q, kp, vp, bt, sl,
+                                                      backend=be))
+           for be in BACKENDS}
+    np.testing.assert_allclose(out["jnp"], out["pallas-interpret"],
+                               rtol=2e-5, atol=2e-5)
+    # inactive rows are exact zeros on every backend
+    for o in out.values():
+        assert np.all(o[sl == 0] == 0)
+
+
+@pytest.mark.parametrize("hq,hkv", GQA_SHAPES + [(2, 2), (8, 1), (4, 2)])
+def test_ragged_bitwise_identical_to_dense(hq, hkv):
+    """The hard guarantee behind the ``decode_kernel`` fallback knob: for
+    live rows the ragged kernel is bit-identical to the dense kernel on
+    both backends (f32 — no tolerance)."""
+    q, kp, vp, bt, sl = make_case(hq, hkv, [0, 1, 7, 24, 13], seed=1)
+    live = sl > 0
+    for be in BACKENDS:
+        r = np.asarray(ops.ragged_decode_attention(q, kp, vp, bt, sl,
+                                                   backend=be))
+        d = np.asarray(ops.paged_decode_attention(q, kp, vp, bt, sl,
+                                                  backend=be))
+        assert np.array_equal(r[live], d[live]), be
+
+
+def test_padded_entries_do_not_fetch_page0():
+    """Regression for the ``jnp.maximum(block_tables, 0)`` convention:
+    ``-1`` padding clamps to *real* page 0, and before the V-side masking
+    fix a NaN-poisoned page 0 leaked through 0·NaN in the contraction.
+    Poison page 0 (and each row's stale tail past seq_len) and require
+    outputs identical to the clean pool on every backend, dense and
+    ragged, plus the chunked jnp reference."""
+    hq, hkv, b = 8, 2, 4
+    q, kp, vp, bt, sl = make_case(hq, hkv, [0, 1, 7, 24, 13], seed=2)
+    kp_bad, vp_bad = kp.copy(), vp.copy()
+    kp_bad[0] = np.nan
+    vp_bad[0] = np.nan
+    # stale garbage past each row's seq_len inside its own last block
+    for i, s in enumerate(sl):
+        if 0 < s % b:
+            blk = bt[i, s // b]
+            kp_bad[blk, s % b:] = np.nan
+            vp_bad[blk, s % b:] = np.nan
+    for fn in (ops.ragged_decode_attention, ops.paged_decode_attention):
+        for be in BACKENDS:
+            clean = np.asarray(fn(q, kp, vp, bt, sl, backend=be))
+            poisoned = np.asarray(fn(q, kp_bad, vp_bad, bt, sl, backend=be))
+            rows = (sl > 0) if fn is ops.paged_decode_attention else \
+                np.ones_like(sl, bool)
+            assert np.array_equal(clean[rows], poisoned[rows]), \
+                (fn.__name__, be)
+            assert np.all(np.isfinite(poisoned[rows])), (fn.__name__, be)
+    clean = np.asarray(paged.paged_decode_attention_chunked(
+        jnp.asarray(q), jnp.asarray(kp), jnp.asarray(vp),
+        jnp.asarray(bt), jnp.asarray(sl)))
+    poisoned = np.asarray(paged.paged_decode_attention_chunked(
+        jnp.asarray(q), jnp.asarray(kp_bad), jnp.asarray(vp_bad),
+        jnp.asarray(bt), jnp.asarray(sl)))
+    assert np.array_equal(clean[sl > 0], poisoned[sl > 0])
+
+
+def test_trim_block_tables():
+    bt = np.full((3, 32), -1, np.int32)
+    bt[0, :5] = np.arange(5)
+    bt[1, :2] = [7, 9]
+    sl = np.array([33, 16, 0], np.int32)            # b=8 -> 5 blocks used
+    trimmed, width = ops.trim_block_tables(bt, sl, 8)
+    assert width == 8                               # 5 -> pow-2 bucket
+    assert trimmed.shape == (3, 8)
+    assert np.array_equal(trimmed, bt[:, :8])
+    trimmed, width = ops.trim_block_tables(bt, sl, 8, bucket=False)
+    assert width == 5
+    # width never exceeds the table and never goes below min_width
+    assert ops.block_table_width(1000, 32) == 32
+    assert ops.block_table_width(0, 32, min_width=2) == 2
+    _, width = ops.trim_block_tables(bt, np.zeros((3,), np.int32), 8)
+    assert width == 1
+    # trimmed tables give identical attention output
+    q, kp, vp, bt, sl = make_case(8, 2, [0, 1, 7, 24, 13], seed=3)
+    tr, _ = ops.trim_block_tables(bt, sl, kp.shape[1])
+    for be in BACKENDS:
+        full = np.asarray(ops.ragged_decode_attention(q, kp, vp, bt, sl,
+                                                      backend=be))
+        trim = np.asarray(ops.ragged_decode_attention(q, kp, vp, tr, sl,
+                                                      backend=be))
+        assert np.array_equal(full, trim)
+
+
+# ----------------------------------------------------------------------
+# engine-level: ragged vs dense token streams are bit-identical
+
+CFG = dataclasses.replace(get_config("tiny-lm"), dtype="float32")
+PARAMS = lm.init(CFG, jax.random.key(0))
+PROMPTS = [[1, 2, 3, 4, 5], [9, 8, 7], [10, 11, 12, 13, 14, 15, 16],
+           [20, 21]]
+# greedy + seeded top-k/top-p; outputs long enough that compression
+# triggers (n_max=3 * block_size=8 = 24-token cap), so compressed rows
+# with pos_gap > 0 flow through the ragged kernel
+MIXED = [SamplingParams(max_new_tokens=28),
+         SamplingParams(max_new_tokens=28, temperature=0.8, top_k=5,
+                        seed=7),
+         SamplingParams(max_new_tokens=28, temperature=1.1, top_p=0.9,
+                        seed=3),
+         SamplingParams(max_new_tokens=28, temperature=0.7, seed=11)]
+
+
+def run_streams(**kw):
+    base = dict(block_size=8, n_total_blocks=64, max_batch=4, m_qslots=4,
+                n_max=3, window=4, max_model_len=256, prefill_rows=2,
+                prefill_len=64, compress=CompressOptions(window=4))
+    base.update(kw)
+    eng = ZipageEngine(CFG, PARAMS, EngineOptions(**base))
+    rids = [eng.add_request(p, sp) for p, sp in zip(PROMPTS, MIXED)]
+    done = eng.run(max_steps=500)
+    streams = [done[r].output for r in rids]
+    assert all(len(s) for s in streams)
+    assert sum(m["n_compressing"] for m in eng.metrics) > 0
+    return streams, eng
+
+
+@pytest.mark.parametrize("backend", BACKENDS)
+def test_engine_streams_bit_identical_ragged_vs_dense(backend):
+    ragged, eng = run_streams(kernel_backend=backend,
+                              decode_kernel="ragged", decode_steps=4)
+    dense, _ = run_streams(kernel_backend=backend,
+                           decode_kernel="dense", decode_steps=4)
+    assert ragged == dense
+    # the ragged path's DMA footprint telemetry is live and sub-dense
+    pv = sum(m["pages_visited"] for m in eng.metrics)
+    pd = sum(m["pages_dense"] for m in eng.metrics)
+    assert 0 < pv < pd
+
+
+def test_decode_kernel_knob_validated():
+    from repro.api.config import (CacheConfig, ModelRunnerConfig,
+                                  SchedulerConfig, build_engine_options)
+    with pytest.raises(ValueError, match="decode_kernel"):
+        build_engine_options(CacheConfig(), SchedulerConfig(),
+                             ModelRunnerConfig(decode_kernel="nope"))
+    opts = build_engine_options(CacheConfig(), SchedulerConfig(),
+                                ModelRunnerConfig(decode_kernel="dense"))
+    assert opts.decode_kernel == "dense"

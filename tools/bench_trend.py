@@ -4,8 +4,11 @@ table and gate on decode-throughput regressions (``make bench-trend``).
 
 CI uploads ``bench-concurrency-smoke.json`` (schema
 ``zipage-bench-concurrency/v1..v4``) and ``bench-kernels-smoke.json``
-(``zipage-bench-kernels/v1``) for every PR (ROADMAP "Multi-backend bench
-trajectory"). Feed this tool those artifacts **in chronological order**
+(``zipage-bench-kernels/v1..v2``) for every PR (ROADMAP "Multi-backend
+bench trajectory"). v2 kernels points also gate the ragged decode
+kernel: the newest point's ragged-vs-dense long-context speedup ratio
+must not drop more than ``--max-regression`` below the previous
+point's (same-point ratios, so host-speed noise between runs cancels). Feed this tool those artifacts **in chronological order**
 (oldest first — e.g. a ``bench-history/`` directory of downloaded
 artifacts plus the freshly produced smoke JSON):
 
@@ -38,7 +41,8 @@ CONCURRENCY_SCHEMAS = ("zipage-bench-concurrency/v1",
                        "zipage-bench-concurrency/v2",
                        "zipage-bench-concurrency/v3",
                        "zipage-bench-concurrency/v4")
-KERNELS_SCHEMAS = ("zipage-bench-kernels/v1",)
+KERNELS_SCHEMAS = ("zipage-bench-kernels/v1",
+                   "zipage-bench-kernels/v2")
 EVAL_SCHEMAS = ("zipage-eval/v1",)
 QUALITY_SCHEMAS = ("zipage-bench-quality/v1",)
 
@@ -51,6 +55,17 @@ GATED_SERIES = (("zipage", "zipage"), ("oversub_swap", "swap-mode"))
 #: anchor and the paper's headline "~95% of Full-KV" budget)
 GATED_EVAL_SERIES = (("full_kv", "full-KV accuracy"),
                      ("n4_w4", "n4 accuracy"))
+
+#: kernel speedup series the ragged-decode gate watches: (dense row,
+#: ragged row, backend, label). v2 kernels points carry the 4k+
+#: mixed-length long-context pair; v1 history lacks it and passes
+#: trivially
+KERNEL_SPEEDUP_SERIES = (
+    ("paged_attention_long", "ragged_attention_long", "jnp",
+     "ragged-vs-dense (long, jnp)"),
+    ("paged_attention_long", "ragged_attention_long", "pallas-interpret",
+     "ragged-vs-dense (long, interpret)"),
+)
 
 
 def load_points(paths):
@@ -165,13 +180,38 @@ def kernels_table(points):
     for name, backend in names:
         row = [f"| {name}/{backend}"]
         for pt in points:
-            us = next((r.get("us_per_call")
-                       for r in pt["data"].get("results", [])
-                       if r.get("name") == name
-                       and r.get("backend") == backend), None)
+            us = _kernel_us(pt["data"], name, backend)
             row.append(f" {'-' if us is None else us}")
         lines.append(" |".join(row) + " |")
+    # derived ragged-vs-dense speedup columns (v2 long-context pair):
+    # dense us / ragged us per point, '-' where the point lacks the rows
+    for dense, ragged, backend, label in KERNEL_SPEEDUP_SERIES:
+        vals = [_kernel_speedup(pt["data"], dense, ragged, backend)
+                for pt in points]
+        if not any(v is not None for v in vals):
+            continue
+        lines.append(
+            "| " + label + " |" +
+            "|".join(f" {'-' if v is None else round(v, 2)}x "
+                     if v is not None else " - " for v in vals) + "|")
     return lines
+
+
+def _kernel_us(data, name, backend):
+    for r in data.get("results", []):
+        if r.get("name") == name and r.get("backend") == backend:
+            return r.get("us_per_call")
+    return None
+
+
+def _kernel_speedup(data, dense_name, ragged_name, backend):
+    """dense/ragged us ratio for one point, None when either row (or a
+    sane ragged time) is missing."""
+    dense = _kernel_us(data, dense_name, backend)
+    ragged = _kernel_us(data, ragged_name, backend)
+    if not dense or not ragged:
+        return None
+    return dense / ragged
 
 
 def quality_table(eval_points, quality_points):
@@ -238,6 +278,29 @@ def check_accuracy(eval_points, max_accuracy_drop):
     return ok, "accuracy gate: " + "; ".join(msgs)
 
 
+def check_kernels(points, max_regression):
+    """(ok, message) for the ragged decode kernel's long-context speedup
+    over the dense kernel, newest vs previous kernels point. Gating on
+    the same-point *ratio* (not raw us/call) keeps the gate robust to
+    host-speed noise between CI runs; points without the v2 long-context
+    rows (all v1 history) pass trivially."""
+    ok, msgs = True, []
+    for dense, ragged, backend, label in KERNEL_SPEEDUP_SERIES:
+        sp = [(pt["label"],
+               _kernel_speedup(pt["data"], dense, ragged, backend))
+              for pt in points]
+        sp = [(lbl, s) for lbl, s in sp if s is not None]
+        if len(sp) < 2:
+            msgs.append(f"{label}: <2 points, trivially OK")
+            continue
+        (prev_label, prev), (cur_label, cur) = sp[-2], sp[-1]
+        floor = (1.0 - max_regression) * prev
+        msgs.append(f"{label}: {cur_label} {cur:.2f}x vs "
+                    f"{prev_label} {prev:.2f}x (floor {floor:.2f}x)")
+        ok = ok and cur >= floor
+    return ok, "kernel gate: " + "; ".join(msgs)
+
+
 def check_regression(points, max_regression):
     """(ok, message) for the newest vs previous decode tps, across every
     gated series (plain zipage + v3's swap-mode oversubscribed run). Each
@@ -290,7 +353,8 @@ def main(argv=None):
         lines += qt + [""]
     ok, gate_msg = check_regression(concurrency, args.max_regression)
     acc_ok, acc_msg = check_accuracy(evals, args.max_accuracy_drop)
-    lines += [f"_{gate_msg}_", "", f"_{acc_msg}_", ""]
+    kern_ok, kern_msg = check_kernels(kernels, args.max_regression)
+    lines += [f"_{gate_msg}_", "", f"_{acc_msg}_", "", f"_{kern_msg}_", ""]
     text = "\n".join(lines)
     if args.out:
         Path(args.out).write_text(text)
@@ -302,12 +366,14 @@ def main(argv=None):
     if not concurrency and not kernels and not evals and not quality:
         print("bench-trend: no recognised bench JSONs", file=sys.stderr)
         return 2
-    if not ok or not acc_ok:
+    if not ok or not acc_ok or not kern_ok:
         failed = "; ".join(m for okk, m in
-                           ((ok, gate_msg), (acc_ok, acc_msg)) if not okk)
+                           ((ok, gate_msg), (acc_ok, acc_msg),
+                            (kern_ok, kern_msg)) if not okk)
         print(f"bench-trend: FAIL — {failed}", file=sys.stderr)
         return 1
-    print(f"bench-trend: OK — {gate_msg}; {acc_msg}", file=sys.stderr)
+    print(f"bench-trend: OK — {gate_msg}; {acc_msg}; {kern_msg}",
+          file=sys.stderr)
     return 0
 
 
