@@ -1,9 +1,9 @@
 PYTHON ?= python
 export PYTHONPATH := src$(if $(PYTHONPATH),:$(PYTHONPATH))
 
-.PHONY: test test-fast test-sanitize test-soak lint zipalint docs-check \
-	quickstart bench bench-kernels bench-concurrency bench-quality \
-	bench-trend eval-smoke install-dev
+.PHONY: test test-fast test-sanitize test-soak test-serve lint zipalint \
+	docs-check quickstart bench bench-kernels bench-concurrency \
+	bench-quality bench-serving bench-trend eval-smoke install-dev serve
 
 # tier-1 verify (ROADMAP.md). Local default is fail-fast; CI overrides
 # PYTEST_ARGS (e.g. --junitxml=...) and drops -x so junit reports are
@@ -36,6 +36,12 @@ docs-check:
 test-fast:
 	$(PYTHON) -m pytest -q tests/test_api.py tests/test_engine.py tests/test_scheduler.py tests/test_block_manager.py
 
+# serving tier (docs/SERVING.md): async facade + HTTP protocol + the
+# disconnect/backpressure/drain races, with the runtime sanitizer armed
+# — CI's serve-smoke job runs exactly this
+test-serve:
+	ZIPAGE_SANITIZE=1 $(PYTHON) -m pytest -q $(PYTEST_ARGS) tests/test_aio.py tests/test_serve.py
+
 # randomized engine soak: seeded fuzz workloads across the scheduler
 # policy x preemption-mode x fused-horizon matrix with ZIPAGE_SANITIZE=1
 # armed (the tests arm it themselves), plus the prefix-cache property
@@ -65,7 +71,7 @@ bench-concurrency:
 # oversubscribed points exist) vs the previous point. CI seeds
 # bench-history/ from the last successful main run's artifact; locally,
 # drop downloaded per-PR artifacts there to grow the trajectory.
-BENCH_TREND_FILES ?= $(sort $(wildcard bench-history/*.json)) bench-concurrency-smoke.json bench-kernels-smoke.json $(wildcard eval-smoke.json) $(wildcard bench-quality-smoke.json)
+BENCH_TREND_FILES ?= $(sort $(wildcard bench-history/*.json)) bench-concurrency-smoke.json bench-kernels-smoke.json $(wildcard eval-smoke.json) $(wildcard bench-quality-smoke.json) $(wildcard bench-serving-smoke.json)
 bench-trend:
 	$(PYTHON) tools/bench_trend.py $(BENCH_TREND_FILES) --out BENCH_TREND.md
 
@@ -73,6 +79,16 @@ bench-trend:
 # uploads the JSON next to the eval report (docs/EVAL.md)
 bench-quality:
 	$(PYTHON) -m benchmarks.bench_quality_proxy --smoke --out bench-quality-smoke.json
+
+# serving-tier latency smoke (docs/SERVING.md): Poisson arrivals through
+# the in-process ASGI app — p50/p99 TTFT, inter-token latency, sustained
+# tok/s as the zipage-bench-serving/v1 point bench-trend gates
+bench-serving:
+	$(PYTHON) -m benchmarks.bench_serving --smoke --out bench-serving-smoke.json
+
+# run the OpenAI-compatible server on the tiny model (docs/SERVING.md)
+serve:
+	$(PYTHON) -m repro.serve --model tiny-lm
 
 # seeded reasoning eval across compression budgets (docs/EVAL.md): tiny-lm
 # trained on the task distribution, accuracy scored vs Full-KV, emitted as

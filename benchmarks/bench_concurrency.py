@@ -188,11 +188,11 @@ def _run_prefix_heavy(n_convs, **overrides):
     outs, dt = drive(z)
     metrics = z.metrics
     steps = z.step_count
-    toks = sum(o.n_tokens for o in outs)
+    toks = sum(o.usage.completion_tokens for o in outs)
     tpots = [(o.metrics.t_finish - o.metrics.t_first_token)
-             / (o.n_tokens - 1) for o in outs
+             / (o.usage.completion_tokens - 1) for o in outs
              if o.metrics.t_finish and o.metrics.t_first_token
-             and o.n_tokens > 1]
+             and o.usage.completion_tokens > 1]
     ttfts = [o.metrics.t_first_token - o.metrics.arrival for o in outs
              if o.metrics.t_first_token is not None]
     # warm = admitted with a cache hit. Cache-aware admission floats

@@ -154,7 +154,7 @@ def e2e_result(smoke=False):
     parity = all(
         a.token_ids == b.token_ids
         for a, b in zip(outs["jnp"], outs["pallas-interpret"]))
-    tokens = sum(o.n_tokens for o in outs["pallas-interpret"])
+    tokens = sum(o.usage.completion_tokens for o in outs["pallas-interpret"])
     return {
         "backend": "pallas-interpret",
         "wall_s": round(wall["pallas-interpret"], 3),

@@ -1,0 +1,162 @@
+"""Serving-tier latency bench: Poisson arrivals against the in-process
+ASGI app (``repro.serve``), measuring what an HTTP client actually sees —
+time-to-first-token, inter-token latency and sustained token throughput
+through the full intake -> continuous-batching-loop -> SSE fan-out path
+(docs/SERVING.md). No sockets: requests are driven through
+``repro.serve.testing.ASGIClient``, so the numbers isolate the serving
+tier itself and the job is CI-safe.
+
+  python -m benchmarks.bench_serving [--smoke] [--out FILE.json]
+
+JSON envelope, same shape as ``bench_concurrency.py``:
+
+  {"schema": "zipage-bench-serving/v1", "jax": ..., "platform": ...,
+   "smoke": bool, "results": [{"name": "serving_poisson", "n_requests",
+   "rate_rps", "n_ok", "n_rejected", "tokens", "steps", "wall_s", "tps",
+   "ttft_p50_ms", "ttft_p99_ms", "itl_mean_ms", "itl_p50_ms",
+   "itl_p99_ms"}]}
+
+Every request streams (SSE) with a per-client id rotated across a small
+client pool, so fairness tagging and the per-step fan-out are on the
+measured path.  The engine's fused decode flushes up to ``decode_steps``
+tokens per SSE frame; inter-token latency is therefore the frame gap
+normalised by the tokens the frame carried — the per-token pacing a
+client-side detokeniser would observe.  ``--smoke`` shrinks the request
+count for CI's bench-smoke job; ``tools/bench_trend.py`` accumulates the
+JSONs and gates on p99-TTFT blow-ups and serving-throughput regressions
+(``make bench-trend``).
+"""
+import argparse
+import asyncio
+import json
+import sys
+import time
+
+import numpy as np
+
+from benchmarks.common import CFG, DEFAULT_ENGINE, params_random, workload
+from repro.api import Zipage
+from repro.serve import ServeConfig, create_app
+from repro.serve.protocol import render_text
+from repro.serve.testing import ASGIClient
+
+CLIENTS = ("alice", "bob", "carol")
+
+
+async def _one_request(client, prompt, n_out, delay, cid, rec):
+    """Sleep until the request's Poisson arrival, then stream it and
+    timestamp every SSE frame that carried tokens."""
+    await asyncio.sleep(delay)
+    rec["submit"] = time.monotonic()
+    handle = client.stream(
+        "POST", "/v1/completions",
+        json={"prompt": render_text(prompt), "max_tokens": n_out,
+              "stream": True},
+        headers={"x-client-id": cid})
+    async with handle:
+        await handle.started()
+        rec["status"] = handle.status
+        if handle.status != 200:
+            return
+        async for event in handle.events():
+            if event == "[DONE]" or not event.get("choices"):
+                continue
+            ntok = len(event["choices"][0].get("token_ids", []))
+            if ntok:
+                rec["frames"].append((time.monotonic(), ntok))
+
+
+async def _drive(app, reqs, rate, rng):
+    """Run the full arrival schedule concurrently; returns per-request
+    records and the measured wall interval."""
+    client = ASGIClient(app)
+    # warm-up: compile the prefill/decode dispatches outside the clock
+    warm = {"frames": [], "status": None}
+    await _one_request(client, reqs[0][0], 4, 0.0, "warmup", warm)
+    assert warm["status"] == 200, f"warm-up failed: {warm['status']}"
+
+    delays = np.cumsum(rng.exponential(1.0 / rate, size=len(reqs)))
+    recs = [{"frames": [], "status": None} for _ in reqs]
+    t0 = time.monotonic()
+    await asyncio.gather(*(
+        _one_request(client, p, o, float(d), CLIENTS[i % len(CLIENTS)],
+                     recs[i])
+        for i, ((p, o), d) in enumerate(zip(reqs, delays))))
+    t1 = time.monotonic()
+    await app.state.drain()
+    return recs, t1 - t0
+
+
+def _measure(n_requests, rate):
+    rng = np.random.default_rng(7)
+    reqs = workload("gsm", n_requests, rng)       # short in, short out
+    zipage = Zipage(CFG, params_random(),
+                    **dict(DEFAULT_ENGINE, policy="priority"))
+    app = create_app(ServeConfig(max_queued_requests=max(64, n_requests)),
+                     zipage=zipage)
+    recs, wall = asyncio.run(_drive(app, reqs, rate, rng))
+
+    ok = [r for r in recs if r["status"] == 200 and r["frames"]]
+    ttfts = [r["frames"][0][0] - r["submit"] for r in ok]
+    # frame gap / tokens-in-frame: per-token pacing despite fused flushes
+    itls = [(t - prev_t) / ntok
+            for r in ok
+            for (prev_t, _), (t, ntok) in zip(r["frames"],
+                                              r["frames"][1:])]
+    tokens = sum(ntok for r in ok for _, ntok in r["frames"])
+    pct = lambda xs, q: (1e3 * float(np.percentile(xs, q))  # noqa: E731
+                         if xs else float("nan"))
+    return {
+        "name": "serving_poisson",
+        "n_requests": n_requests,
+        "rate_rps": rate,
+        "n_ok": len(ok),
+        "n_rejected": sum(r["status"] not in (200, None)
+                          for r in recs),
+        "tokens": tokens,
+        "steps": zipage.step_count,
+        "wall_s": round(wall, 3),
+        "tps": round(tokens / wall, 2),
+        "ttft_p50_ms": round(pct(ttfts, 50), 3),
+        "ttft_p99_ms": round(pct(ttfts, 99), 3),
+        "itl_mean_ms": round(1e3 * float(np.mean(itls)), 3)
+        if itls else float("nan"),
+        "itl_p50_ms": round(pct(itls, 50), 3),
+        "itl_p99_ms": round(pct(itls, 99), 3),
+    }
+
+
+def main(argv=None):
+    import jax
+
+    ap = argparse.ArgumentParser(description=__doc__.splitlines()[0])
+    ap.add_argument("--smoke", action="store_true",
+                    help="small request count (CI bench-smoke)")
+    ap.add_argument("--rate", type=float, default=None, metavar="RPS",
+                    help="Poisson arrival rate (default: 20 smoke, 10 full)")
+    ap.add_argument("--out", default=None, metavar="FILE.json",
+                    help="write the JSON report here (default: stdout)")
+    args = ap.parse_args(argv)
+
+    n = 12 if args.smoke else 32
+    rate = args.rate or (20.0 if args.smoke else 10.0)
+    row = _measure(n, rate)
+    report = {
+        "schema": "zipage-bench-serving/v1",
+        "jax": jax.__version__,
+        "platform": jax.default_backend(),
+        "smoke": args.smoke,
+        "results": [row],
+    }
+    text = json.dumps(report, indent=2)
+    if args.out:
+        with open(args.out, "w") as f:
+            f.write(text + "\n")
+        print(f"wrote {args.out}", file=sys.stderr)
+    else:
+        print(text)
+    return 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())

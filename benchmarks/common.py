@@ -86,12 +86,12 @@ def run_engine(reqs, params=None, **overrides):
                       [SamplingParams(max_new_tokens=o) for _p, o in reqs],
                       max_steps=20_000)
     dt = time.monotonic() - t0
-    toks = sum(o.n_tokens for o in outs)
+    toks = sum(o.usage.completion_tokens for o in outs)
     tpots = []
     for o in outs:
         m = o.metrics
-        if m.t_finish and m.t_first_token and o.n_tokens > 1:
-            tpots.append((m.t_finish - m.t_first_token) / (o.n_tokens - 1))
+        if m.t_finish and m.t_first_token and o.usage.completion_tokens > 1:
+            tpots.append((m.t_finish - m.t_first_token) / (o.usage.completion_tokens - 1))
     return {
         "engine": z, "outputs": outs,
         "done": {o.request_id: o for o in outs},

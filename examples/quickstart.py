@@ -32,7 +32,7 @@ outs = z.generate(
      SamplingParams(temperature=1.2, top_k=40, seed=1, max_new_tokens=24,
                     logprobs=True)])
 for o in outs:
-    print(f"req {o.request_id}: {o.n_tokens} tokens "
+    print(f"req {o.request_id}: {o.usage.completion_tokens} tokens "
           f"(finish={o.finish_reason}), first 8 = {o.token_ids[:8]}")
 
 # --- streaming mode: add_request / step, with a mid-flight abort ------
@@ -53,7 +53,7 @@ while z.has_unfinished():
                   f"+{len(out.chunk.token_ids)} -> {len(out.token_ids)}")
     if aborted is None and len(streamed[r_warm]) >= 10:
         aborted = z.abort(r_warm)     # cancel mid-flight; blocks returned
-        print(f"  aborted req {r_warm} at {aborted.n_tokens} tokens "
+        print(f"  aborted req {r_warm} at {aborted.usage.completion_tokens} tokens "
               f"(finish={aborted.finish_reason})")
 
 n_comp = sum(m["n_compressing"] for m in z.metrics)

@@ -34,7 +34,7 @@ def run(n_max, label):
     t0 = time.monotonic()
     outs = z.generate(PROMPTS, PARAMS)
     dt = time.monotonic() - t0
-    toks = sum(o.n_tokens for o in outs)
+    toks = sum(o.usage.completion_tokens for o in outs)
     mean_run = np.mean([m["n_running"] for m in z.metrics])
     preempts = sum(o.metrics.preempt_count for o in outs)
     print(f"{label:22s} steps={z.step_count:5d} tokens={toks:5d} "

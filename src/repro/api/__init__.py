@@ -13,13 +13,17 @@ from repro.api.config import (KERNEL_BACKENDS, CacheConfig,  # noqa: F401
                               ModelRunnerConfig, SchedulerConfig,
                               build_engine_options)
 from repro.api.outputs import (CompletionChunk, CompressionMetrics,  # noqa: F401
-                               FinishReason, RequestMetrics, RequestOutput)
+                               FinishReason, RequestMetrics, RequestOutput,
+                               UsageInfo)
 from repro.api.params import SamplingParams  # noqa: F401
 from repro.api.engine import Zipage  # noqa: F401
+from repro.api.aio import (AsyncEngineLoop, EngineDraining,  # noqa: F401
+                           EngineSaturated)
 
 __all__ = [
-    "Zipage", "SamplingParams", "RequestOutput", "CompletionChunk",
-    "RequestMetrics", "CompressionMetrics", "FinishReason",
+    "Zipage", "AsyncEngineLoop", "EngineSaturated", "EngineDraining",
+    "SamplingParams", "RequestOutput", "CompletionChunk",
+    "RequestMetrics", "CompressionMetrics", "FinishReason", "UsageInfo",
     "CacheConfig", "SchedulerConfig", "ModelRunnerConfig",
     "build_engine_options", "KERNEL_BACKENDS",
 ]

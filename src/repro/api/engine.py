@@ -16,12 +16,12 @@ adds the request-scoped contract production engines expose:
 from __future__ import annotations
 
 import dataclasses
-from typing import Dict, List, Optional, Sequence, Set, Union
+from typing import Callable, Dict, List, Optional, Sequence, Set, Union
 
 from repro.api.config import (CacheConfig, ModelRunnerConfig,
                               SchedulerConfig, build_engine_options,
                               route_overrides)
-from repro.api.outputs import (CompletionChunk, RequestOutput,
+from repro.api.outputs import (CompletionChunk, RequestOutput, UsageInfo,
                                snapshot_request)
 from repro.core.engine import ZipageEngine
 from repro.core.request import Request
@@ -50,6 +50,8 @@ class Zipage:
         self._undrained: Set[int] = set()        # rids _drain still watches
         self._queued: List[RequestOutput] = []   # outputs consumed by an
         #                                          interleaved generate()
+        self._listeners: List[Callable[[List[RequestOutput]], None]] = []
+        self._aio = None          # lazily-started AsyncEngineLoop
 
     # ------------------------------------------------------------------
     @classmethod
@@ -104,7 +106,24 @@ class Zipage:
         if self.has_unfinished():
             self.engine.step()
         queued, self._queued = self._queued, []
-        return queued + self._drain()
+        outs = queued + self._drain()
+        if outs:
+            for fn in list(self._listeners):
+                fn(outs)
+        return outs
+
+    def add_listener(self,
+                     fn: Callable[[List[RequestOutput]], None]) -> None:
+        """Register a step listener: called with every non-empty output
+        batch ``step()`` produces (including steps driven by an
+        interleaved ``generate()``). The async surface (``repro.api.aio``)
+        uses this for per-request fan-out; listeners must not call back
+        into the facade."""
+        self._listeners.append(fn)
+
+    def remove_listener(self, fn) -> None:
+        if fn in self._listeners:
+            self._listeners.remove(fn)
 
     def generate(self,
                  prompts: Sequence[Sequence[int]],
@@ -143,6 +162,49 @@ class Zipage:
                 f"generate() exceeded {max_steps} steps; aborted unfinished "
                 f"requests {sorted(pending)}")
         return [self.output(rid) for rid in rids]
+
+    # ------------------------------------------------------------------
+    # async surface (docs/SERVING.md) — same background loop the HTTP
+    # tier uses, so sync and async callers share one scheduler
+
+    async def _ensure_aio(self):
+        import asyncio
+
+        from repro.api.aio import AsyncEngineLoop
+        loop = asyncio.get_running_loop()
+        if self._aio is not None and (self._aio._loop is not loop
+                                      or not self._aio.started):
+            self._aio._teardown()     # stale: bound to a finished loop
+            self._aio = None
+        if self._aio is None:
+            self._aio = await AsyncEngineLoop(self).start()
+        return self._aio
+
+    async def generate_async(self, prompt: Sequence[int],
+                             params: Optional[SamplingParams] = None,
+                             priority: int = 0) -> RequestOutput:
+        """Async ``generate`` for one prompt: admit on the background
+        continuous-batching loop and await the final RequestOutput.
+        Concurrent callers batch together on the same loop."""
+        aio = await self._ensure_aio()
+        return await aio.generate(prompt, params, priority)
+
+    async def stream(self, prompt: Sequence[int],
+                     params: Optional[SamplingParams] = None,
+                     priority: int = 0):
+        """``async for chunk in zipage.stream(prompt, params)``: yields a
+        :class:`CompletionChunk` per engine step that grew the request;
+        the terminal chunk carries ``finish_reason`` + ``usage``."""
+        aio = await self._ensure_aio()
+        rid = await aio.add_request(prompt, params, priority)
+        async for out in aio.stream_outputs(rid):
+            chunk = out.chunk
+            if chunk is None:         # abort-path terminal snapshot
+                chunk = CompletionChunk(
+                    request_id=out.request_id, index=len(out.token_ids),
+                    token_ids=[], logprobs=None,
+                    finish_reason=out.finish_reason, usage=out.usage)
+            yield chunk
 
     def abort(self, request_id: int) -> Optional[RequestOutput]:
         """Cancel a waiting or running request mid-flight. Its blocks are
@@ -244,8 +306,13 @@ class Zipage:
             new = list(r.output[n_seen:])
             lps = (list(r.logprobs[n_seen:len(r.output)])
                    if r.sampling.logprobs else None)
-            chunk = CompletionChunk(request_id=rid, index=n_seen,
-                                    token_ids=new, logprobs=lps)
+            chunk = CompletionChunk(
+                request_id=rid, index=n_seen, token_ids=new, logprobs=lps,
+                # terminal chunk carries the OpenAI last-chunk markers so
+                # streaming layers need no second lookup (docs/SERVING.md)
+                finish_reason=r.finish_reason if finished else None,
+                usage=(UsageInfo.of(len(r.prompt), len(r.output))
+                       if finished else None))
             self._emitted[rid] = len(r.output)
             outs.append(snapshot_request(r, self.kv_budget_tokens, chunk))
             if finished:

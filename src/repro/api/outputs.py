@@ -4,13 +4,32 @@ Callers never see raw ``repro.core.request.Request`` internals: the facade
 translates them into immutable-ish snapshots — ``RequestOutput`` for the
 request-level view (batch ``generate()`` and per-step streaming state) and
 ``CompletionChunk`` for the incremental delta a single ``step()`` produced.
+
+Both carry the fields an OpenAI-protocol layer needs verbatim
+(docs/SERVING.md): ``finish_reason`` in ``{"stop", "length", "abort"}``
+and a ``UsageInfo`` record (prompt/completion/total token counts), so
+``repro.serve`` maps responses 1:1 without recomputing anything.
 """
 from __future__ import annotations
 
 import dataclasses
+import warnings
 from typing import List, Optional
 
 from repro.core.request import FinishReason, Request  # noqa: F401 (re-export)
+
+
+@dataclasses.dataclass(frozen=True)
+class UsageInfo:
+    """OpenAI-shaped token accounting for one request."""
+    prompt_tokens: int
+    completion_tokens: int
+    total_tokens: int
+
+    @classmethod
+    def of(cls, n_prompt: int, n_completion: int) -> "UsageInfo":
+        return cls(prompt_tokens=n_prompt, completion_tokens=n_completion,
+                   total_tokens=n_prompt + n_completion)
 
 
 @dataclasses.dataclass(frozen=True)
@@ -34,11 +53,20 @@ class RequestMetrics:
 
 @dataclasses.dataclass(frozen=True)
 class CompletionChunk:
-    """Tokens a request gained in one engine step (streaming delta)."""
+    """Tokens a request gained in one engine step (streaming delta).
+
+    ``finish_reason`` is set (``"stop" | "length" | "abort"``) on the
+    chunk that finishes the request — the streaming protocol's terminal
+    marker — and ``usage`` rides along on that same final chunk, so an
+    SSE layer emits OpenAI's last-chunk usage record without a second
+    lookup. Both are None on intermediate chunks.
+    """
     request_id: int
     index: int                   # offset of token_ids[0] in the full output
     token_ids: List[int]
     logprobs: Optional[List[float]]
+    finish_reason: Optional[str] = None
+    usage: Optional[UsageInfo] = None
 
 
 @dataclasses.dataclass(frozen=True)
@@ -48,7 +76,8 @@ class RequestOutput:
     ``token_ids`` is the full output so far (stop sequences already
     truncated); ``chunk`` is the delta since the previous emission, when
     the output came from ``Zipage.step()``. ``finish_reason`` is one of
-    ``"stop" | "length" | "abort"`` once ``finished``.
+    ``"stop" | "length" | "abort"`` once ``finished``. ``usage`` is the
+    OpenAI-shaped token accounting at snapshot time.
     """
     request_id: int
     prompt_token_ids: List[int]
@@ -57,10 +86,16 @@ class RequestOutput:
     finish_reason: Optional[str]
     logprobs: Optional[List[float]]
     metrics: RequestMetrics
+    usage: Optional[UsageInfo] = None
     chunk: Optional[CompletionChunk] = None
 
     @property
     def n_tokens(self) -> int:
+        """Deprecated: use ``usage.completion_tokens`` (one-release shim)."""
+        warnings.warn(
+            "RequestOutput.n_tokens is deprecated; read "
+            "usage.completion_tokens (the OpenAI-shaped UsageInfo record) "
+            "instead", DeprecationWarning, stacklevel=2)
         return len(self.token_ids)
 
 
@@ -86,4 +121,5 @@ def snapshot_request(r: Request, kv_budget_tokens: Optional[int],
                 blocks_freed=r.comp_blocks_freed,
                 kv_tokens_held=r.seq_len,
                 kv_budget_tokens=kv_budget_tokens)),
+        usage=UsageInfo.of(len(r.prompt), len(r.output)),
         chunk=chunk)

@@ -36,7 +36,7 @@ import dataclasses
 import time
 import warnings
 from collections import deque
-from typing import Dict, List, Optional, Sequence
+from typing import Callable, Dict, List, Optional, Sequence
 
 import jax
 import jax.numpy as jnp
@@ -169,9 +169,10 @@ class EngineOptions:
     # quiescent_horizon(). decode_steps > 1 requires fuse_sampling.
     fuse_sampling: bool = True
     decode_steps: int = 1
-    # Deprecated: engine-global sampling knobs, kept as defaults for the
-    # legacy ``submit()`` path only. New code passes a per-request
-    # ``SamplingParams`` via ``add_request()`` / the ``repro.api`` facade.
+    # Engine-global sampling defaults, used only when ``add_request()`` is
+    # called without a ``SamplingParams``. Public callers always pass one
+    # (the ``repro.api`` facade constructs it); the retired ``submit()``
+    # shim was the last API that leaned on these.
     temperature: float = 0.0         # 0 => greedy
     seed: int = 0
     dtype: str = "float32"
@@ -324,6 +325,10 @@ class ZipageEngine:
         # so the read is free and async compression keeps its overlap
         self._pending_quality = None
         self.metrics: List[dict] = []
+        # step hooks: called with each step's metrics entry after the step
+        # completes — the async serving loop (repro.api.aio) uses this for
+        # load-aware Retry-After estimates without polling ``metrics``
+        self.step_hooks: List[Callable[[dict], None]] = []
         self.step_count = 0
         self.swap_pool: Optional[Dict[str, np.ndarray]] = None
         self._swap_qwin: Dict[int, np.ndarray] = {}   # rid -> parked window
@@ -387,9 +392,9 @@ class ZipageEngine:
                     sampling: Optional[SamplingParams] = None,
                     priority: int = 0) -> int:
         """Enqueue a request with per-request ``SamplingParams``. This is
-        the primary entry point (the ``repro.api.Zipage`` facade calls it);
-        ``submit()`` remains as a deprecated shim. ``priority`` matters
-        only under the "priority" scheduler policy (higher = first)."""
+        the primary entry point (the ``repro.api.Zipage`` facade calls
+        it). ``priority`` matters only under the "priority" scheduler
+        policy (higher = first)."""
         if sampling is None:
             sampling = SamplingParams(temperature=self.opts.temperature,
                                       seed=self._default_seed())
@@ -407,22 +412,6 @@ class ZipageEngine:
         """Decorrelate per-request streams under the engine-global seed:
         identical seeds would replay identical draws per position."""
         return (self.opts.seed * 1_000_003 + self._rid) & 0xFFFFFFFF
-
-    def submit(self, prompt, max_new_tokens, eos_id=None) -> int:
-        """Deprecated: legacy entry point with the ``eos_id=-1`` sentinel
-        (which can collide with masked/negative token conventions). Routes
-        through :class:`SamplingParams`; prefer ``add_request()`` or the
-        ``repro.api.Zipage`` facade. Bare ``submit(prompt, n)`` keeps its
-        historical behavior (engine-global temperature/seed, no eos)."""
-        if eos_id is not None:
-            warnings.warn(
-                "submit(..., eos_id=...) is deprecated; pass "
-                "SamplingParams(eos_ids=(...)) to add_request() instead "
-                "(eos_id=-1 meant 'disabled')", DeprecationWarning,
-                stacklevel=2)
-        return self.add_request(prompt, SamplingParams.from_legacy(
-            max_new_tokens, -1 if eos_id is None else eos_id,
-            temperature=self.opts.temperature, seed=self._default_seed()))
 
     def abort(self, rid: int) -> bool:
         """Cancel a request mid-flight: remove it from the waiting queue or
@@ -544,7 +533,16 @@ class ZipageEngine:
     def _compress_fn(self, n, width=None):
         """Compiled compression executable for bucket size ``n`` at
         trimmed table width ``width``, shared process-wide across engines
-        with the same signature."""
+        with the same signature.
+
+        Deliberately a plain ``jax.jit`` rather than an AOT
+        ``.lower().compile()``: the AOT dispatch path was observed to
+        round the scoring floats slightly differently from the jit path
+        on CPU, and the top-k survivor margins of a near-uniform
+        attention window sit close enough to zero (~1e-5 on the tiny
+        eval models) that a ~1e-7 rounding delta flips which entry
+        survives — making engine outputs depend on which compile path
+        produced the executable."""
         if width is None:
             width = self.max_blocks
         fn = self._compress_fns.get((n, width))
@@ -554,17 +552,10 @@ class ZipageEngine:
                self.budget_blocks, n, width)
         fn = _COMPRESS_CACHE.get(key)
         if fn is None:
-            jitted = jax.jit(build_compress_fn(
+            fn = jax.jit(build_compress_fn(
                 self.cfg, block_size=self.opts.block_size,
                 max_blocks=width,
                 budget_blocks=self.budget_blocks, opts=self.opts.compress))
-            try:
-                sds = lambda x: jax.ShapeDtypeStruct(x.shape, x.dtype)  # noqa: E731
-                req = tuple(sds(a) for a in self._comp_buffers(n, width))
-                fn = jitted.lower(jax.tree.map(sds, self.state["pools"]),
-                                  sds(self.state["qwin"]), req).compile()
-            except Exception:        # pragma: no cover - jax-version drift
-                fn = jitted          # fall back to compile-on-first-call
             _COMPRESS_CACHE[key] = fn
         self._compress_fns[(n, width)] = fn
         return fn
@@ -579,11 +570,17 @@ class ZipageEngine:
         their padded host buffers) before serving starts, so the first
         compression-bearing steps don't stall mid-serve on trace+compile.
         Victims carry ~n_max blocks when compression fires, so warm the
-        matching trimmed table width."""
+        matching trimmed table width.  The warming calls run on the
+        all-padding request buffers (qslot -1 rows), which make them
+        semantic no-ops — every survivor scatter drops OOB — so the
+        zeroed engine state is untouched."""
         width = self._comp_width(self.opts.n_max or 1)
         for n in (1, 2, 4):
             if n <= max(1, self.opts.m_qslots):
-                self._compress_fn(n, width)
+                bufs = self._comp_buffers(n, width)
+                req = tuple(jnp.asarray(a) for a in bufs)
+                self._block_ready(self._compress_fn(n, width)(
+                    self.state["pools"], self.state["qwin"], req))
 
     def _launch_compression(self, outs: SchedulerOutputs):
         """Dispatch the compression kernel over the planned launches, then
@@ -1116,6 +1113,8 @@ class ZipageEngine:
             (t_dec - t0) / max(1, self._last_horizon))
         if self.sanitize:
             invariants.check_engine(self)
+        for hook in self.step_hooks:
+            hook(entry)
 
     def run(self, max_steps=10_000):
         while self.scheduler.has_work() and self.step_count < max_steps:

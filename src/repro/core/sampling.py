@@ -14,6 +14,7 @@ per-request seeds reproducible under continuous batching.
 from __future__ import annotations
 
 import dataclasses
+import difflib
 from typing import Optional, Sequence, Tuple
 
 import jax
@@ -39,6 +40,13 @@ class SamplingParams:
     ``"protect"`` defers compression and shields the request from
     preemption while memory allows, ``"aggressive"`` compresses at the
     earliest opportunity and volunteers first for preemption.
+
+    OpenAI spellings are accepted where they map cleanly:
+    ``max_tokens`` is a validated alias of ``max_new_tokens`` (passing
+    both with different values is an error), and ``n`` is accepted but
+    must be 1 — parallel sampling is one-request-per-stream here.
+    Unknown keyword arguments are rejected with a did-you-mean error
+    rather than silently ignored.
     """
     temperature: float = 0.0
     top_k: int = 0
@@ -49,8 +57,27 @@ class SamplingParams:
     seed: int = 0
     logprobs: bool = False
     compression_policy: str = "default"
+    # OpenAI-spelled aliases (docs/SERVING.md): normalized in __post_init__
+    # so equality/replace always see the canonical fields
+    max_tokens: Optional[int] = None     # alias of max_new_tokens
+    n: int = 1                           # only n=1 is supported
 
     def __post_init__(self):
+        if self.n != 1:
+            raise ValueError(
+                f"n={self.n} (parallel sampling) is not supported: the "
+                "engine serves one stream per request. Submit n separate "
+                "requests sharing the prompt (one seed each) and fan the "
+                "choices in client-side.")
+        if self.max_tokens is not None:
+            if (self.max_new_tokens != _DEFAULT_MAX_NEW
+                    and self.max_new_tokens != self.max_tokens):
+                raise ValueError(
+                    f"max_tokens={self.max_tokens} conflicts with "
+                    f"max_new_tokens={self.max_new_tokens}; max_tokens is "
+                    "an alias — pass one or the other")
+            object.__setattr__(self, "max_new_tokens", int(self.max_tokens))
+            object.__setattr__(self, "max_tokens", None)
         if self.max_new_tokens < 1:
             raise ValueError("max_new_tokens must be >= 1")
         if self.compression_policy not in ("default", "protect",
@@ -76,10 +103,38 @@ class SamplingParams:
     def from_legacy(cls, max_new_tokens: int, eos_id: int = -1,
                     temperature: float = 0.0, seed: int = 0
                     ) -> "SamplingParams":
-        """Map the old ``submit(..., eos_id=-1)`` sentinel convention."""
+        """Map the old ``submit(..., eos_id=-1)`` sentinel convention
+        (kept for the frozen ``tests/_legacy_engine.py`` oracle)."""
         return cls(temperature=temperature, seed=seed,
                    max_new_tokens=max_new_tokens,
                    eos_ids=None if eos_id < 0 else (eos_id,))
+
+
+_DEFAULT_MAX_NEW = 16      # must match the field default above
+_PARAM_FIELDS = tuple(f.name for f in dataclasses.fields(SamplingParams))
+
+# wrap the dataclass-generated __init__ so unknown keyword arguments get a
+# did-you-mean error instead of a bare TypeError (callers routinely arrive
+# from JSON request bodies where a typo would otherwise read as "ignored")
+_dataclass_init = SamplingParams.__init__
+
+
+def _checked_init(self, *args, **kwargs):
+    unknown = [k for k in kwargs if k not in _PARAM_FIELDS]
+    if unknown:
+        hints = []
+        for k in unknown:
+            close = difflib.get_close_matches(k, _PARAM_FIELDS, n=1)
+            hints.append(f"{k!r}" + (f" (did you mean {close[0]!r}?)"
+                                     if close else ""))
+        raise TypeError(
+            f"unknown SamplingParams field(s) {', '.join(hints)}; known "
+            f"fields: {', '.join(_PARAM_FIELDS)}")
+    _dataclass_init(self, *args, **kwargs)
+
+
+_checked_init.__wrapped__ = _dataclass_init
+SamplingParams.__init__ = _checked_init
 
 
 def matched_stop(output: Sequence[int],

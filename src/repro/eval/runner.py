@@ -137,9 +137,9 @@ def _run_budget(params, examples, *, name: str, n_max: Optional[int],
             k: _round(c / max(n, 1)) for k, (c, n) in per_task.items()},
         # deterministic throughput proxies (no wall-clock — docstring)
         "steps": z.step_count,
-        "tokens": sum(o.n_tokens for o in outs),
+        "tokens": sum(o.usage.completion_tokens for o in outs),
         "tokens_per_step": _round(
-            sum(o.n_tokens for o in outs) / max(z.step_count, 1), 4),
+            sum(o.usage.completion_tokens for o in outs) / max(z.step_count, 1), 4),
         "compressions": sum(r.n_compressions for r in finished.values()),
         "n_comp_deferred": st["n_comp_deferred"],
         "block_util": _round(np.mean([m["block_util"]

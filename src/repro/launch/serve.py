@@ -46,7 +46,7 @@ def run_engine(arch, reqs, *, reduce=False, **opts):
                       [SamplingParams(max_new_tokens=o) for _p, o in reqs],
                       max_steps=5000)
     dt = time.monotonic() - t0
-    toks = sum(o.n_tokens for o in outs)
+    toks = sum(o.usage.completion_tokens for o in outs)
     return {"engine": z, "tps": toks / dt, "wall_s": dt,
             "tokens": toks, "steps": z.step_count,
             "outputs": {o.request_id: o.token_ids for o in outs}}

@@ -1,0 +1,13 @@
+"""``repro.serve`` — the OpenAI-compatible HTTP serving tier.
+
+An asyncio front-end (hand-rolled ASGI 3 app, stdlib-only) over the
+``repro.api`` async surface: continuous batching, SSE streaming,
+bounded backpressure, per-client fairness and graceful drain.  See
+docs/SERVING.md for the architecture and ``python -m repro.serve`` for
+the CLI.
+"""
+from repro.serve.app import create_app  # noqa: F401
+from repro.serve.config import ServeConfig  # noqa: F401
+from repro.serve.state import ServerState  # noqa: F401
+
+__all__ = ["create_app", "ServeConfig", "ServerState"]

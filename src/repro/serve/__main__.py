@@ -1,0 +1,5 @@
+import sys
+
+from repro.serve.cli import main
+
+sys.exit(main())

@@ -1,0 +1,16 @@
+"""Shared test helper replacing the retired ``ZipageEngine.submit()`` shim.
+
+``submit(eng, prompt, n)`` reproduces exactly what the old shim did —
+engine-default temperature plus the engine's per-request derived seed —
+so the pinned token streams in the test suite are unchanged by the
+API retirement. New code should construct ``SamplingParams`` explicitly
+and call ``add_request``.
+"""
+from repro.core.sampling import SamplingParams
+
+
+def submit(eng, prompt, max_new_tokens):
+    return eng.add_request(prompt, SamplingParams(
+        temperature=eng.opts.temperature,
+        seed=eng._default_seed(),
+        max_new_tokens=max_new_tokens))

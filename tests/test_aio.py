@@ -1,0 +1,162 @@
+"""Async facade surface: generate_async/stream parity with the sync path,
+the background loop's op serialization, backpressure, drain, and hooks.
+
+Each test runs its own ``asyncio.run`` (no pytest-asyncio in the image);
+the shared facade is reused across tests — the AsyncEngineLoop rebinds
+to each fresh event loop lazily — so jit recompilation stays minimal.
+"""
+import asyncio
+import dataclasses
+
+import jax
+import pytest
+
+from repro.api import (EngineDraining, EngineSaturated, SamplingParams,
+                       Zipage)
+from repro.api.aio import AsyncEngineLoop
+from repro.configs import get_config
+from repro.core import invariants
+from repro.models import lm
+
+CFG = dataclasses.replace(get_config("tiny-lm"), dtype="float32")
+PARAMS = lm.init(CFG, jax.random.key(0))
+N_BLOCKS = 64
+
+Z = Zipage(CFG, PARAMS, block_size=8, n_total_blocks=N_BLOCKS,
+           max_batch=4, m_qslots=4, n_max=3, window=4, max_model_len=128,
+           prefill_rows=2, prefill_len=64)
+P1, P2 = [1, 2, 3, 4, 5], [9, 8, 7]
+
+
+def sp(n, seed=0, temperature=0.0):
+    return SamplingParams(max_new_tokens=n, seed=seed,
+                          temperature=temperature)
+
+
+def run(coro):
+    result = asyncio.run(coro)
+    assert Z.num_free_blocks == N_BLOCKS       # every test leaves it clean
+    return result
+
+
+def test_generate_async_matches_sync_generate():
+    hot = sp(12, seed=11, temperature=0.9)
+    ref, = Z.generate([P1], hot)
+
+    async def main():
+        out = await Z.generate_async(P1, hot)
+        await Z._aio.drain()
+        return out
+
+    out = run(main())
+    assert out.token_ids == ref.token_ids
+    assert out.finish_reason == "length"
+    assert out.usage.total_tokens == len(P1) + 12
+
+
+def test_stream_chunks_match_sync_generate():
+    hot = sp(15, seed=3, temperature=1.1)
+    ref, = Z.generate([P1], hot)
+
+    async def main():
+        toks, final = [], None
+        async for chunk in Z.stream(P1, hot):
+            assert chunk.index == len(toks)
+            toks.extend(chunk.token_ids)
+            final = chunk
+        await Z._aio.drain()
+        return toks, final
+
+    toks, final = run(main())
+    assert toks == ref.token_ids
+    assert final.finish_reason == "length"
+    assert final.usage.completion_tokens == 15
+
+
+def test_concurrent_generate_async_batches_together():
+    refs = Z.generate([P1, P2, P1], [sp(8), sp(8, seed=2), sp(6)])
+
+    async def main():
+        outs = await asyncio.gather(
+            Z.generate_async(P1, sp(8)),
+            Z.generate_async(P2, sp(8, seed=2)),
+            Z.generate_async(P1, sp(6)))
+        steps_spent = Z.step_count
+        await Z._aio.drain()
+        return outs, steps_spent
+
+    outs, _ = run(main())
+    for out, ref in zip(outs, refs):
+        assert out.token_ids == ref.token_ids
+
+
+def test_async_abort_mid_flight_reclaims():
+    async def main():
+        aio = await Z._ensure_aio()
+        rid = await aio.add_request(P1, sp(40))
+        stream = aio.stream_outputs(rid)
+        first = await asyncio.wait_for(stream.__anext__(), 30)
+        assert first.chunk.token_ids
+        final = await aio.abort(rid)
+        assert final.finish_reason == "abort" and final.finished
+        # the stream flushes the terminal snapshot, then closes
+        tail = [o async for o in stream]
+        assert tail and tail[-1].finish_reason == "abort"
+        await aio.drain()
+
+    run(main())
+    Z.engine._qwin_shadow.clear()          # between-steps check: reset
+    invariants.check_engine(Z.engine)
+
+
+def test_backpressure_saturated_raises_with_retry_after():
+    # pre-fill the scheduler's waiting queue synchronously: backpressure
+    # must reject before the loop even starts (no timing dependence)
+    parked = Z.add_request(P1, sp(30))
+
+    async def main():
+        aio = AsyncEngineLoop(Z, max_queued_requests=1)
+        with pytest.raises(EngineSaturated) as e:
+            await aio.add_request(P2, sp(4))
+        assert e.value.retry_after >= 1.0
+        assert e.value.backlog == 1 and e.value.limit == 1
+        assert not aio.started               # rejected without spin-up
+
+    asyncio.run(main())
+    Z.abort(parked)
+    assert Z.num_free_blocks == N_BLOCKS
+
+
+def test_drain_finishes_running_and_rejects_new():
+    async def main():
+        aio = await Z._ensure_aio()
+        rid = await aio.add_request(P1, sp(20))
+        drainer = asyncio.create_task(aio.drain())
+        await asyncio.sleep(0)                # let drain close intake
+        with pytest.raises(EngineDraining):
+            await aio.add_request(P2, sp(4))
+        final = None
+        async for out in aio.stream_outputs(rid):
+            final = out
+        await drainer
+        # running request finished normally despite the drain
+        assert final.finished and final.finish_reason == "length"
+        assert final.usage.completion_tokens == 20
+
+    run(main())
+
+
+def test_step_hooks_and_listeners():
+    entries, batches = [], []
+    Z.engine.step_hooks.append(entries.append)
+    Z.add_listener(batches.append)
+    try:
+        out, = Z.generate([P1], sp(5))
+    finally:
+        Z.engine.step_hooks.remove(entries.append)
+        Z.remove_listener(batches.append)
+    assert entries and all("t_total" in e for e in entries)
+    streamed = [t for outs in batches for o in outs
+                if o.request_id == out.request_id
+                for t in o.chunk.token_ids]
+    assert streamed == out.token_ids

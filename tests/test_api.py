@@ -38,7 +38,7 @@ def greedy(n):
 
 def test_generate_batch_and_pool_accounting():
     outs = Z.generate([P1, P2], greedy(8))
-    assert [o.n_tokens for o in outs] == [8, 8]
+    assert [o.usage.completion_tokens for o in outs] == [8, 8]
     assert all(o.finished and o.finish_reason == "length" for o in outs)
     assert outs[0].prompt_token_ids == P1
     assert Z.num_free_blocks == N_BLOCKS
@@ -118,7 +118,7 @@ def test_abort_returns_all_blocks_mid_flight():
     assert aborted.finished and aborted.finish_reason == "abort"
     while Z.has_unfinished():
         Z.step()
-    assert Z.output(r1).n_tokens == 30
+    assert Z.output(r1).usage.completion_tokens == 30
     assert Z.output(r1).finish_reason == "length"
     assert Z.num_free_blocks == N_BLOCKS
     Z.bm.check_invariants()
@@ -167,7 +167,7 @@ def test_generate_interleaved_with_streaming_loses_no_chunks():
     collect(Z.step())
     collect(Z.step())
     batch, = Z.generate([P2], greedy(30))   # rid finishes inside here
-    assert batch.n_tokens == 30
+    assert batch.usage.completion_tokens == 30
     while True:
         outs = Z.step()
         collect(outs)
@@ -219,33 +219,36 @@ def test_config_split_routing():
         make_facade(window=4, compress=CompressOptions(window=2))
 
 
-def test_legacy_submit_shim():
-    eng = Z.engine
-    with warnings.catch_warnings(record=True) as rec:
-        warnings.simplefilter("always")
-        rid_dep = eng.submit(P1, 4, eos_id=-1)      # sentinel -> warning
-        rid_ok = eng.submit(P2, 4)                  # bare call: no warning
-    assert any(issubclass(w.category, DeprecationWarning) for w in rec)
-    assert len(rec) == 1
-    # run() bounds the engine's cumulative lifetime step counter
-    done = eng.run(max_steps=eng.step_count + 200)
-    assert len(done[rid_dep].output) == 4
-    assert len(done[rid_ok].output) == 4
-    assert Z.num_free_blocks == N_BLOCKS
+def test_engine_submit_shim_retired():
+    """The PR-1 ``submit()`` shim is gone; ``add_request`` + the facade
+    are the only entry points."""
+    assert not hasattr(Z.engine, "submit")
 
 
-def test_submit_shim_matches_generate():
-    """The deprecated ``submit()`` path warns exactly once and produces the
-    same tokens as the supported ``generate()`` path (both greedy)."""
-    ref, = Z.generate([P1], greedy(6))
+def test_usage_record_and_final_chunk_markers():
+    """RequestOutput.usage carries OpenAI-shaped accounting; the chunk
+    that finishes a streamed request carries finish_reason + usage so an
+    SSE layer needs no second lookup."""
+    out, = Z.generate([P1], greedy(8))
+    assert out.usage.prompt_tokens == len(P1)
+    assert out.usage.completion_tokens == 8
+    assert out.usage.total_tokens == len(P1) + 8
+    Z.add_request(P2, greedy(5))
+    finals, intermediates = [], []
+    while Z.has_unfinished():
+        for o in Z.step():
+            (finals if o.finished else intermediates).append(o.chunk)
+    final, = finals
+    assert final.finish_reason == "length"
+    assert final.usage.completion_tokens == 5
+    assert all(c.finish_reason is None and c.usage is None
+               for c in intermediates)
+    # one-release deprecation shim: n_tokens still answers, but warns
     with warnings.catch_warnings(record=True) as rec:
         warnings.simplefilter("always")
-        rid = Z.engine.submit(P1, 6, eos_id=-1)
+        assert out.n_tokens == 8
     assert sum(issubclass(w.category, DeprecationWarning)
                for w in rec) == 1
-    done = Z.engine.run(max_steps=Z.engine.step_count + 200)
-    assert done[rid].output == ref.token_ids
-    assert Z.num_free_blocks == N_BLOCKS
 
 
 def test_sampling_params_validation():
@@ -255,3 +258,20 @@ def test_sampling_params_validation():
         SamplingParams(top_p=0.0)
     sp = SamplingParams(stop=[[1, 2]], eos_ids=[3])
     assert sp.stop == ((1, 2),) and sp.eos_ids == (3,)
+
+
+def test_sampling_params_openai_spellings():
+    # max_tokens is a validated alias of max_new_tokens
+    assert SamplingParams(max_tokens=12).max_new_tokens == 12
+    assert SamplingParams(max_tokens=12) == SamplingParams(max_new_tokens=12)
+    with pytest.raises(ValueError, match="alias"):
+        SamplingParams(max_tokens=12, max_new_tokens=13)
+    # n is accepted but only n=1 is supported
+    assert SamplingParams(n=1).n == 1
+    with pytest.raises(ValueError, match="n separate requests"):
+        SamplingParams(n=4)
+    # unknown kwargs get a did-you-mean error, not silent acceptance
+    with pytest.raises(TypeError, match="did you mean 'temperature'"):
+        SamplingParams(temprature=0.7)
+    with pytest.raises(TypeError, match="unknown SamplingParams field"):
+        SamplingParams(banana=1)

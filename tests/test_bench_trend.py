@@ -237,6 +237,50 @@ def test_kernels_v2_speedup_column_and_gate(tmp_path):
     assert bench_trend.main(files + ["--max-regression", "0.5"]) == 0
 
 
+def serving_point(tps, ttft_p99=150.0):
+    """A zipage-bench-serving/v1 point (benchmarks/bench_serving.py —
+    Poisson arrivals through the in-process ASGI app, ISSUE 10)."""
+    return {
+        "schema": "zipage-bench-serving/v1", "jax": "0", "platform": "cpu",
+        "smoke": True,
+        "results": [
+            {"name": "serving_poisson", "n_requests": 12, "rate_rps": 20.0,
+             "n_ok": 12, "n_rejected": 0, "tokens": 170, "steps": 15,
+             "wall_s": 0.97, "tps": tps, "ttft_p50_ms": 90.0,
+             "ttft_p99_ms": ttft_p99, "itl_mean_ms": 30.0,
+             "itl_p50_ms": 16.0, "itl_p99_ms": 110.0},
+        ],
+    }
+
+
+def test_serving_table_and_gate(tmp_path):
+    files = [write(tmp_path, "000-srv.json", serving_point(170.0)),
+             write(tmp_path, "001-srv.json", serving_point(180.0, 160.0))]
+    out = tmp_path / "TREND.md"
+    assert bench_trend.main(files + ["--out", str(out)]) == 0
+    text = out.read_text()
+    assert "Serving latency trajectory" in text
+    assert "| 180.0 |" in text and "| 160.0 |" in text
+    assert "12/12" in text
+    # a single serving point is trivially green
+    assert bench_trend.main(files[:1]) == 0
+    # tok/s collapse fails the serving gate
+    files[1] = write(tmp_path, "001-srv.json", serving_point(120.0))
+    assert bench_trend.main(files) == 1
+    # p99-TTFT blow-up fails even with throughput healthy; widening the
+    # ceiling admits it
+    files[1] = write(tmp_path, "001-srv.json",
+                     serving_point(175.0, 400.0))
+    assert bench_trend.main(files) == 1
+    assert bench_trend.main(files + ["--max-ttft-growth", "2.0"]) == 0
+    # serving history mixes with the other kinds; gates are independent
+    mixed = [write(tmp_path, "000-c.json", conc_point(100.0)),
+             files[0],
+             write(tmp_path, "001-c.json", conc_point(100.0)),
+             write(tmp_path, "002-srv.json", serving_point(171.0))]
+    assert bench_trend.main(mixed) == 0
+
+
 def test_kernels_v1_history_mixes_with_v2(tmp_path):
     """v1 history (no long-context rows) must neither break the table nor
     trip the kernel gate: the series gates only between points that both

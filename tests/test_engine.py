@@ -14,6 +14,7 @@ from repro.configs import get_config
 from repro.core.compression import CompressOptions
 from repro.core.engine import EngineOptions, ZipageEngine
 from repro.models import lm
+from engine_utils import submit
 
 CFG = dataclasses.replace(get_config("tiny-lm"), dtype="float32")
 PARAMS = lm.init(CFG, jax.random.key(0))
@@ -42,7 +43,7 @@ PROMPTS = [[1, 2, 3, 4, 5], [9, 8, 7], [10, 11, 12, 13, 14, 15, 16],
 
 def test_no_compression_matches_reference():
     eng = make_engine(n_max=None)            # full-KV baseline
-    rids = [eng.submit(p, 8) for p in PROMPTS]
+    rids = [submit(eng, p, 8) for p in PROMPTS]
     done = eng.run(max_steps=200)
     for rid, p in zip(rids, PROMPTS):
         assert done[rid].output == ref_generate(p, 8)
@@ -52,7 +53,7 @@ def test_zipage_matches_reference_before_budget():
     """With compression on but never triggered (short outputs), Zipage must
     be exact too."""
     eng = make_engine(n_max=4)               # 4 blocks * 8 = 32 > 5+8 tokens
-    rids = [eng.submit(p, 8) for p in PROMPTS]
+    rids = [submit(eng, p, 8) for p in PROMPTS]
     done = eng.run(max_steps=200)
     for rid, p in zip(rids, PROMPTS):
         assert done[rid].output == ref_generate(p, 8)
@@ -60,7 +61,7 @@ def test_zipage_matches_reference_before_budget():
 
 def test_compression_triggers_and_caps_blocks():
     eng = make_engine(n_max=3, m_qslots=4)   # cap = 24 tokens
-    rids = [eng.submit(p, 40) for p in PROMPTS]
+    rids = [submit(eng, p, 40) for p in PROMPTS]
     done = eng.run(max_steps=400)
     comp_steps = sum(m["n_compressing"] for m in eng.metrics)
     assert comp_steps > 0, "compression never triggered"
@@ -76,7 +77,7 @@ def test_compression_triggers_and_caps_blocks():
 def test_block_cap_invariant_during_run():
     eng = make_engine(n_max=3, m_qslots=4)
     for p in PROMPTS:
-        eng.submit(p, 40)
+        submit(eng, p, 40)
     max_blocks_seen = 0
     while eng.waiting or eng.running:
         eng.step()
@@ -92,7 +93,7 @@ def test_async_and_sync_compression_agree():
     outs = {}
     for mode in (True, False):
         eng = make_engine(n_max=3, m_qslots=4, async_compression=mode)
-        rids = [eng.submit(p, 30) for p in PROMPTS]
+        rids = [submit(eng, p, 30) for p in PROMPTS]
         done = eng.run(max_steps=400)
         outs[mode] = [done[r].output for r in rids]
     assert outs[True] == outs[False]
@@ -102,7 +103,7 @@ def test_constrained_respects_M():
     eng = make_engine(scheduling="constrained", m_qslots=2, max_batch=4,
                       n_max=3)
     for i in range(6):
-        eng.submit([1 + i, 2, 3], 20)
+        submit(eng, [1 + i, 2, 3], 20)
     while eng.waiting or eng.running:
         eng.step()
         assert len(eng.running) <= 2          # concurrency capped at M
@@ -112,7 +113,7 @@ def test_constrained_respects_M():
 def test_hybrid_exceeds_M_with_short_requests():
     eng = make_engine(scheduling="hybrid", m_qslots=1, max_batch=4, n_max=3)
     for i in range(4):
-        eng.submit([1 + i, 2, 3], 6)          # short: never needs a qslot
+        submit(eng, [1 + i, 2, 3], 6)          # short: never needs a qslot
     peak = 0
     while eng.waiting or eng.running:
         eng.step()
@@ -125,12 +126,12 @@ def test_prefix_cache_hits_and_sharing():
     eng = make_engine(n_max=3, prefix_caching=True, block_size=4,
                       window=2, compress=CompressOptions(window=2))
     shared_prefix = list(range(1, 13))        # 3 full blocks of 4
-    r1 = eng.submit(shared_prefix + [30], 25)
+    r1 = submit(eng, shared_prefix + [30], 25)
     done1 = None
     # run until first finishes so its blocks are cached
     while r1 not in eng.finished:
         eng.step()
-    r2 = eng.submit(shared_prefix + [40], 25)
+    r2 = submit(eng, shared_prefix + [40], 25)
     eng.run(max_steps=400)
     req2 = eng.finished[r2]
     assert req2.n_cached >= 4, "prefix cache should have matched blocks"
@@ -145,8 +146,8 @@ def test_shared_prefix_compression_preserves_sharing():
                       max_batch=4, m_qslots=4, window=2,
                       compress=CompressOptions(window=2))
     shared_prefix = list(range(1, 13))
-    r1 = eng.submit(shared_prefix + [30], 30)
-    r2 = eng.submit(shared_prefix + [40], 30)
+    r1 = submit(eng, shared_prefix + [30], 30)
+    r2 = submit(eng, shared_prefix + [40], 30)
     done = eng.run(max_steps=600)
     assert len(done[r1].output) == 30
     assert len(done[r2].output) == 30
@@ -157,7 +158,7 @@ def test_shared_prefix_compression_preserves_sharing():
 def test_preemption_under_block_pressure():
     eng = make_engine(n_total_blocks=10, max_batch=4, m_qslots=4, n_max=3,
                       prefix_caching=False)
-    rids = [eng.submit([1 + i, 2, 3], 30) for i in range(4)]
+    rids = [submit(eng, [1 + i, 2, 3], 30) for i in range(4)]
     done = eng.run(max_steps=1000)
     for rid in rids:
         assert len(done[rid].output) == 30
@@ -166,7 +167,7 @@ def test_preemption_under_block_pressure():
 
 def test_snapshot_restore_determinism():
     eng = make_engine(n_max=3, m_qslots=4)
-    rids = [eng.submit(p, 24) for p in PROMPTS]
+    rids = [submit(eng, p, 24) for p in PROMPTS]
     for _ in range(5):
         eng.step()
     snap = eng.snapshot()

@@ -14,6 +14,7 @@ from repro.core.compression import CompressOptions
 from repro.core.engine import EngineOptions, ZipageEngine
 from repro.core.memory_planner import plan_memory
 from repro.models import lm
+from engine_utils import submit
 from repro.models import layers as L
 
 CFG = dataclasses.replace(get_config("tiny-lm"), dtype="float32")
@@ -69,7 +70,7 @@ def test_chunked_attn_backend_engine_parity():
             max_model_len=128, prefill_rows=2, prefill_len=32,
             temperature=0.0, kernel_backend=backend))
         assert eng.spec.attn_backend == backend
-        rids = [eng.submit([1, 2, 3], 30), eng.submit([5, 6], 30)]
+        rids = [submit(eng, [1, 2, 3], 30), submit(eng, [5, 6], 30)]
         done = eng.run(max_steps=300)
         outs[backend] = [done[r].output for r in rids]
     assert outs["jnp"] == outs["chunked"]
@@ -82,7 +83,7 @@ def test_straggler_admission_backoff():
         prefill_rows=4, prefill_len=32))
     eng._ewma = 0.001                        # pretend steps were fast
     for i in range(6):
-        eng.submit([1 + i], 4)
+        submit(eng, [1 + i], 4)
     eng.step()                               # real step is far slower => 3x
     assert eng.admission_scale < 1.0         # backoff engaged
     for _ in range(60):
@@ -109,7 +110,7 @@ def test_property_random_workload_completes_cleanly(seed, n, scheduling):
     for _i in range(n):
         p = rng.integers(0, CFG.vocab_size,
                          size=int(rng.integers(2, 20))).tolist()
-        rids.append(eng.submit(p, int(rng.integers(2, 40))))
+        rids.append(submit(eng, p, int(rng.integers(2, 40))))
     done = eng.run(max_steps=2000)
     assert set(rids) <= set(done)
     eng.bm.check_invariants()
@@ -126,7 +127,7 @@ def test_memory_planner_drives_engine():
         max_batch=4, m_qslots=min(plan.M, 4), n_max=3, window=4,
         compress=CompressOptions(window=4), max_model_len=128,
         prefill_rows=2, prefill_len=32))
-    r = eng.submit([1, 2, 3], 30)
+    r = submit(eng, [1, 2, 3], 30)
     done = eng.run(max_steps=300)
     assert len(done[r].output) == 30
 

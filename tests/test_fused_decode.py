@@ -17,6 +17,7 @@ from repro.core.engine import EngineOptions, ZipageEngine, \
     _fused_chunk_sizes
 from repro.core.sampling import SamplingParams
 from repro.models import lm
+from engine_utils import submit
 
 CFG = dataclasses.replace(get_config("tiny-lm"), dtype="float32")
 PARAMS = lm.init(CFG, jax.random.key(0))
@@ -78,7 +79,7 @@ def test_fused_matches_naive_reference_greedy():
         return toks[len(prompt):]
 
     eng = make_engine(n_max=4, decode_steps=8)
-    rids = [eng.submit(p, 8) for p in PROMPTS]
+    rids = [submit(eng, p, 8) for p in PROMPTS]
     done = eng.run(max_steps=200)
     for rid, p in zip(rids, PROMPTS):
         assert done[rid].output == ref_generate(p, 8)

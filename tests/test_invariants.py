@@ -13,6 +13,7 @@ from repro.core.compression import CompressOptions
 from repro.core.engine import EngineOptions, ZipageEngine
 from repro.core.request import State
 from repro.models import lm
+from engine_utils import submit
 
 CFG = dataclasses.replace(get_config("tiny-lm"), dtype="float32")
 PARAMS = lm.init(CFG, jax.random.key(0))
@@ -33,7 +34,7 @@ def make_engine(**kw):
 def running_engine(steps=3, **kw):
     eng = make_engine(**kw)
     for p in PROMPTS:
-        eng.submit(p, 24)
+        submit(eng, p, 24)
     for _ in range(steps):
         eng.step()
     assert eng.running, "fixture expects live requests"
@@ -47,7 +48,7 @@ def running_engine(steps=3, **kw):
 def test_healthy_run_audits_clean_every_step():
     eng = make_engine(n_max=3, m_qslots=4)
     for p in PROMPTS:
-        eng.submit(p, 30)
+        submit(eng, p, 30)
     while eng.scheduler.has_work():
         eng.step()
         assert invariants.audit_engine(eng) == []
@@ -59,7 +60,7 @@ def test_healthy_swap_run_audits_clean():
                       prefix_caching=False, preemption_mode="swap",
                       swap_space_blocks=16)
     for p in PROMPTS:
-        eng.submit(p, 24)
+        submit(eng, p, 24)
     while eng.scheduler.has_work():
         eng.step()
         assert invariants.audit_engine(eng) == []
@@ -144,7 +145,7 @@ def test_wrong_state_in_queue_is_detected():
 
 def test_waiting_request_holding_blocks_is_detected():
     eng = make_engine()
-    rid = eng.submit([1, 2, 3], 8)
+    rid = submit(eng, [1, 2, 3], 8)
     w = next(r for r in eng.waiting if r.rid == rid)
     w.blocks = [0, 1]                          # waiting must hold nothing
     msgs = invariants.audit_engine(eng)
@@ -290,7 +291,7 @@ def test_step_hook_quiet_when_disarmed(monkeypatch):
 
 def test_restore_clears_qwin_shadows():
     eng = make_engine(n_max=3, m_qslots=4)
-    rids = [eng.submit(p, 24) for p in PROMPTS]
+    rids = [submit(eng, p, 24) for p in PROMPTS]
     for _ in range(5):
         eng.step()
     assert invariants.audit_engine(eng) == []  # may arm shadows

@@ -19,6 +19,7 @@ from repro.core.request import Request
 from repro.core.scheduler import (POLICIES, Scheduler, SchedulerParams,
                                   make_policy)
 from repro.models import lm
+from engine_utils import submit
 
 CFG = dataclasses.replace(get_config("tiny-lm"), dtype="float32")
 PARAMS = lm.init(CFG, jax.random.key(0))
@@ -189,10 +190,10 @@ def test_multi_turn_reuse_beyond_prompt():
     stream + new user tokens) hits past the original prompt boundary."""
     eng = make_engine(n_max=6)                  # 24-token cap: no compress
     prompt = list(range(1, 11))                 # 10 tokens
-    r1 = eng.submit(prompt, 6)
+    r1 = submit(eng, prompt, 6)
     req1 = run_to_finish(eng, r1)
     stream = prompt + req1.output               # 16 tokens
-    r2 = eng.submit(stream + [77, 78], 6)
+    r2 = submit(eng, stream + [77, 78], 6)
     req2 = run_to_finish(eng, r2)
     # seq 15 entries cached at finish => 3 full blocks = 12 tokens, past
     # the 10-token prompt
@@ -208,9 +209,9 @@ def test_hit_and_miss_streams_bit_identical():
     continuation is bit-identical to the cold run of the same prompt."""
     eng = make_engine(n_max=6)
     p = list(range(2, 10))                      # 8 tokens, 2 full blocks
-    r1 = eng.submit(p, 8)
+    r1 = submit(eng, p, 8)
     cold = run_to_finish(eng, r1).output
-    r2 = eng.submit(p, 8)
+    r2 = submit(eng, p, 8)
     req2 = run_to_finish(eng, r2)
     assert req2.n_cached == 4, "full-prompt hit must leave one real chunk"
     assert req2.output == cold == ref_generate(p, 8)
@@ -231,9 +232,9 @@ def test_radix_and_flat_streams_identical(n_max):
     policies = ("flat", "radix") if n_max == 6 else ("radix",)
     for pol in policies:
         eng = make_engine(n_max=n_max, m_qslots=4, prefix_cache_policy=pol)
-        r1 = eng.submit(shared + [30], 10)
+        r1 = submit(eng, shared + [30], 10)
         run_to_finish(eng, r1)
-        rids = [eng.submit(shared + [40 + i], 10) for i in range(2)]
+        rids = [submit(eng, shared + [40 + i], 10) for i in range(2)]
         eng.run(max_steps=400)
         outs[pol] = [eng.finished[r].output for r in rids]
         assert all(eng.finished[r].n_cached >= 12 for r in rids)
@@ -243,9 +244,9 @@ def test_radix_and_flat_streams_identical(n_max):
         assert outs["radix"] == ref and outs["flat"] == ref
     else:
         miss = make_engine(n_max=n_max, m_qslots=4, prefix_caching=False)
-        r1 = miss.submit(shared + [30], 10)
+        r1 = submit(miss, shared + [30], 10)
         run_to_finish(miss, r1)
-        rids = [miss.submit(shared + [40 + i], 10) for i in range(2)]
+        rids = [submit(miss, shared + [40 + i], 10) for i in range(2)]
         miss.run(max_steps=400)
         assert outs["radix"] == [miss.finished[r].output for r in rids]
 
@@ -256,17 +257,17 @@ def test_cached_prefix_survives_compression():
     the raw originals in the cache instead of condensing them in place."""
     eng = make_engine(n_max=3, m_qslots=4)
     shared = list(range(1, 13))
-    r1 = eng.submit(shared + [30], 25)
+    r1 = submit(eng, shared + [30], 25)
     run_to_finish(eng, r1)
     assert eng.finished[r1].n_compressions > 0
-    r2 = eng.submit(shared + [40], 8)
+    r2 = submit(eng, shared + [40], 8)
     req2 = run_to_finish(eng, r2)
     assert req2.n_cached >= 12
     assert audit_engine(eng) == []
     # the hit must be invisible in the tokens: same stream as a no-cache
     # run of the same request under the same compression config
     miss = make_engine(n_max=3, m_qslots=4, prefix_caching=False)
-    rm = miss.submit(shared + [40], 8)
+    rm = submit(miss, shared + [40], 8)
     assert req2.output == run_to_finish(miss, rm).output
 
 
@@ -278,12 +279,12 @@ def test_compressed_segment_adoption_end_to_end():
     16 tokens of history for 8 KV entries — and decodes to completion."""
     eng = make_engine(n_max=3, m_qslots=4, cache_compressed_prefixes=True)
     prefix = list(range(1, 17))                 # exactly 4 full blocks
-    r1 = eng.submit(prefix, 10)
+    r1 = submit(eng, prefix, 10)
     run_to_finish(eng, r1)
     assert eng.bm.segments, "prompt-pure compression should cache a segment"
     eng.bm.invalidate_blocks(list(eng.bm.block_hash))
     eng.bm.check_invariants()
-    r2 = eng.submit(prefix + [60, 61, 62], 8)
+    r2 = submit(eng, prefix + [60, 61, 62], 8)
     req2 = run_to_finish(eng, r2)
     k = eng.scheduler.p.budget_blocks * eng.opts.block_size
     assert req2.pos_gap == 16 - k

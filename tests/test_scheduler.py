@@ -29,6 +29,7 @@ from repro.core.scheduler import (POLICIES, PrefillChunk, Scheduler,
 from repro.models import lm
 
 from _legacy_engine import LegacyZipageEngine
+from engine_utils import submit
 
 CFG = dataclasses.replace(get_config("tiny-lm"), dtype="float32")
 PARAMS = lm.init(CFG, jax.random.key(0))
@@ -277,7 +278,7 @@ def test_token_budget_never_exceeded_and_exact():
                       max_model_len=128)
     prompts = [list(range(1, 41)), list(range(3, 40)),
                list(range(5, 35)), [7, 8, 9]]
-    rids = [eng.submit(p, 8) for p in prompts]
+    rids = [submit(eng, p, 8) for p in prompts]
     done = eng.run(max_steps=400)
     for m in eng.metrics:
         assert m["n_scheduled_tokens"] <= budget, m
@@ -292,7 +293,7 @@ def test_token_budget_never_exceeded_and_exact():
 def test_max_prefill_chunk_caps_per_request_chunks():
     eng = make_engine(n_max=None, token_budget=24, max_prefill_chunk=8,
                       prefill_len=32, max_model_len=128)
-    rid = eng.submit(list(range(1, 41)), 4)
+    rid = submit(eng, list(range(1, 41)), 4)
     done = eng.run(max_steps=100)
     assert len(done[rid].output) == 4
     # 40-token prompt at <=8 tokens/step => at least 5 prefill steps
@@ -319,8 +320,8 @@ def test_priority_policy_admits_high_priority_first():
 
 def test_srpt_policy_prefers_short_requests():
     eng = make_engine(max_batch=1, m_qslots=1, policy="srpt")
-    long_rid = eng.submit([1, 2, 3], 40)
-    short_rid = eng.submit([4, 5, 6], 4)
+    long_rid = submit(eng, [1, 2, 3], 40)
+    short_rid = submit(eng, [4, 5, 6], 4)
     eng.step()
     assert [r.rid for r in eng.running] == [short_rid]
     done = eng.run(max_steps=400)
@@ -397,7 +398,7 @@ def test_fcfs_parity_with_legacy_engine():
     old = LegacyZipageEngine(CFG, PARAMS, EngineOptions(**kw))
     new = ZipageEngine(CFG, PARAMS, EngineOptions(**kw))
     rids_old = [old.submit(p, o) for p, o in reqs]
-    rids_new = [new.submit(p, o) for p, o in reqs]
+    rids_new = [submit(new, p, o) for p, o in reqs]
     assert rids_old == rids_new
     for _ in range(2000):
         if not (old.waiting or old.running) \

@@ -370,7 +370,7 @@ def test_facade_surfaces_swap_telemetry():
                preemption_mode="swap", swap_space_blocks=24)
     outs = z.generate(PROMPTS, [ApiSamplingParams(max_new_tokens=24)] * 4,
                       max_steps=2000)
-    assert all(o.n_tokens == 24 for o in outs)
+    assert all(o.usage.completion_tokens == 24 for o in outs)
     stats = z.scheduler_stats
     for key in ("preemption_mode", "n_swapped_out", "n_swapped_in",
                 "n_swapped", "swap_bytes", "swap_util"):

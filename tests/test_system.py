@@ -12,6 +12,7 @@ from repro.configs import get_config
 from repro.core.compression import CompressOptions
 from repro.core.engine import EngineOptions, ZipageEngine
 from repro.models import lm
+from engine_utils import submit
 from repro.training import checkpoint as ckpt
 from repro.training import optimizer as opt
 from repro.training.data import DataConfig, batch_at
@@ -48,7 +49,7 @@ def test_train_checkpoint_serve_roundtrip(tmp_path):
         window=4, compress=CompressOptions(window=4), max_model_len=128,
         prefill_rows=2, prefill_len=32, temperature=0.0))
     prompts = [[1, 2, 3], [7, 8, 9, 10]]
-    rids = [eng.submit(p, 12) for p in prompts]       # short: no compression
+    rids = [submit(eng, p, 12) for p in prompts]       # short: no compression
     done = eng.run(max_steps=200)
     for rid, p in zip(rids, prompts):
         toks = list(p)

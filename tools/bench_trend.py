@@ -20,6 +20,14 @@ reasoning eval — docs/EVAL.md) and ``bench-quality-smoke.json``
 (``zipage-bench-quality/v1``, top-1 agreement of the scoring ablations);
 both land in the reasoning-quality trajectory table.
 
+``bench-serving-smoke.json`` (``zipage-bench-serving/v1``,
+benchmarks/bench_serving.py — Poisson arrivals through the in-process
+ASGI serving tier, docs/SERVING.md) lands in its own latency table and
+adds two gates on the newest vs previous serving point: sustained tok/s
+may not drop more than ``--max-regression`` below the previous point,
+and p99 TTFT may not grow more than ``--max-ttft-growth`` (default 1.0,
+i.e. 2x — client-visible latency on a shared CI box is noisy) above it.
+
 Output: a markdown trajectory table per benchmark kind. Exit status: 1 if
 the newest concurrency point's zipage decode throughput (``tps``) — or,
 once oversubscribed points exist (schema v3), the swap-mode decode
@@ -45,6 +53,7 @@ KERNELS_SCHEMAS = ("zipage-bench-kernels/v1",
                    "zipage-bench-kernels/v2")
 EVAL_SCHEMAS = ("zipage-eval/v1",)
 QUALITY_SCHEMAS = ("zipage-bench-quality/v1",)
+SERVING_SCHEMAS = ("zipage-bench-serving/v1",)
 
 #: (result name, human label) series the regression gate watches; a
 #: series only gates between consecutive points that both report it, so
@@ -69,9 +78,11 @@ KERNEL_SPEEDUP_SERIES = (
 
 
 def load_points(paths):
-    """Split the input files into (concurrency, kernels, evals, quality)
-    point lists, keeping argument order (= chronological order)."""
-    concurrency, kernels, evals, quality, skipped = [], [], [], [], []
+    """Split the input files into (concurrency, kernels, evals, quality,
+    serving) point lists, keeping argument order (= chronological
+    order)."""
+    concurrency, kernels, evals = [], [], []
+    quality, serving, skipped = [], [], []
     for p in paths:
         path = Path(p)
         try:
@@ -89,9 +100,11 @@ def load_points(paths):
             evals.append(point)
         elif schema in QUALITY_SCHEMAS:
             quality.append(point)
+        elif schema in SERVING_SCHEMAS:
+            serving.append(point)
         else:
             skipped.append(f"{p}: unknown schema {schema!r}")
-    return concurrency, kernels, evals, quality, skipped
+    return concurrency, kernels, evals, quality, serving, skipped
 
 
 def _result(data, name):
@@ -212,6 +225,59 @@ def _kernel_speedup(data, dense_name, ragged_name, backend):
     if not dense or not ragged:
         return None
     return dense / ragged
+
+
+def serving_table(points):
+    """Client-visible serving latency trajectory
+    (``zipage-bench-serving/v1``, benchmarks/bench_serving.py)."""
+    lines = [
+        "## Serving latency trajectory (bench_serving, in-process ASGI)",
+        "",
+        "| point | tok/s | ttft p50 ms | ttft p99 ms | itl p50 ms "
+        "| itl p99 ms | ok/total | rejected | wall s |",
+        "|---|---|---|---|---|---|---|---|---|",
+    ]
+    for pt in points:
+        r = _result(pt["data"], "serving_poisson")
+        fmt = lambda v: "-" if v is None else f"{v}"  # noqa: E731
+        lines.append(
+            f"| {pt['label']} | {fmt(r.get('tps'))} "
+            f"| {fmt(r.get('ttft_p50_ms'))} | {fmt(r.get('ttft_p99_ms'))} "
+            f"| {fmt(r.get('itl_p50_ms'))} | {fmt(r.get('itl_p99_ms'))} "
+            f"| {fmt(r.get('n_ok'))}/{fmt(r.get('n_requests'))} "
+            f"| {fmt(r.get('n_rejected'))} | {fmt(r.get('wall_s'))} |")
+    return lines
+
+
+def check_serving(points, max_regression, max_ttft_growth):
+    """(ok, message) for the newest vs previous serving point: sustained
+    tok/s gates like decode throughput (floor ``(1-max_regression)*prev``)
+    and p99 TTFT gates as a ceiling (``(1+max_ttft_growth)*prev`` — the
+    wide default absorbs shared-CI wall-clock noise while still catching
+    an event-loop or fan-out stall that multiplies first-token latency)."""
+    ok, msgs = True, []
+    rows = [(pt["label"], _result(pt["data"], "serving_poisson"))
+            for pt in points]
+    tps = [(lbl, r.get("tps")) for lbl, r in rows if r.get("tps")]
+    if len(tps) < 2:
+        msgs.append("serving tok/s: <2 points, trivially OK")
+    else:
+        (prev_label, prev), (cur_label, cur) = tps[-2], tps[-1]
+        floor = (1.0 - max_regression) * prev
+        msgs.append(f"serving tok/s: {cur_label} {cur} vs {prev_label} "
+                    f"{prev} (floor {floor:.2f})")
+        ok = ok and cur >= floor
+    ttft = [(lbl, r.get("ttft_p99_ms")) for lbl, r in rows
+            if r.get("ttft_p99_ms")]
+    if len(ttft) < 2:
+        msgs.append("p99 TTFT: <2 points, trivially OK")
+    else:
+        (prev_label, prev), (cur_label, cur) = ttft[-2], ttft[-1]
+        ceiling = (1.0 + max_ttft_growth) * prev
+        msgs.append(f"p99 TTFT: {cur_label} {cur}ms vs {prev_label} "
+                    f"{prev}ms (ceiling {ceiling:.1f}ms)")
+        ok = ok and cur <= ceiling
+    return ok, "serving gate: " + "; ".join(msgs)
 
 
 def quality_table(eval_points, quality_points):
@@ -337,9 +403,14 @@ def main(argv=None):
                          "(full-KV or n4 budget) drops more than this "
                          "many absolute points below the previous one "
                          "(default: 0.02)")
+    ap.add_argument("--max-ttft-growth", type=float, default=1.0,
+                    help="fail when the newest serving point's p99 TTFT "
+                         "grows more than this fraction above the "
+                         "previous point's (default: 1.0, i.e. 2x)")
     args = ap.parse_args(argv)
 
-    concurrency, kernels, evals, quality, skipped = load_points(args.files)
+    (concurrency, kernels, evals, quality, serving,
+     skipped) = load_points(args.files)
     lines = ["# Bench trajectory", ""]
     if concurrency:
         lines += concurrency_table(concurrency) + [""]
@@ -348,13 +419,18 @@ def main(argv=None):
             lines += pfx + [""]
     if kernels:
         lines += kernels_table(kernels) + [""]
+    if serving:
+        lines += serving_table(serving) + [""]
     qt = quality_table(evals, quality)
     if qt:
         lines += qt + [""]
     ok, gate_msg = check_regression(concurrency, args.max_regression)
     acc_ok, acc_msg = check_accuracy(evals, args.max_accuracy_drop)
     kern_ok, kern_msg = check_kernels(kernels, args.max_regression)
-    lines += [f"_{gate_msg}_", "", f"_{acc_msg}_", "", f"_{kern_msg}_", ""]
+    srv_ok, srv_msg = check_serving(serving, args.max_regression,
+                                    args.max_ttft_growth)
+    lines += [f"_{gate_msg}_", "", f"_{acc_msg}_", "", f"_{kern_msg}_",
+              "", f"_{srv_msg}_", ""]
     text = "\n".join(lines)
     if args.out:
         Path(args.out).write_text(text)
@@ -363,17 +439,18 @@ def main(argv=None):
         print(text)
     for s in skipped:
         print(f"bench-trend: skipped {s}", file=sys.stderr)
-    if not concurrency and not kernels and not evals and not quality:
+    if not any((concurrency, kernels, evals, quality, serving)):
         print("bench-trend: no recognised bench JSONs", file=sys.stderr)
         return 2
-    if not ok or not acc_ok or not kern_ok:
+    if not ok or not acc_ok or not kern_ok or not srv_ok:
         failed = "; ".join(m for okk, m in
                            ((ok, gate_msg), (acc_ok, acc_msg),
-                            (kern_ok, kern_msg)) if not okk)
+                            (kern_ok, kern_msg), (srv_ok, srv_msg))
+                           if not okk)
         print(f"bench-trend: FAIL — {failed}", file=sys.stderr)
         return 1
-    print(f"bench-trend: OK — {gate_msg}; {acc_msg}; {kern_msg}",
-          file=sys.stderr)
+    print(f"bench-trend: OK — {gate_msg}; {acc_msg}; {kern_msg}; "
+          f"{srv_msg}", file=sys.stderr)
     return 0
 
 
